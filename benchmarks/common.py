@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: timing, CSV output, model prep."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.local_search import ScheduleDatabase
+from repro.core.planner import plan
+from repro.engine import compile_model
+from repro.models.cnn import build
+from repro.nn.init import init_params
+
+_DB = ScheduleDatabase()    # shared across benchmarks in one process
+
+
+def time_fn(fn: Callable, repeats: int = 3) -> float:
+    """Seconds per call after one warmup (also the compile trigger)."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def prepare(name: str, mode: str, batch: int = 1, db=None, **plan_kw):
+    """(compiled model, input array, plan) for one zoo network."""
+    g, shapes = build(name, batch=batch)
+    params = init_params(g, shapes, seed=0)
+    p = plan(g, shapes, mode=mode, db=db or _DB, **plan_kw)
+    m = compile_model(p, params)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=shapes["data"]).astype(np.float32))
+    return m, x, p
+
+
+def emit(rows: List[Tuple]) -> None:
+    """CSV per harness convention: name,us_per_call,derived."""
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,62 @@
+"""Paper Figure 4: parallel-scaling study.
+
+NeoCPU's figure compares thread-pool vs OpenMP scalability on one CPU.
+On the TPU target the analogue is scaling efficiency across chips: mesh
+parallelism replaces the thread pool, and the cost of growing the "pool"
+is the collective roofline term instead of fork-join overhead.  We sweep
+chip counts, derive throughput from the three roofline terms for a fixed
+per-chip workload (weak scaling, NeoCPU's images/sec framing), and report
+efficiency vs the ideal linear line.  The collective term is computed for
+ring reductions over the DP axis (gradient bytes = active params).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.configs import ARCHS
+
+CHIPS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def throughput(cfg, n_chips: int, per_chip_batch: int, seq: int):
+    """Weak-scaling tokens/sec: compute+memory fixed per chip; the ring
+    all-reduce of the gradients adds 2 x bytes x (n-1)/n over ICI."""
+    n_active = cfg.active_param_count()
+    tokens = per_chip_batch * seq
+    flops = 6.0 * n_active * tokens
+    compute_s = flops / PEAK_FLOPS
+    # params + grads + opt moments traffic, plus activations ~ 2 x flops/AI
+    mem_bytes = 2 * n_active * 2 + 12 * n_active + tokens * cfg.d_model * 8
+    memory_s = mem_bytes / HBM_BW
+    grad_bytes = 2 * n_active
+    coll_s = 0.0 if n_chips == 1 else \
+        2 * grad_bytes * (n_chips - 1) / n_chips / ICI_BW
+    step = max(compute_s, memory_s) + coll_s
+    return n_chips * tokens / step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--per-chip-batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=4096)
+    args = ap.parse_args(argv)
+    cfg = ARCHS[args.arch]
+    rows = []
+    base = throughput(cfg, 1, args.per_chip_batch, args.seq)
+    for n in CHIPS:
+        tp = throughput(cfg, n, args.per_chip_batch, args.seq)
+        eff = tp / (base * n)
+        rows.append((f"figure4/{cfg.name}/chips={n}",
+                     1e6 * n * args.per_chip_batch * args.seq / tp,
+                     f"tokens_per_s={tp:.3e};efficiency={eff:.3f}"))
+        print(f"# chips={n:4d} tokens/s={tp:.3e} efficiency={eff:.3f}",
+              flush=True)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

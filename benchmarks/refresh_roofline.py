@@ -1,0 +1,50 @@
+"""Recompute derived roofline fields in existing dry-run JSONs.
+
+The raw measurements (jaxpr FLOPs/bytes, collective bytes, memory analysis)
+are stable; the derived report (ideal step, roofline fraction, MODEL_BYTES)
+evolves with the methodology.  This refreshes records in place without
+re-compiling 64 cells.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis import roofline as rl
+from repro.configs import ARCHS, SHAPES
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def refresh(path: Path) -> bool:
+    rec = json.loads(path.read_text())
+    if rec.get("status") != "ok":
+        return False
+    old = rec["roofline"]
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    report = rl.RooflineReport(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=old["chips"],
+        flops_per_device=old["flops_per_device"],
+        bytes_per_device=old["bytes_per_device"],
+        collective_bytes_per_device=old["collective_bytes_per_device"],
+        collectives=old["collectives"],
+        model_flops_total=rl.model_flops(cfg, shape.kind, shape.batch,
+                                         shape.seq),
+        ca_flops_per_device=old.get("ca_flops_per_device", 0.0),
+        ca_bytes_per_device=old.get("ca_bytes_per_device", 0.0),
+        model_bytes_total=rl.model_bytes(cfg, shape.kind, shape.batch,
+                                         shape.seq))
+    rec["roofline"] = report.to_dict()
+    path.write_text(json.dumps(rec, indent=1))
+    return True
+
+
+def main():
+    n = sum(refresh(p) for p in sorted(DRYRUN_DIR.glob("*.json")))
+    print(f"refreshed {n} records")
+
+
+if __name__ == "__main__":
+    main()

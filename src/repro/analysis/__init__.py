@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.analysis.roofline import (RooflineReport, model_flops,
+                                     parse_collective_bytes)
+
+__all__ = ["RooflineReport", "model_flops", "parse_collective_bytes"]

@@ -1,0 +1,4 @@
+"""Atomic, async, reshardable checkpointing."""
+from repro.checkpoint.store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

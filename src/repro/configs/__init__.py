@@ -1,0 +1,7 @@
+"""Selectable configs: the 10 assigned archs (+ the paper's CNN zoo lives
+in repro.models.cnn).  ``--arch <id>`` resolves through ARCHS."""
+from repro.configs.archs import ARCHS, get, reduced
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, input_specs
+
+__all__ = ["ARCHS", "get", "reduced", "SHAPES", "ShapeSpec",
+           "applicable", "input_specs"]

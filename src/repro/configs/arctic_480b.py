@@ -1,0 +1,5 @@
+"""Config for --arch arctic-480b (see archs.py for the table)."""
+from repro.configs.archs import ARCHS, reduced
+
+CONFIG = ARCHS["arctic-480b"]
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for --arch kimi-k2-1t-a32b (see archs.py for the table)."""
+from repro.configs.archs import ARCHS, reduced
+
+CONFIG = ARCHS["kimi-k2-1t-a32b"]
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for --arch mamba2-130m (see archs.py for the table)."""
+from repro.configs.archs import ARCHS, reduced
+
+CONFIG = ARCHS["mamba2-130m"]
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for --arch recurrentgemma-2b (see archs.py for the table)."""
+from repro.configs.archs import ARCHS, reduced
+
+CONFIG = ARCHS["recurrentgemma-2b"]
+REDUCED = reduced(CONFIG)

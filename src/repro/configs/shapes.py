@@ -1,0 +1,86 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs per (arch, shape).
+
+Shapes are seq_len x global_batch.  ``decode_*`` / ``long_*`` lower
+``serve_step`` (one token against a seq_len cache), NOT ``train_step``.
+``long_500k`` needs sub-quadratic attention: run for SSM/hybrid, skip for
+full-attention archs (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import model
+from repro.models.lm.config import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str       # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def applicable(cfg: LMConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped).  long_500k only for sub-quadratic decode
+    state; every assigned arch has a decoder, so decode shapes always run."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return False, ("full-attention KV decode at 524k is quadratic-cost "
+                       "prefill / O(S) KV per token; skipped per assignment "
+                       "(sub-quadratic archs only)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    b, s = shape.batch, shape.seq
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            s_txt = s - cfg.n_img_tokens
+            return {"tokens": _sds((b, s_txt), i32),
+                    "targets": _sds((b, s_txt), i32),
+                    "img_embeds": _sds((b, cfg.n_img_tokens, cfg.d_model),
+                                       dt)}
+        if cfg.family == "encdec":
+            return {"tokens": _sds((b, s), i32),
+                    "targets": _sds((b, s), i32),
+                    "frames": _sds((b, cfg.enc_positions, cfg.d_model), dt)}
+        return {"tokens": _sds((b, s), i32), "targets": _sds((b, s), i32)}
+
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), i32)}
+        if cfg.family == "vlm":
+            out["tokens"] = _sds((b, s - cfg.n_img_tokens), i32)
+            out["img_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, cfg.enc_positions, cfg.d_model), dt)
+        return out
+
+    # decode: one new token against a cache of length seq
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, cfg, b, s))
+    return {"token": _sds((b, 1), i32), "cache": cache,
+            "pos": _sds((), i32)}

@@ -1,0 +1,5 @@
+"""Config for --arch whisper-tiny (see archs.py for the table)."""
+from repro.configs.archs import ARCHS, reduced
+
+CONFIG = ARCHS["whisper-tiny"]
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for --arch yi-9b (see archs.py for the table)."""
+from repro.configs.archs import ARCHS, reduced
+
+CONFIG = ARCHS["yi-9b"]
+REDUCED = reduced(CONFIG)

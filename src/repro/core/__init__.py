@@ -1,0 +1,13 @@
+"""NeoCPU's contribution: layout-planned graph optimization.
+
+graph / layout / schedule — the IR; cost — the v5e roofline model;
+local_search / global_search / pbqp — the two-stage scheme search (§3.3);
+transform_elim — the §3.2 pass; planner — the assembled pipeline.
+"""
+from repro.core.graph import Graph
+from repro.core.layout import Layout, LayoutCategory, NCHW, NHWC, nchwc
+from repro.core.planner import Plan, plan
+from repro.core.schedule import ConvSchedule, ConvWorkload
+
+__all__ = ["Graph", "Layout", "LayoutCategory", "NCHW", "NHWC", "nchwc",
+           "Plan", "plan", "ConvSchedule", "ConvWorkload"]

@@ -1,0 +1,157 @@
+"""Roofline cost model (TPU v5e) for schedules, transforms, and collectives.
+
+NeoCPU's local search *measures* wall time on the target CPU.  This container
+has no TPU, so the measured signal is replaced (optionally augmented — see
+``local_search.measured_runner``) by an analytical roofline model built from
+the v5e datasheet numbers the roofline analysis also uses:
+
+    peak bf16 compute : 197 TFLOP/s / chip   (fp32 via MXU ≈ half)
+    HBM bandwidth     : 819 GB/s / chip
+    ICI link bandwidth: ~50 GB/s / link (per direction)
+    VMEM              : ~16 MiB / core
+
+The model is intentionally coarse — it only has to *rank* schedules the way a
+real measurement would, and its three terms are exactly the roofline terms
+reported in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+from repro.core.layout import Layout, transform_bytes
+from repro.core.schedule import ConvSchedule, ConvWorkload
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_FP32 = 98.5e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    compute_s: float
+    memory_s: float
+    collective_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        # compute and memory overlap on TPU (async copies); collectives may
+        # overlap too but we charge them serially as the conservative bound.
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+# ---------------------------------------------------------------------------
+# Conv schedule cost (feeds the local search)
+# ---------------------------------------------------------------------------
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Fraction of MXU work that is useful for an (m,k)@(k,n) micro-GEMM.
+    Dims pad to (sublane, lane) = (8, 128) tiles; K pads to 8."""
+    um = m / _round_up(m, SUBLANE)
+    uk = k / _round_up(k, SUBLANE)
+    un = n / _round_up(n, MXU_DIM)
+    return um * uk * un
+
+
+def conv_vmem_bytes(wl: ConvWorkload, s: ConvSchedule) -> int:
+    """Working set per grid step of the Pallas kernel (see conv2d_nchwc.py):
+    one (H_pad, W_pad, ic_bn) input slab, the (kh, kw, ic_bn, oc_bn) weight
+    block, and the (oh_bn, OW, oc_bn) output block (fp32 accumulator)."""
+    oh, ow = wl.out_hw
+    h_pad = wl.height + 2 * wl.pad
+    w_pad = wl.width + 2 * wl.pw
+    b = wl.dtype_bytes
+    inp = h_pad * w_pad * s.ic_bn * b
+    ker = wl.kh * wl.kw * s.ic_bn * s.oc_bn * b
+    outp = s.oh_bn * ow * s.oc_bn * 4  # fp32 accum
+    return inp + ker + outp
+
+
+def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
+                       dtype_peak: float = PEAK_FLOPS_FP32) -> CostBreakdown:
+    """Roofline estimate for one CONV executed under schedule ``s``."""
+    oh, ow = wl.out_hw
+    cin = wl.in_channels // wl.groups
+    util = mxu_utilization(s.ow_bn, s.ic_bn, s.oc_bn)
+    # unrolling the (kh, kw) loops trims scalar-loop overhead; model it as a
+    # small utilization bonus that decays for large kernels (paper: "in some
+    # scenarios unrolling may increase the performance").
+    if s.unroll_ker:
+        util = min(1.0, util * (1.0 + 0.05 / max(1, wl.kh * wl.kw / 9)))
+    compute_s = wl.flops / (dtype_peak * max(util, 1e-3))
+
+    b = wl.dtype_bytes
+    # HBM traffic under the kernel's loop nest (n, oc_chunk, oh_blk, ic_chunk):
+    # the input slab is re-read once per output-channel chunk; weights are
+    # re-read once per batch element; the output is written once (+1 read per
+    # extra input-channel pass for accumulation).
+    oc_chunks = wl.out_channels // s.oc_bn
+    ic_chunks = cin // s.ic_bn
+    input_bytes = wl.batch * cin * wl.height * wl.width * b * oc_chunks
+    weight_bytes = (wl.out_channels * cin * wl.kh * wl.kw * b) * wl.batch
+    output_bytes = wl.batch * wl.out_channels * oh * ow * b * (
+        1 + max(0, ic_chunks - 1))
+    memory_s = (input_bytes + weight_bytes + output_bytes) / HBM_BW
+
+    # schedules that spill VMEM pay a heavy penalty (they would thrash HBM)
+    if conv_vmem_bytes(wl, s) > VMEM_BYTES:
+        memory_s *= 8.0
+    return CostBreakdown(compute_s=compute_s, memory_s=memory_s)
+
+
+# ---------------------------------------------------------------------------
+# Layout-transform cost (graph-edge cost in the global search)
+# ---------------------------------------------------------------------------
+
+def transform_cost_s(nchw_shape: Tuple[int, ...], src: Layout, dst: Layout,
+                     dtype_bytes: int = 4) -> float:
+    return transform_bytes(nchw_shape, src, dst, dtype_bytes) / HBM_BW
+
+
+# ---------------------------------------------------------------------------
+# Collective costs (sharding-as-layout tier; also used by the roofline report)
+# ---------------------------------------------------------------------------
+
+def all_gather_s(bytes_per_device: int, axis_size: int,
+                 links: int = 1) -> float:
+    """Ring all-gather: each device sends (axis-1)/axis of the gathered array."""
+    if axis_size <= 1:
+        return 0.0
+    return bytes_per_device * (axis_size - 1) / (ICI_BW_PER_LINK * links)
+
+
+def reduce_scatter_s(bytes_per_device: int, axis_size: int,
+                     links: int = 1) -> float:
+    if axis_size <= 1:
+        return 0.0
+    return bytes_per_device * (axis_size - 1) / axis_size / (
+        ICI_BW_PER_LINK * links)
+
+
+def all_reduce_s(bytes_per_device: int, axis_size: int, links: int = 1) -> float:
+    # ring all-reduce = reduce-scatter + all-gather
+    return (reduce_scatter_s(bytes_per_device, axis_size, links)
+            + all_gather_s(bytes_per_device // max(1, axis_size), axis_size,
+                           links))
+
+
+def all_to_all_s(bytes_per_device: int, axis_size: int, links: int = 1) -> float:
+    if axis_size <= 1:
+        return 0.0
+    return bytes_per_device * (axis_size - 1) / axis_size / (
+        ICI_BW_PER_LINK * links)

@@ -1,0 +1,164 @@
+"""Local search: per-workload schedule selection (NeoCPU §3.3.1).
+
+The paper walks the candidate space per CONV workload, measures every
+combination, and keeps a ranked list; results are memoized in a database
+keyed by the workload (feature-map + kernel sizes) so the same convolution
+appearing in different models is never searched twice.
+
+We keep that machinery intact.  The *scoring signal* is pluggable:
+
+* ``roofline_runner`` (default) — the v5e analytical cost model from
+  ``core.cost``; deterministic and fast, ranks schedules the way a
+  measurement on the target would.
+* ``measured_runner`` — wall-clock of the jnp template instantiation on the
+  host CPU (the paper's own methodology, usable in this container).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost import CostBreakdown, conv_schedule_cost
+from repro.core.schedule import ConvSchedule, ConvWorkload, candidate_schedules
+
+Runner = Callable[[ConvWorkload, ConvSchedule], float]
+
+
+def roofline_runner(wl: ConvWorkload, s: ConvSchedule) -> float:
+    return conv_schedule_cost(wl, s).total_s
+
+
+def measured_runner(wl: ConvWorkload, s: ConvSchedule, repeats: int = 3) -> float:
+    """Paper §3.3.1 step 4: run multiple times and average to cancel OS noise."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import conv2d_nchwc_jnp
+    from repro.core.layout import kernel_to_kcrs_ck, to_nchwc
+
+    rng = np.random.default_rng(0)
+    cin = wl.in_channels // wl.groups
+    x = jnp.asarray(rng.normal(size=(wl.batch, cin, wl.height, wl.width))
+                    .astype(np.float32))
+    w = jnp.asarray(rng.normal(
+        size=(wl.out_channels, cin, wl.kh, wl.kw)).astype(np.float32))
+    xb = to_nchwc(x, s.ic_bn)
+    wb = kernel_to_kcrs_ck(w, s.ic_bn, s.oc_bn)
+    f = lambda: conv2d_nchwc_jnp(xb, wb, stride=wl.stride, pad=wl.pad)
+    f()  # compile
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedSchedule:
+    schedule: ConvSchedule
+    cost_s: float
+
+
+@dataclasses.dataclass
+class LocalSearchResult:
+    """Ascending-cost list of schedules for one workload (§3.3.1 step 4)."""
+
+    workload: ConvWorkload
+    ranked: List[RankedSchedule]
+
+    @property
+    def best(self) -> ConvSchedule:
+        return self.ranked[0].schedule
+
+    def best_for_layout(self, ic_bn: int, oc_bn: int) -> Optional[RankedSchedule]:
+        """Cheapest schedule constrained to a given (ic_bn, oc_bn) pair —
+        the quantity the global search needs per scheme."""
+        for r in self.ranked:
+            if r.schedule.ic_bn == ic_bn and r.schedule.oc_bn == oc_bn:
+                return r
+        return None
+
+    def layout_costs(self) -> Dict[Tuple[int, int], float]:
+        """(ic_bn, oc_bn) -> best cost; the per-CONV scheme axis of §3.3.2."""
+        out: Dict[Tuple[int, int], float] = {}
+        for r in self.ranked:
+            key = (r.schedule.ic_bn, r.schedule.oc_bn)
+            if key not in out:
+                out[key] = r.cost_s
+        return out
+
+
+def local_search(wl: ConvWorkload, runner: Runner = roofline_runner,
+                 max_candidates: int = 64) -> LocalSearchResult:
+    cands = candidate_schedules(wl, max_candidates=max_candidates)
+    scored = [RankedSchedule(s, runner(wl, s)) for s in cands]
+    scored.sort(key=lambda r: (r.cost_s, r.schedule))
+    return LocalSearchResult(workload=wl, ranked=scored)
+
+
+def guided_local_search(wl: ConvWorkload, top_k: int = 6,
+                        max_candidates: int = 64) -> LocalSearchResult:
+    """The paper's measure-on-target methodology, made affordable: the
+    roofline model prunes the space, wall-clock measurement ranks the
+    survivors.  Used by the --measured benchmarks on this host CPU."""
+    pruned = local_search(wl, roofline_runner, max_candidates)
+    short = [r.schedule for r in pruned.ranked[:top_k]]
+    scored = [RankedSchedule(s, measured_runner(wl, s)) for s in short]
+    scored.sort(key=lambda r: (r.cost_s, r.schedule))
+    return LocalSearchResult(workload=wl, ranked=scored)
+
+
+# ---------------------------------------------------------------------------
+# Workload-keyed database (§3.3.1: "maintain a database ... to prevent
+# repeating search for the same convolution in different models")
+# ---------------------------------------------------------------------------
+
+def _wl_key(wl: ConvWorkload) -> str:
+    return (f"n{wl.batch}_c{wl.in_channels}_k{wl.out_channels}"
+            f"_h{wl.height}_w{wl.width}_r{wl.kh}s{wl.kw}"
+            f"_st{wl.stride}_p{wl.pad}_g{wl.groups}")
+
+
+class ScheduleDatabase:
+    def __init__(self, path: Optional[Path] = None) -> None:
+        self.path = Path(path) if path else None
+        self._mem: Dict[str, LocalSearchResult] = {}
+        if self.path and self.path.exists():
+            self._load()
+
+    def search(self, wl: ConvWorkload, runner: Runner = roofline_runner,
+               max_candidates: int = 64) -> LocalSearchResult:
+        key = _wl_key(wl)
+        if key not in self._mem:
+            self._mem[key] = local_search(wl, runner, max_candidates)
+            if self.path:
+                self._save()
+        return self._mem[key]
+
+    # -- persistence ---------------------------------------------------------
+    def _save(self) -> None:
+        blob = {}
+        for key, res in self._mem.items():
+            blob[key] = {
+                "workload": dataclasses.asdict(res.workload),
+                "ranked": [
+                    {"schedule": dataclasses.asdict(r.schedule),
+                     "cost_s": r.cost_s} for r in res.ranked],
+            }
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.path.write_text(json.dumps(blob))
+
+    def _load(self) -> None:
+        blob = json.loads(self.path.read_text())
+        for key, rec in blob.items():
+            wl = ConvWorkload(**rec["workload"])
+            ranked = [RankedSchedule(ConvSchedule(**r["schedule"]), r["cost_s"])
+                      for r in rec["ranked"]]
+            self._mem[key] = LocalSearchResult(workload=wl, ranked=ranked)
+
+    def __len__(self) -> int:
+        return len(self._mem)

@@ -1,0 +1,236 @@
+"""End-to-end layout planner: local search -> global search -> rewrite.
+
+This is NeoCPU's pipeline assembled: given a model graph, (1) run the
+§3.3.1 local search per CONV workload (memoized in a ScheduleDatabase),
+(2) build the §3.3.2 scheme problem — one node per CONV with its
+(ic_bn, oc_bn) candidates, edges carrying layout-transform costs along
+data-dependency paths that cross only oblivious/tolerant ops — and solve it
+by DP or PBQP, (3) rewrite the graph with ``eliminate_transforms``.
+
+Four modes reproduce Table 3's ablation ladder:
+
+    "nchw"           row 1 — no blocking (baseline = 1x)
+    "layout"         row 2 — blocked CONVs, transforms around each CONV
+    "transform-elim" row 3 — one uniform block x, transforms eliminated
+    "global-search"  row 4 — per-CONV schemes from the global search
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import global_search
+from repro.core.cost import transform_cost_s
+from repro.core.graph import Graph, MULTI_INPUT_SAME_LAYOUT, Node
+from repro.core.layout import LayoutCategory, candidate_blocks, nchwc
+from repro.core.local_search import (LocalSearchResult, Runner,
+                                     ScheduleDatabase, roofline_runner)
+from repro.core.schedule import ConvSchedule, ConvWorkload
+from repro.core.transform_elim import PlannedGraph, eliminate_transforms
+
+MODES = ("nchw", "layout", "transform-elim", "global-search")
+
+
+def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
+    a = node.attrs
+    n, c, h, w = in_shape
+    return ConvWorkload(
+        batch=n, in_channels=c, out_channels=a["out_channels"],
+        height=h, width=w, kh=a["kh"], kw=a["kw"],
+        stride=a.get("stride", 1), pad=a.get("pad", 0),
+        groups=a.get("groups", 1), pad_w=a.get("pad_w", -1))
+
+
+@dataclasses.dataclass
+class Plan:
+    planned: PlannedGraph
+    mode: str
+    solution: Optional[global_search.SchemeSolution]
+    predicted_conv_s: float
+    predicted_transform_s: float
+
+    @property
+    def predicted_total_s(self) -> float:
+        return self.predicted_conv_s + self.predicted_transform_s
+
+
+# ---------------------------------------------------------------------------
+# Conv-DAG extraction: which CONVs constrain each other's layouts
+# ---------------------------------------------------------------------------
+
+def conv_dependencies(graph: Graph):
+    """Returns (edges, couplings):
+    edges      — list of (conv_u, conv_v, tensor_shape): u's output layout
+                 flows into v through oblivious/tolerant ops only;
+    couplings  — list of (conv_u, conv_w, tensor_shape): u and w feed the
+                 same multi-input node, so their *output* layouts must agree.
+    """
+    # ancestors[t] = set of conv names whose blocked layout reaches tensor t
+    ancestors: Dict[str, frozenset] = {}
+    edges: List[Tuple[str, str, Tuple[int, ...]]] = []
+    couplings: List[Tuple[str, str, Tuple[int, ...]]] = []
+    for node in graph.topo_order():
+        if node.op == "input":
+            ancestors[node.name] = frozenset()
+        elif node.op == "conv2d":
+            feeder = graph.nodes[node.inputs[0]]
+            for a in ancestors[feeder.name]:
+                edges.append((a, node.name, feeder.shape))
+            ancestors[node.name] = frozenset([node.name])
+        elif node.op in MULTI_INPUT_SAME_LAYOUT:
+            sets = [ancestors[i] for i in node.inputs]
+            merged = frozenset().union(*sets)
+            # pairwise coupling across distinct branches
+            for i in range(len(sets)):
+                for j in range(i + 1, len(sets)):
+                    for a in sets[i]:
+                        for b in sets[j]:
+                            if a != b:
+                                couplings.append((a, b, node.shape))
+            ancestors[node.name] = merged
+        elif node.category is LayoutCategory.DEPENDENT:
+            ancestors[node.name] = frozenset()   # layout resets to NCHW
+        else:
+            ancestors[node.name] = ancestors[node.inputs[0]] if node.inputs \
+                else frozenset()
+    return edges, couplings
+
+
+# ---------------------------------------------------------------------------
+# Scheme problem assembly
+# ---------------------------------------------------------------------------
+
+def _scheme_problem(graph: Graph, locals_: Dict[str, LocalSearchResult],
+                    max_pairs: int) -> Tuple[global_search.SchemeProblem,
+                                             Dict[str, List[Tuple[int, int]]]]:
+    convs = [n.name for n in graph.conv_nodes()]
+    pairs: Dict[str, List[Tuple[int, int]]] = {}
+    node_costs: Dict[str, np.ndarray] = {}
+    for name in convs:
+        lc = locals_[name].layout_costs()
+        top = sorted(lc.items(), key=lambda kv: kv[1])[:max_pairs]
+        pairs[name] = [p for p, _ in top]
+        node_costs[name] = np.array([c for _, c in top])
+
+    edge_costs: Dict[Tuple[str, str], np.ndarray] = {}
+    edges, couplings = conv_dependencies(graph)
+    pos = {n.name: i for i, n in enumerate(graph.topo_order())}
+
+    def _accum(u, v, mat):
+        key = (u, v)
+        if key in edge_costs:
+            edge_costs[key] = np.minimum(edge_costs[key], mat)  # same edge
+        else:
+            edge_costs[key] = mat
+
+    for u, v, shape in edges:
+        m = np.zeros((len(pairs[u]), len(pairs[v])))
+        for j, (_, oc_u) in enumerate(pairs[u]):
+            for k, (ic_v, _) in enumerate(pairs[v]):
+                if oc_u != ic_v:
+                    m[j, k] = transform_cost_s(shape, nchwc(oc_u),
+                                               nchwc(ic_v))
+        _accum(u, v, m)
+    for u, w, shape in couplings:
+        a, b = (u, w) if pos[u] < pos[w] else (w, u)
+        m = np.zeros((len(pairs[a]), len(pairs[b])))
+        for j, (_, oc_a) in enumerate(pairs[a]):
+            for k, (_, oc_b) in enumerate(pairs[b]):
+                if oc_a != oc_b:
+                    m[j, k] = transform_cost_s(shape, nchwc(oc_a),
+                                               nchwc(oc_b))
+        _accum(a, b, m)
+
+    topo = [n for n in (x.name for x in graph.topo_order()) if n in set(convs)]
+    prob = global_search.SchemeProblem(node_costs=node_costs,
+                                       edge_costs=edge_costs, topo=topo)
+    return prob, pairs
+
+
+# ---------------------------------------------------------------------------
+# Uniform-x schedule assignment (modes "layout" and "transform-elim")
+# ---------------------------------------------------------------------------
+
+def _uniform_schedules(graph: Graph, locals_: Dict[str, LocalSearchResult],
+                       block: int) -> Dict[str, ConvSchedule]:
+    """ic_bn = oc_bn = the largest factor of the channel count ≤ block —
+    §3.2's constant-x scheme (x=16 in the paper, 128-lane preferred here)."""
+    out: Dict[str, ConvSchedule] = {}
+    for node in graph.conv_nodes():
+        wl = locals_[node.name].workload
+        cin = wl.in_channels // wl.groups
+        ic = max(f for f in candidate_blocks(cin) if f <= block)
+        oc = max(f for f in candidate_blocks(wl.out_channels) if f <= block)
+        best = locals_[node.name].best_for_layout(ic, oc)
+        if best is not None:
+            out[node.name] = best.schedule
+        else:  # pair pruned from candidates: synthesize a legal schedule
+            ref = locals_[node.name].best
+            out[node.name] = ConvSchedule(ic, oc, ref.ow_bn, ref.oh_bn,
+                                          ref.unroll_ker)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plan(): the public entry
+# ---------------------------------------------------------------------------
+
+def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
+         mode: str = "global-search",
+         db: Optional[ScheduleDatabase] = None,
+         runner: Runner = roofline_runner,
+         uniform_block: int = 128,
+         max_pairs: int = 8,
+         dp_state_budget: int = 200_000) -> Plan:
+    # uniform_block is the paper's constant x (§3.2, x=16 = AVX-512's fp32
+    # lane count); the TPU analogue is the 128-wide VREG/MXU lane.
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    graph.infer_shapes(input_shapes)
+    db = db or ScheduleDatabase()
+
+    locals_: Dict[str, LocalSearchResult] = {}
+    for node in graph.conv_nodes():
+        in_shape = graph.nodes[node.inputs[0]].shape
+        locals_[node.name] = db.search(make_workload(node, in_shape),
+                                       runner=runner)
+
+    solution = None
+    if mode == "nchw":
+        schedules: Dict[str, ConvSchedule] = {}
+    elif mode in ("layout", "transform-elim"):
+        schedules = _uniform_schedules(graph, locals_, uniform_block)
+    else:
+        prob, pairs = _scheme_problem(graph, locals_, max_pairs)
+        solution = global_search.solve(prob, dp_state_budget=dp_state_budget)
+        schedules = {}
+        for name, idx in solution.assignment.items():
+            ic, oc = pairs[name][idx]
+            best = locals_[name].best_for_layout(ic, oc)
+            assert best is not None
+            schedules[name] = best.schedule
+
+    planned = eliminate_transforms(graph, schedules,
+                                   around_each_conv=(mode == "layout"))
+    conv_s = 0.0
+    for name, sched in schedules.items():
+        r = locals_[name].best_for_layout(sched.ic_bn, sched.oc_bn)
+        conv_s += r.cost_s if r else locals_[name].ranked[-1].cost_s
+    if mode == "nchw":
+        # unblocked direct conv: whole-channel "blocks", no output-width
+        # register blocking — the MXU sees an (1 x C x K) micro-GEMM with
+        # unaligned lanes, the same structural penalty the paper's row-1
+        # baseline pays on AVX-512
+        from repro.core.cost import conv_schedule_cost
+        conv_s = 0.0
+        for l in locals_.values():
+            wl = l.workload
+            naive = ConvSchedule(wl.in_channels // wl.groups,
+                                 wl.out_channels, 1, 1, False)
+            conv_s += conv_schedule_cost(wl, naive).total_s
+    from repro.core.cost import HBM_BW
+    tr_s = planned.transform_bytes_total / HBM_BW
+    return Plan(planned=planned, mode=mode, solution=solution,
+                predicted_conv_s=conv_s, predicted_transform_s=tr_s)

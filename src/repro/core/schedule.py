@@ -1,0 +1,124 @@
+"""Convolution schedule template (NeoCPU §3.1, Algorithm 1).
+
+The paper's schedule tuple is ``(ic_bn, oc_bn, reg_n, unroll_ker)``.  On TPU
+the register-blocking factor ``reg_n`` becomes ``ow_bn`` — the output-width
+tile fed to the MXU as the M dimension of a micro-GEMM — and we add ``oh_bn``
+(output rows per VMEM block), the knob that on CPU is implicit in the cache
+hierarchy and on TPU is an explicit BlockSpec parameter.
+
+A schedule fully instantiates the Pallas kernel in ``kernels/conv2d_nchwc.py``
+and the pure-jnp template in ``kernels/ref.py``; the local search
+(``core/local_search.py``) ranks candidate tuples per workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, List, Tuple
+
+from repro.core.layout import candidate_blocks
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ConvWorkload:
+    """What the paper keys its schedule database on (§3.3.1): feature-map and
+    kernel sizes define the workload, independent of which model it is in."""
+
+    batch: int
+    in_channels: int
+    out_channels: int
+    height: int
+    width: int
+    kh: int
+    kw: int
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    dtype_bytes: int = 4
+    pad_w: int = -1   # -1: same as pad (square padding, the common case)
+
+    @property
+    def pw(self) -> int:
+        return self.pad if self.pad_w < 0 else self.pad_w
+
+    @property
+    def out_hw(self) -> Tuple[int, int]:
+        oh = (self.height + 2 * self.pad - self.kh) // self.stride + 1
+        ow = (self.width + 2 * self.pw - self.kw) // self.stride + 1
+        return oh, ow
+
+    @property
+    def flops(self) -> int:
+        oh, ow = self.out_hw
+        return (2 * self.batch * self.out_channels * oh * ow
+                * (self.in_channels // self.groups) * self.kh * self.kw)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ConvSchedule:
+    """(ic_bn, oc_bn, reg_n→ow_bn, unroll_ker) + TPU's oh_bn block rows."""
+
+    ic_bn: int
+    oc_bn: int
+    ow_bn: int
+    oh_bn: int = 1
+    unroll_ker: bool = False
+
+    def validate(self, wl: ConvWorkload) -> None:
+        cin = wl.in_channels // wl.groups
+        if cin % self.ic_bn:
+            raise ValueError(f"ic_bn {self.ic_bn} !| {cin}")
+        if wl.out_channels % self.oc_bn:
+            raise ValueError(f"oc_bn {self.oc_bn} !| {wl.out_channels}")
+        oh, ow = wl.out_hw
+        if ow % self.ow_bn:
+            raise ValueError(f"ow_bn {self.ow_bn} !| {ow}")
+        if oh % self.oh_bn:
+            raise ValueError(f"oh_bn {self.oh_bn} !| {oh}")
+
+
+# paper §3.3.1 step 2: reg_n drawn from [32, 16, 8, 4, 2]; on TPU the
+# sublane-aligned tiles are preferred so we extend with multiples of 8.
+_OW_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def candidate_schedules(wl: ConvWorkload, max_candidates: int = 64,
+                        ) -> List[ConvSchedule]:
+    """Enumerate the search space of §3.3.1: all channel-factor splits ×
+    ow blocking × unroll choice, deduped and capped."""
+    oh, ow = wl.out_hw
+    cin = wl.in_channels // wl.groups
+    ics = candidate_blocks(cin)
+    ocs = candidate_blocks(wl.out_channels)
+    ows = [f for f in _OW_CANDIDATES if ow % f == 0] or [1]
+    ohs = [f for f in (8, 4, 2, 1) if oh % f == 0] or [1]
+    out: List[ConvSchedule] = []
+    for ic_bn, oc_bn, ow_bn in itertools.product(ics[:6], ocs[:6], ows[:4]):
+        for oh_bn in ohs[:2]:
+            for unroll in (True, False):
+                out.append(ConvSchedule(ic_bn, oc_bn, ow_bn, oh_bn, unroll))
+    # stable unique, cap
+    seen = set()
+    uniq = []
+    for s in out:
+        if s not in seen:
+            seen.add(s)
+            uniq.append(s)
+        if len(uniq) >= max_candidates:
+            break
+    return uniq
+
+
+def layout_pairs(wl: ConvWorkload, schedules: List[ConvSchedule]
+                 ) -> List[Tuple[int, int]]:
+    """Distinct (ic_bn, oc_bn) pairs — the global search's per-CONV scheme
+    axis (§3.3.2: 'each CONV has a number of candidate schemes specified by
+    different (ic_bn, oc_bn) pairs')."""
+    seen = set()
+    pairs = []
+    for s in schedules:
+        key = (s.ic_bn, s.oc_bn)
+        if key not in seen:
+            seen.add(key)
+            pairs.append(key)
+    return pairs

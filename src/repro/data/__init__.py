@@ -1,0 +1,4 @@
+"""Deterministic shard-aware synthetic data pipelines."""
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+
+__all__ = ["DataConfig", "SyntheticLMStream"]

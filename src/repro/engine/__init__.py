@@ -1,0 +1,4 @@
+"""Inference engine: bind params to a Plan and execute the planned graph."""
+from repro.engine.executor import CompiledModel, bind_params, compile_model
+
+__all__ = ["CompiledModel", "bind_params", "compile_model"]

@@ -1,0 +1,146 @@
+"""Inference engine: planned graph -> jitted executable.
+
+Binding a ``Plan`` to parameters performs §3.2's compile-time weight
+transformation once — conv kernels to ``KCRS[x]c[y]k``, BN vectors to the
+blocked broadcast shape — then the forward pass executes the rewritten
+graph with zero runtime weight relayouts.  The forward function is jitted
+with the (pre-transformed) params as a traced argument, so weight updates
+don't recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import Layout, NCHW, kernel_to_kcrs_ck
+from repro.core.planner import Plan
+from repro.nn import ops
+from repro.nn.init import Params
+
+
+def _block_channel_vec(v: jnp.ndarray, layout: Layout) -> jnp.ndarray:
+    c = v.shape[0]
+    if layout.is_blocked:
+        x = layout.block
+        return v.reshape(c // x, x)[:, None, None, :]      # (C//x, 1, 1, x)
+    return v[:, None, None]                                # (C, 1, 1)
+
+
+def bind_params(plan: Plan, params: Params) -> Params:
+    """Pre-transform logical parameters to the plan's physical layouts."""
+    g = plan.planned.graph
+    out: Params = {}
+    for name, p in params.items():
+        node = g.nodes.get(name)
+        if node is None:       # node was renamed/removed by the rewrite
+            out[name] = dict(p)
+            continue
+        lay = plan.planned.layouts[name]
+        if node.op == "conv2d" and name in plan.planned.schedules:
+            s = plan.planned.schedules[name]
+            q = {"w": kernel_to_kcrs_ck(p["w"], s.ic_bn, s.oc_bn)}
+            if "b" in p:
+                q["b"] = _block_channel_vec(p["b"], lay)
+            out[name] = q
+        elif node.op == "conv2d":
+            q = {"w": p["w"]}
+            if "b" in p:
+                q["b"] = _block_channel_vec(p["b"], NCHW)
+            out[name] = q
+        elif node.op == "batch_norm":
+            out[name] = {"scale": _block_channel_vec(p["scale"], lay),
+                         "shift": _block_channel_vec(p["shift"], lay)}
+        else:
+            out[name] = dict(p)
+    return out
+
+
+@dataclasses.dataclass
+class CompiledModel:
+    """Callable end-to-end executable for one plan."""
+
+    plan: Plan
+    params: Params               # pre-transformed (bind_params output)
+    use_pallas: bool = False
+    interpret: bool = True
+
+    def __post_init__(self):
+        structure = self.plan.planned
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def forward(params: Params, inputs: Dict[str, jnp.ndarray]):
+            env: Dict[str, jnp.ndarray] = {}
+            for node in structure.graph.topo_order():
+                a = node.attrs
+                lay = structure.layouts[node.name]
+                ins = [env[i] for i in node.inputs]
+                p = params.get(node.name, {})
+                if node.op == "input":
+                    env[node.name] = inputs[node.name]
+                elif node.op == "conv2d":
+                    ph = a.get("pad", 0)
+                    pw = a.get("pad_w", -1)
+                    env[node.name] = ops.conv2d(
+                        ins[0], p["w"], p.get("b"), lay,
+                        stride=a.get("stride", 1),
+                        pad=ph if pw < 0 else (ph, pw),
+                        groups=a.get("groups", 1),
+                        schedule=structure.schedules.get(node.name),
+                        use_pallas=use_pallas, interpret=interpret)
+                elif node.op == "batch_norm":
+                    env[node.name] = ops.batch_norm(ins[0], p["scale"],
+                                                    p["shift"], lay)
+                elif node.op == "relu":
+                    env[node.name] = ops.relu(ins[0])
+                elif node.op == "softmax":
+                    env[node.name] = ops.softmax(ins[0], lay)
+                elif node.op == "l2_normalize":
+                    env[node.name] = ops.l2_normalize(ins[0], lay)
+                elif node.op == "max_pool":
+                    env[node.name] = ops.max_pool(
+                        ins[0], a["k"], a.get("stride", a["k"]),
+                        a.get("pad", 0), a.get("ceil_mode", False))
+                elif node.op == "avg_pool":
+                    env[node.name] = ops.avg_pool(
+                        ins[0], a["k"], a.get("stride", a["k"]),
+                        a.get("pad", 0), a.get("ceil_mode", False))
+                elif node.op == "global_avg_pool":
+                    env[node.name] = ops.global_avg_pool(ins[0])
+                elif node.op == "add":
+                    env[node.name] = ops.add(*ins)
+                elif node.op == "concat":
+                    env[node.name] = ops.concat(ins, lay)
+                elif node.op == "flatten":
+                    env[node.name] = ops.flatten(ins[0])
+                elif node.op == "reshape":
+                    env[node.name] = ins[0].reshape(a["shape"])
+                elif node.op == "dense":
+                    env[node.name] = ops.dense(ins[0], p["w"], p.get("b"))
+                elif node.op == "layout_transform":
+                    env[node.name] = ops.layout_transform(
+                        ins[0], a["src_layout"], a["dst_layout"])
+                else:
+                    raise NotImplementedError(node.op)
+            outs = [env[o] for o in structure.graph.outputs]
+            return outs[0] if len(outs) == 1 else tuple(outs)
+
+        self._forward = jax.jit(forward)
+
+    def __call__(self, inputs: Dict[str, jnp.ndarray]):
+        return self._forward(self.params, inputs)
+
+    def predict(self, x: jnp.ndarray):
+        """Single-input convenience (the common CNN case)."""
+        (inp,) = [n.name for n in self.plan.planned.graph.topo_order()
+                  if n.op == "input"]
+        return self(inputs={inp: x})
+
+
+def compile_model(plan: Plan, params: Params, use_pallas: bool = False,
+                  interpret: bool = True) -> CompiledModel:
+    bound = bind_params(plan, params)
+    return CompiledModel(plan=plan, params=bound, use_pallas=use_pallas,
+                         interpret=interpret)

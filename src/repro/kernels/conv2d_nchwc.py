@@ -1,0 +1,123 @@
+"""Pallas TPU direct-convolution kernel in NCHW[x]c layout (NeoCPU Alg. 1).
+
+The paper's AVX-512 template keeps one ZMM register of kernel values resident
+and FMA-accumulates it against ``reg_n`` feature-map vectors.  The TPU-native
+translation keeps a ``(kh, kw, ic_bn, oc_bn)`` weight block resident in VMEM
+and, for every kernel tap, issues an ``(ow_bn × ic_bn) @ (ic_bn × oc_bn)``
+MXU micro-GEMM — ``ow_bn`` plays reg_n's role as the M-tile, ``oc_bn`` maps to
+the 128-lane N dimension, and ``ic_bn`` is the contraction the paper calls the
+sub-channel block.
+
+Grid: ``(N, OC_chunks, OH_blocks, IC_chunks)`` — the input-channel dimension
+is innermost so each output block is revisited and accumulated across the
+reduction (index_map of the output ignores it), the standard Pallas reduction
+pattern.  BlockSpecs stage, per step:
+
+    input :  (1, 1, H_pad, W_pad, ic_bn)        — one channel-chunk slab
+    weight:  (1, 1, KH, KW, ic_bn, oc_bn)       — one (oc, ic) weight block
+    output:  (1, 1, oh_bn, OW, oc_bn)           — fp32 accumulator rows
+
+which is exactly the schedule's VMEM working set costed by
+``core.cost.conv_vmem_bytes``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import ConvSchedule
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, stride: int, kh: int, kw: int,
+                 oh_bn: int, ow_bn: int, ow: int, unroll_ker: bool):
+    ci = pl.program_id(3)
+    ohb = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_block = w_ref[0, 0].astype(jnp.float32)  # (KH, KW, ic_bn, oc_bn)
+    n_owb = ow // ow_bn
+
+    for dh in range(oh_bn):  # static: rows of the output block
+        out_row = o_ref[0, 0, dh]  # (OW, oc_bn) fp32, running accumulator
+        in_row_base = (ohb * oh_bn + dh) * stride
+
+        def tap(dy, dx, acc):
+            # one kernel tap: strided input row x weight slice, all ow blocks
+            row = x_ref[0, 0, in_row_base + dy]  # (W_pad, ic_bn)
+            row = row.astype(jnp.float32)
+            wtap = jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(w_block, dy, 0, keepdims=False),
+                dx, 0, keepdims=False)  # (ic_bn, oc_bn)
+            for owb in range(n_owb):  # static: the reg_n loop of Alg. 1 l.15
+                start = owb * ow_bn * stride
+                span = (ow_bn - 1) * stride + 1
+                seg = jax.lax.dynamic_slice_in_dim(row, start + dx, span, 0)
+                patch = seg[::stride]  # (ow_bn, ic_bn)
+                acc = jax.lax.dynamic_update_slice_in_dim(
+                    acc,
+                    jax.lax.dynamic_slice_in_dim(acc, owb * ow_bn, ow_bn, 0)
+                    + jnp.dot(patch, wtap,
+                              preferred_element_type=jnp.float32),
+                    owb * ow_bn, 0)
+            return acc
+
+        if unroll_ker:  # Alg. 1 line 12: "(opt) unroll"
+            acc = out_row
+            for dy in range(kh):
+                for dx in range(kw):
+                    acc = tap(dy, dx, acc)
+        else:
+            def body(t, acc):
+                return tap(t // kw, t % kw, acc)
+            acc = jax.lax.fori_loop(0, kh * kw, body, out_row)
+        o_ref[0, 0, dh] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "schedule", "interpret"))
+def conv2d_nchwc_pallas(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                        *, stride: int = 1,
+                        schedule: ConvSchedule,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Blocked conv via pallas_call.  ``x_blocked`` must already be padded:
+    (N, C_in//ic_bn, H_pad, W_pad, ic_bn); weights (Ko, Ci, KH, KW, ic, oc)."""
+    n, ci_chunks, h_pad, w_pad, ic_bn = x_blocked.shape
+    ko_chunks, ci_chunks_w, kh, kw, ic_bn_w, oc_bn = w_blocked.shape
+    assert (ci_chunks, ic_bn) == (ci_chunks_w, ic_bn_w), "layout mismatch"
+    assert ic_bn == schedule.ic_bn and oc_bn == schedule.oc_bn
+    oh = (h_pad - kh) // stride + 1
+    ow = (w_pad - kw) // stride + 1
+    oh_bn, ow_bn = schedule.oh_bn, schedule.ow_bn
+    assert oh % oh_bn == 0 and ow % ow_bn == 0, (oh, ow, schedule)
+
+    grid = (n, ko_chunks, oh // oh_bn, ci_chunks)
+    kernel = functools.partial(
+        _conv_kernel, stride=stride, kh=kh, kw=kw, oh_bn=oh_bn,
+        ow_bn=ow_bn, ow=ow, unroll_ker=schedule.unroll_ker)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, h_pad, w_pad, ic_bn),
+                         lambda b, k, o, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, kh, kw, ic_bn, oc_bn),
+                         lambda b, k, o, c: (k, c, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh_bn, ow, oc_bn),
+                               lambda b, k, o, c: (b, k, o, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, ko_chunks, oh, ow, oc_bn), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                "parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_blocked, w_blocked)
+    return out.astype(x_blocked.dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU blocked-GEMM template.
+
+The LM-side instantiation of the paper's operation template (§3.1): the
+schedule is the (bm, bk, bn) VMEM block triple — bm plays reg_n's role as
+the M-tile, bn maps to the 128-lane MXU dimension (oc_bn's analogue), bk is
+the contraction block (ic_bn's analogue).  The same template serves dense
+projections, MoE expert FFNs, and the LM head; the local search ranks block
+triples with the same roofline model used for convs.
+
+Grid ``(M/bm, N/bn, K/bk)`` with the contraction innermost; the output block
+is revisited across k-steps and accumulated in fp32 (standard Pallas
+reduction pattern — the out index_map ignores the k axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class MatmulSchedule:
+    """VMEM block triple; defaults are MXU-aligned (128-lane, 8-sublane)."""
+
+    bm: int = 128
+    bk: int = 128
+    bn: int = 128
+
+    def validate(self, m: int, k: int, n: int) -> None:
+        if m % self.bm or k % self.bk or n % self.bn:
+            raise ValueError(f"{(m, k, n)} not divisible by {self}")
+
+    @property
+    def vmem_bytes(self) -> int:
+        # a block + b block (bf16-or-fp32 ~4B worst case) + fp32 accumulator
+        return 4 * (self.bm * self.bk + self.bk * self.bn
+                    + self.bm * self.bn)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                          b_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "interpret",
+                                             "out_dtype"))
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                  schedule: MatmulSchedule = MatmulSchedule(),
+                  out_dtype=None, interpret: bool = True) -> jnp.ndarray:
+    """(M, K) @ (K, N) under the blocked template."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    s = schedule
+    s.validate(m, k, n)
+    grid = (m // s.bm, n // s.bn, k // s.bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s.bm, s.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((s.bk, s.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((s.bm, s.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+    return out.astype(out_dtype or a.dtype)
+
+
+def matmul_padded(a: jnp.ndarray, b: jnp.ndarray, *,
+                  schedule: MatmulSchedule = MatmulSchedule(),
+                  interpret: bool = True) -> jnp.ndarray:
+    """Pads M/K/N up to block multiples, runs the template, slices back —
+    the wrapper the LM stack calls for arbitrary projection shapes."""
+    m, k = a.shape
+    _, n = b.shape
+    s = schedule
+    pm, pk, pn = (-m) % s.bm, (-k) % s.bk, (-n) % s.bn
+    ap = jnp.pad(a, ((0, pm), (0, pk)))
+    bp = jnp.pad(b, ((0, pk), (0, pn)))
+    out = matmul_pallas(ap, bp, schedule=s, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,86 @@
+"""Jit'd public wrappers around the kernels.
+
+Two execution paths per op, same template parameters:
+
+* ``*_pallas`` — the Pallas TPU kernel (interpret-mode on CPU), the target
+  artifact;
+* ``*_jnp``    — the identical loop nest expressed as strided slices + einsum
+  so XLA (CPU here, TPU in production as fallback) compiles it; the inference
+  engine uses this path for wall-clock runs in this container.
+
+Both consume the NCHW[x]c / KCRS[x]c[y]k tensors the planner produces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import kernel_to_kcrs_ck, to_nchwc, from_nchwc
+from repro.core.schedule import ConvSchedule
+from repro.kernels.conv2d_nchwc import conv2d_nchwc_pallas
+
+
+def _pad_hw(pad) -> tuple:
+    """Normalize an int-or-(ph, pw) padding spec."""
+    return (pad, pad) if isinstance(pad, int) else tuple(pad)
+
+
+def pad_blocked(x_blocked: jnp.ndarray, pad) -> jnp.ndarray:
+    ph, pw = _pad_hw(pad)
+    if ph == 0 and pw == 0:
+        return x_blocked
+    return jnp.pad(x_blocked, ((0, 0), (0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                     stride: int = 1, pad=0) -> jnp.ndarray:
+    """Blocked direct conv as XLA ops — the template's jnp instantiation.
+
+    out[n,ko,oh,ow,oc] = sum_{ci,kh,kw,ic} x[n,ci,oh*s+kh,ow*s+kw,ic]
+                                           * w[ko,ci,kh,kw,ic,oc]
+    """
+    xp = pad_blocked(x_blocked, pad)
+    n, ci, hp, wp, ic_bn = xp.shape
+    ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+    acc = jnp.zeros((n, ko, oh, ow, oc_bn), dtype=jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = xp[:, :, dh:dh + oh * stride:stride,
+                       dw:dw + ow * stride:stride, :]
+            acc = acc + jnp.einsum(
+                "nchwi,kcio->nkhwo", patch.astype(jnp.float32),
+                w_blocked[:, :, dh, dw].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return acc.astype(x_blocked.dtype)
+
+
+def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
+                   stride: int = 1, pad=0,
+                   schedule: ConvSchedule | None = None,
+                   use_pallas: bool = False,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Planner-facing entry point on blocked tensors."""
+    if use_pallas:
+        assert schedule is not None
+        xp = pad_blocked(x_blocked, pad)
+        return conv2d_nchwc_pallas(xp, w_blocked, stride=stride,
+                                   schedule=schedule, interpret=interpret)
+    return conv2d_nchwc_jnp(x_blocked, w_blocked, stride=stride, pad=pad)
+
+
+def conv2d(x_nchw: jnp.ndarray, w_kcrs: jnp.ndarray, *, stride: int = 1,
+           pad=0, schedule: ConvSchedule,
+           use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Convenience NCHW->NCHW entry: blocks inputs, runs the template,
+    unblocks.  The engine never uses this (it keeps tensors blocked); tests
+    and the quickstart do."""
+    xb = to_nchwc(x_nchw, schedule.ic_bn)
+    wb = kernel_to_kcrs_ck(w_kcrs, schedule.ic_bn, schedule.oc_bn)
+    ob = conv2d_blocked(xb, wb, stride=stride, pad=pad, schedule=schedule,
+                        use_pallas=use_pallas, interpret=interpret)
+    return from_nchwc(ob)

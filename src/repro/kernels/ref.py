@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+No ``lax.conv`` / fused primitives here — each reference is written from the
+mathematical definition so the Pallas kernels (and the fast XLA templates in
+``ops.py``) have an independent ground truth.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layout import from_nchwc, kernel_from_kcrs_ck, to_nchwc
+
+
+# ---------------------------------------------------------------------------
+# Direct 2-D convolution, NCHW
+# ---------------------------------------------------------------------------
+
+def conv2d_nchw_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                    pad=0, groups: int = 1) -> jnp.ndarray:
+    """out[n,k,oh,ow] = sum_{c,kh,kw} x[n,c,oh*s+kh-p,ow*s+kw-p] * w[k,c,kh,kw]."""
+    n, c, h, wdt = x.shape
+    k, c_per_g, kh, kw = w.shape
+    assert c == c_per_g * groups, (x.shape, w.shape, groups)
+    ph, pw = (pad, pad) if isinstance(pad, int) else tuple(pad)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    oh = (h + 2 * ph - kh) // stride + 1
+    ow = (wdt + 2 * pw - kw) // stride + 1
+    outs = []
+    kpg = k // groups
+    for g in range(groups):
+        xg = xp[:, g * c_per_g:(g + 1) * c_per_g]
+        wg = w[g * kpg:(g + 1) * kpg]
+        acc = jnp.zeros((n, kpg, oh, ow), dtype=jnp.float32)
+        for dh in range(kh):
+            for dw in range(kw):
+                patch = xg[:, :, dh:dh + oh * stride:stride,
+                           dw:dw + ow * stride:stride]
+                acc = acc + jnp.einsum(
+                    "nchw,kc->nkhw", patch.astype(jnp.float32),
+                    wg[:, :, dh, dw].astype(jnp.float32))
+        outs.append(acc)
+    return jnp.concatenate(outs, axis=1).astype(x.dtype)
+
+
+def conv2d_nchwc_ref(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                     stride: int = 1, pad=0) -> jnp.ndarray:
+    """Blocked-layout oracle: unblock -> NCHW conv -> reblock."""
+    oc_bn = w_blocked.shape[-1]
+    x = from_nchwc(x_blocked)
+    w = kernel_from_kcrs_ck(w_blocked)
+    out = conv2d_nchw_ref(x, w, stride=stride, pad=pad)
+    return to_nchwc(out, oc_bn)
+
+
+# ---------------------------------------------------------------------------
+# Blocked GEMM
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("mk,kn->mn", a.astype(jnp.float32),
+                      b.astype(jnp.float32)).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (causal, GQA) — oracle for kernels/flash_attention.py
+# ---------------------------------------------------------------------------
+
+def gqa_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k,v: (B, Hkv, S, D). Hq % Hkv == 0.
+    ``window`` > 0 restricts attention to the last ``window`` positions."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf)
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    idx = jnp.arange(s)
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window > 0:
+        mask &= idx[:, None] - idx[None, :] < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vf).astype(q.dtype)

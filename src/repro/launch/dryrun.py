@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines, before ANY jax-importing import: jax locks
+# the device count on first init.  Set ONLY here — smoke tests and benches
+# see the single real device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * params/opt-state as ShapeDtypeStructs (jax.eval_shape — no allocation),
+  * input ShapeDtypeStructs from configs.input_specs,
+  * in_shardings from the rule engine (sharding.py),
+  * jax.jit(step).lower(...).compile() on the production mesh,
+  * record memory_analysis(), cost_analysis(), and the collective schedule
+    parsed from the optimized HLO, into experiments/dryrun/*.json.
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system, not the harness.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.analysis.flops import count_costs
+from repro.configs import ARCHS, SHAPES, applicable, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import model
+from repro.models.lm.config import LMConfig
+from repro.models.lm.sharding import (batch_spec, dp_axes, guarded_spec,
+                                      param_shardings, use_mesh,
+                                      zero_shardings)
+from repro.optim.adamw import AdamW
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Step functions (what production would run)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: LMConfig, opt: AdamW, microbatch: int = 1,
+                    grad_dtype=jnp.float32):
+    """microbatch > 1: gradient accumulation over a scan — activation
+    memory scales 1/microbatch at the cost of re-running the fwd+bwd per
+    slice (same total FLOPs)."""
+    def train_step(params, opt_state, batch):
+        if microbatch == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, cfg, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, b_i):
+                l_acc, g_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, cfg, b_i)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype),
+                              params)
+            unroll = microbatch if getattr(cfg, "unroll_layers", False) \
+                else 1
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), g0),
+                                            mb, unroll=unroll)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        new_params, new_state, om = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+    return train_step
+
+
+def make_prefill(cfg: LMConfig, seq: int):
+    def prefill_step(params, batch):
+        total = seq
+        return model.prefill(
+            params, cfg, batch["tokens"], max_len=total,
+            img_embeds=batch.get("img_embeds"),
+            frames=batch.get("frames"))
+    return prefill_step
+
+
+def make_serve_step(cfg: LMConfig):
+    def serve_step(params, token, cache, pos):
+        return model.decode_step(params, cfg, token, cache, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input shardings
+# ---------------------------------------------------------------------------
+
+def _leaf_sharding(mesh, leaf, batch: int):
+    """Batch dim -> DP axes; then the largest model-divisible dim -> model."""
+    spec = [None] * len(leaf.shape)
+    bspec = batch_spec(mesh, batch)
+    used_model = False
+    for i, d in enumerate(leaf.shape):
+        if bspec and d == batch and spec[i] is None and batch > 1:
+            spec[i] = bspec
+            break
+    # prefer the sequence-like (largest) axis for the model dim
+    dims = sorted(range(len(leaf.shape)),
+                  key=lambda i: -leaf.shape[i])
+    for i in dims:
+        if spec[i] is None and leaf.shape[i] % mesh.shape["model"] == 0 \
+                and leaf.shape[i] >= mesh.shape["model"] and not used_model:
+            spec[i] = "model"
+            used_model = True
+            break
+    return NamedSharding(mesh, guarded_spec(mesh, leaf.shape, spec))
+
+
+def batch_shardings(mesh, tree, batch: int):
+    return jax.tree.map(lambda l: _leaf_sharding(mesh, l, batch), tree)
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, *, cfg: LMConfig = None,
+             microbatch: int = 1, fsdp_axes=(), opt: AdamW = None,
+             tag: str = "") -> dict:
+    cfg = cfg or ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "skipped", "reason": why, "tag": tag}
+    if not ok:
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    params_shape = jax.eval_shape(
+        functools.partial(model.init_params, cfg), jax.random.PRNGKey(0))
+    specs = input_specs(cfg, shape)
+
+    with use_mesh(mesh, strategy=cfg.shard_strategy):
+        p_shard = param_shardings(mesh, params_shape,
+                                  strategy=cfg.shard_strategy,
+                                  fsdp_axes=tuple(fsdp_axes))
+        if shape.kind == "train":
+            opt = opt or AdamW()
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_shard = zero_shardings(mesh, opt_shape,
+                                     strategy=cfg.shard_strategy)
+            b_shard = batch_shardings(mesh, specs, shape.batch)
+            grad_dt = jnp.dtype(cfg.dtype) if microbatch > 1 \
+                else jnp.float32
+            step = make_train_step(cfg, opt, microbatch=microbatch,
+                                   grad_dtype=grad_dt)
+            step_args = (params_shape, opt_shape, specs)
+            lowered = jax.jit(step, in_shardings=(p_shard, o_shard,
+                                                  b_shard)).lower(*step_args)
+        elif shape.kind == "prefill":
+            b_shard = batch_shardings(mesh, specs, shape.batch)
+            step = make_prefill(cfg, shape.seq)
+            step_args = (params_shape, specs)
+            lowered = jax.jit(step, in_shardings=(p_shard, b_shard)).lower(
+                *step_args)
+        else:
+            tok, cache, pos = specs["token"], specs["cache"], specs["pos"]
+            t_shard = batch_shardings(mesh, tok, shape.batch)
+            c_shard = batch_shardings(mesh, cache, shape.batch)
+            pos_shard = NamedSharding(mesh, P())
+            step = make_serve_step(cfg)
+            step_args = (params_shape, tok, cache, pos)
+            lowered = jax.jit(step, in_shardings=(p_shard, t_shard, c_shard,
+                                                  pos_shard)).lower(
+                *step_args)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # exact structural FLOPs/bytes of the global program (scan-aware)
+    jx = count_costs(step, *step_args)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = rl.parse_collective_bytes(hlo)
+    counts = rl.count_ops(hlo, rl._COLLECTIVES)
+
+    report = rl.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=jx["flops"] / chips,
+        bytes_per_device=jx["heavy_bytes"] / chips,
+        collective_bytes_per_device=float(coll["total"]),
+        collectives=counts,
+        model_flops_total=rl.model_flops(cfg, shape.kind, shape.batch,
+                                         shape.seq),
+        ca_flops_per_device=float(cost.get("flops", 0.0)),
+        ca_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        model_bytes_total=rl.model_bytes(cfg, shape.kind, shape.batch,
+                                         shape.seq))
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                  None),
+        },
+        collective_bytes=coll,
+        roofline=report.to_dict(),
+    )
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops/dev={report.flops_per_device:.3e} "
+              f"coll/dev={coll['total']:.3e}B "
+              f"bottleneck={report.bottleneck} "
+              f"roofline={report.roofline_fraction:.3f}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape}__{mesh_name}"
+                path = outdir / f"{tag}.json"
+                if path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[{tag}] cached ({prev['status']})",
+                              flush=True)
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skipped"
+                        continue
+                    path.unlink()     # retry failures
+                try:
+                    rec = run_cell(arch, shape, mp)
+                    if rec["status"] == "ok":
+                        n_ok += 1
+                    else:
+                        n_skip += 1
+                        print(f"[{tag}] SKIPPED: {rec['reason']}",
+                              flush=True)
+                except Exception as e:   # noqa: BLE001 — record and move on
+                    n_fail += 1
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "failed", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[{tag}] FAILED: {e}", flush=True)
+                path.write_text(json.dumps(rec, indent=1))
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before any jax
+import* so 512 placeholder devices exist; smoke tests and benches see the
+real single device.
+
+Topology (TPU v5e target):
+    single-pod : (16, 16)    axes ("data", "model")   = 256 chips
+    multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)}; the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over whatever devices exist (CPU smoke tests)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    d = len(devices) // model_axis
+    return Mesh(np.asarray(devices[:d * model_axis]).reshape(d, model_axis),
+                ("data", "model"))

@@ -1,0 +1,120 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ before any jax import, same as dryrun.py
+
+"""Performance hillclimbing harness (EXPERIMENTS.md §Perf).
+
+Each VARIANT is a named, reviewable change set over the baseline cell:
+config replacement (remat / fused gates / sharding strategy), optimizer
+(bf16 moments), step structure (microbatching), parameter layout (FSDP
+axes).  Results land in experiments/perf/<cell>__<variant>.json with the
+same record schema as the baseline dry-run, so before/after tables diff
+directly.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell whisper-tiny/train_4k \
+        --variant pure-dp
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS
+from repro.launch import dryrun
+from repro.optim.adamw import AdamW
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+
+def _cfg(arch, **over):
+    return dataclasses.replace(ARCHS[arch], **over)
+
+
+# variant name -> kwargs for dryrun.run_cell (cfg/microbatch/fsdp/opt)
+def variants(arch: str):
+    v = {
+        # W1/R1/K1...: see EXPERIMENTS.md §Perf for hypothesis + napkin math
+        "pure-dp": dict(cfg=_cfg(arch, shard_strategy="pure_dp")),
+        "remat": dict(cfg=_cfg(arch, remat=True)),
+        "fused-gates": dict(cfg=_cfg(arch, fused_gates=True)),
+        "fused-gates+dp-model": dict(
+            cfg=_cfg(arch, fused_gates=True, shard_strategy="pure_dp")),
+        "micro4": dict(microbatch=4),
+        "micro8": dict(microbatch=8),
+        "micro16": dict(microbatch=16),
+        "bf16-moments": dict(opt=AdamW(moment_dtype="bfloat16")),
+        "fsdp": dict(fsdp_axes=("pod", "data")),
+        "fsdp+bf16-moments+micro8": dict(
+            fsdp_axes=("pod", "data"), microbatch=8,
+            opt=AdamW(moment_dtype="bfloat16")),
+        "fsdp+bf16-moments+micro16": dict(
+            fsdp_axes=("pod", "data"), microbatch=16,
+            opt=AdamW(moment_dtype="bfloat16")),
+        "remat+micro8": dict(cfg=_cfg(arch, remat=True), microbatch=8),
+        "pure-dp+zero-bf16": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp"),
+            opt=AdamW(moment_dtype="bfloat16")),
+        "remat-dots+fsdp+bf16+micro16": dict(
+            cfg=_cfg(arch, remat_policy="dots"),
+            fsdp_axes=("pod", "data"), microbatch=16,
+            opt=AdamW(moment_dtype="bfloat16")),
+        "pure-dp+attn4k": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp", attn_q_chunk=4096,
+                     attn_kv_chunk=4096)),
+        "pure-dp+chunk128": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp", ssm_chunk=128)),
+        "pure-dp+chunk64": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp", ssm_chunk=64)),
+        "pure-dp+zero-bf16+micro8": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp"), microbatch=8,
+            opt=AdamW(moment_dtype="bfloat16")),
+        # measurement-mode twins: unrolled layer scan -> exact collectives
+        "baseline+unroll": dict(cfg=_cfg(arch, unroll_layers=True)),
+        "best+unroll-kimi": dict(
+            cfg=_cfg(arch, unroll_layers=True),
+            fsdp_axes=("pod", "data"), microbatch=16,
+            opt=AdamW(moment_dtype="bfloat16")),
+        "pure-dp+chunk128+unroll": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp", ssm_chunk=128,
+                     unroll_layers=True)),
+        "pure-dp+unroll": dict(
+            cfg=_cfg(arch, shard_strategy="pure_dp", unroll_layers=True)),
+    }
+    return v
+
+
+def run(cell: str, variant: str, multi_pod: bool = False):
+    arch, shape = cell.split("/")
+    kw = variants(arch)[variant]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape}__{mesh_name}__{variant}"
+    path = PERF_DIR / f"{tag}.json"
+    if path.exists():
+        rec = json.loads(path.read_text())
+        if rec.get("status") == "ok":
+            print(f"[{tag}] cached")
+            return rec
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    try:
+        rec = dryrun.run_cell(arch, shape, multi_pod, tag=variant, **kw)
+    except Exception as e:   # noqa: BLE001
+        import traceback
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "tag": variant, "status": "failed", "error": str(e),
+               "traceback": traceback.format_exc()}
+        print(f"[{tag}] FAILED: {e}", flush=True)
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch/shape")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.cell, args.variant, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

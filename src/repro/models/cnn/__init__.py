@@ -1,0 +1,4 @@
+"""Paper model zoo: 15 CNNs of Table 2 as Graph IR builders."""
+from repro.models.cnn.zoo import MODELS, build
+
+__all__ = ["MODELS", "build"]

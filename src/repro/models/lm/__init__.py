@@ -1,0 +1,7 @@
+"""LM stack: the 10 assigned architectures as one composable model."""
+from repro.models.lm.config import LMConfig
+from repro.models.lm.model import (decode_step, forward, init_cache,
+                                   init_params, loss_fn, prefill)
+
+__all__ = ["LMConfig", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

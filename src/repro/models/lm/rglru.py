@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t) with
+a_t = exp(-c · softplus(Λ) · r_t) is a diagonal linear recurrence — computed
+with ``jax.lax.associative_scan`` over time for train/prefill (log-depth,
+shardable) and as a single step for decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.sharding import BATCH, shard_hint
+from repro.models.lm.ssm import causal_conv1d
+
+_C = 8.0   # Griffin's fixed temperature on the recurrence gate
+
+
+def rg_lru(x: jnp.ndarray, i_gate: jnp.ndarray, r_gate: jnp.ndarray,
+           lam: jnp.ndarray, h0: Optional[jnp.ndarray] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, i_gate, r_gate: (B, T, W); lam: (W,).  Returns (h (B,T,W), h_last)."""
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * jax.nn.sigmoid(r_gate.astype(jnp.float32))        # (B, T, W) <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically-safe form
+    gate_in = jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * gate_in * x.astype(jnp.float32)
+
+    if h0 is not None:
+        # fold the carried-in state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(x: jnp.ndarray, i_gate: jnp.ndarray, r_gate: jnp.ndarray,
+                lam: jnp.ndarray, h: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token step; all inputs (B, W)."""
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * jax.nn.sigmoid(i_gate.astype(jnp.float32)) * x.astype(jnp.float32)
+    h_new = a * h.astype(jnp.float32) + b
+    return h_new.astype(x.dtype), h_new
+
+
+def recurrent_block(x: jnp.ndarray, p: Dict, cfg: LMConfig, *,
+                    lru_state: Optional[jnp.ndarray] = None,
+                    conv_state: Optional[jnp.ndarray] = None,
+                    decode: bool = False):
+    """Griffin recurrent sublayer.  x: (B, T, d) -> (out, (lru, conv) states)."""
+    y = x @ p["wx"]                                     # (B, T, W)
+    gate_branch = x @ p["wy"]                           # (B, T, W)
+    y, new_conv = causal_conv1d(y, p["conv_w"], conv_state)
+    # keep the whole recurrent branch sharded on W across the block — the
+    # transform-elimination idea applied to the sharding tier
+    y = shard_hint(y, BATCH, None, "model")
+    gate_branch = shard_hint(gate_branch, BATCH, None, "model")
+    if "w_gates" in p:
+        # fused variant: one (W, 2W) GEMM -> one collective for both gates
+        gates = y @ p["w_gates"] + p["b_gates"]
+        gates = shard_hint(gates, BATCH, None, "model")
+        i_gate, r_gate = jnp.split(gates, 2, axis=-1)
+    else:
+        i_gate = y @ p["w_in_gate"] + p["b_in_gate"]
+        r_gate = y @ p["w_rec_gate"] + p["b_rec_gate"]
+        i_gate = shard_hint(i_gate, BATCH, None, "model")
+        r_gate = shard_hint(r_gate, BATCH, None, "model")
+    if decode:
+        h0 = lru_state if lru_state is not None else \
+            jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32)
+        h, new_lru = rg_lru_step(y[:, 0], i_gate[:, 0], r_gate[:, 0],
+                                 p["lam"], h0)
+        h = h[:, None]
+    else:
+        h, new_lru = rg_lru(y, i_gate, r_gate, p["lam"], h0=lru_state)
+    out = (h * jax.nn.gelu(gate_branch, approximate=True)) @ p["wo"]
+    return out, (new_lru, new_conv)

@@ -1,0 +1,258 @@
+"""Sharding rules: parameters, activations, and the mesh context.
+
+The mesh axes are fixed by the production topology — ``("data", "model")``
+single-pod, ``("pod", "data", "model")`` multi-pod (launch/mesh.py).  Logical
+roles map onto them:
+
+    batch            -> ("pod", "data")      (DP; pod axis is outer DP)
+    tensor-parallel  -> "model"              (heads / d_ff / vocab)
+    expert-parallel  -> "model"              (MoE expert axis)
+
+Rules are divisibility-guarded: a dim that doesn't divide the axis size is
+left unsharded (e.g. qwen2's 12 heads on a 16-way model axis fall back to
+replicated attention with sharded d_ff).  This is exactly the paper's
+layout-assignment problem lifted to pod scale — see core/planner.py and
+DESIGN.md §6: a sharding *is* a layout, a resharding is a LayoutTransform
+whose cost is a collective.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+BATCH = "batch"     # sentinel in specs, resolved to the context's DP axes
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_dp() -> Tuple[str, ...]:
+    return getattr(_state, "dp", ("pod", "data"))
+
+
+def current_strategy() -> str:
+    return getattr(_state, "strategy", "tp")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], *, strategy: str = "tp"):
+    """strategy "tp": model axis carries tensor/expert parallelism.
+    strategy "pure_dp": the model axis is folded into data parallelism —
+    the right choice for models far below the TP-granularity threshold
+    (whisper-tiny's 6 heads / d=384 on a 16-way axis)."""
+    prev = (current_mesh(), current_dp(), current_strategy())
+    _state.mesh = mesh
+    _state.strategy = strategy
+    _state.dp = ("pod", "data", "model") if strategy == "pure_dp" \
+        else ("pod", "data")
+    try:
+        yield
+    finally:
+        _state.mesh, _state.dp, _state.strategy = prev
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in current_dp() if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def guarded_spec(mesh: Mesh, shape: Sequence[int], spec: Sequence) -> P:
+    """Resolve the BATCH sentinel, drop absent mesh axes (a single-pod mesh
+    has no "pod") and spec entries whose mesh-axis size doesn't divide the
+    dim.  The BATCH entry degrades gracefully: it sheds its outermost axes
+    until it divides (long_500k's batch=1 ends up replicated)."""
+    out = []
+    used: set = set()
+    for dim, axes in zip(shape, spec):
+        if axes == BATCH:
+            cand = tuple(a for a in current_dp()
+                         if a in mesh.axis_names and a not in used)
+            while cand and dim % _axis_size(mesh, cand):
+                cand = cand[1:]
+            axes = cand or None
+        if isinstance(axes, (tuple, list)):
+            axes = tuple(a for a in axes
+                         if a in mesh.axis_names and a not in used) or None
+        elif axes is not None and (axes not in mesh.axis_names
+                                   or axes in used):
+            axes = None
+        if axes is not None and dim % _axis_size(mesh, axes) == 0:
+            out.append(axes)
+            used.update((axes,) if isinstance(axes, str) else axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard_hint(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint guarded by the mesh context + divisibility.
+    No-op outside a mesh (CPU smoke tests)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    p = guarded_spec(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, p))
+
+
+def shard_attn_q(q: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Attention activation layout choice for (B, H|Hkv, S, D):
+    heads on the model axis when they divide it, else sequence-parallel
+    (the kv side is gathered — cheap under GQA/MQA).  This is the paper's
+    per-op layout selection applied to the sharding tier."""
+    mesh = current_mesh()
+    if mesh is None or current_strategy() == "pure_dp":
+        return shard_hint(q, BATCH, None, None, None)
+    if n_heads % mesh.shape["model"] == 0:
+        return shard_hint(q, BATCH, "model", None, None)
+    return shard_hint(q, BATCH, None, "model", None)
+
+
+def batch_spec(mesh: Mesh, batch: int):
+    """The DP axes that divide this batch (long_500k's batch=1 replicates)."""
+    axes = dp_axes(mesh)
+    while axes and batch % _axis_size(mesh, axes):
+        axes = axes[1:]    # drop the outermost ("pod") first
+    return tuple(axes) if axes else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by name pattern
+# ---------------------------------------------------------------------------
+
+# (substring match on the param path, spec builder given ndim)
+def _param_spec(path: str, shape: Tuple[int, ...]) -> Sequence:
+    """Logical spec (before divisibility guard).  Conventions:
+    stacked-scan leaves have a leading L dim (never sharded)."""
+    nd = len(shape)
+    mp = "model"
+
+    def tail(spec2):   # pad leading dims (layer stack) with None
+        return [None] * (nd - len(spec2)) + list(spec2)
+
+    if "embed" in path:
+        return tail([mp, None])          # (V, d): shard vocab
+    if "lm_head" in path:
+        return tail([None, mp])          # (d, V)
+    if any(k in path for k in ("wq", "wk", "wv")):
+        return tail([None, mp])          # (d, H*hd): shard heads*dim
+    if path.endswith("wo") or ".wo" in path:
+        return tail([mp, None])          # (H*hd, d)
+    if any(k in path for k in ("router",)):
+        return tail([None, mp])          # (d, E)
+    if any(k in path for k in ("experts",)):
+        # (E, d, f) / (E, f, d): expert-parallel on E
+        return tail([mp] + [None] * (min(nd, 3) - 1))
+    if any(k in path for k in ("wg", "wu")):
+        return tail([None, mp])          # (d, ff)
+    if path.endswith("wd") or ".wd" in path:
+        return tail([mp, None])          # (ff, d)
+    if "in_proj" in path or "out_proj" in path or path.endswith("wx") \
+            or path.endswith("wy"):
+        return tail([None, mp])          # ssm/hybrid projections
+    if nd >= 2 and any(k in path for k in ("w_gates", "w_in_gate",
+                                           "w_rec_gate")):
+        # RG-LRU gate weights: shard the OUTPUT dim.  Sharding the (W, 2W)
+        # contraction would psum a (B,T,2W) tensor per layer (the dominant
+        # all-reduce of the hybrid baseline); output-dim sharding turns it
+        # into one cheap all-gather of y instead (§Perf iteration R2).
+        return tail([None, mp])
+    return [None] * nd                   # norms, biases, conv, gates
+
+
+def _flatten_with_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten_with_paths(v, f"{prefix}.{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten_with_paths(v, f"{prefix}[{i}]")
+    else:
+        yield prefix, tree
+
+
+def param_shardings(mesh: Mesh, params_shape, strategy: str = "tp",
+                    fsdp_axes: Tuple[str, ...] = ()):
+    """Pytree of NamedShardings matching ``params_shape`` (a pytree of
+    ShapeDtypeStructs or arrays).  strategy "pure_dp" replicates all params
+    (grad all-reduce is the only collective).  ``fsdp_axes`` additionally
+    shards each leaf's largest remaining dim over those axes (ZeRO-3-style
+    weight sharding; GSPMD inserts the per-layer gathers)."""
+    def one(path, leaf):
+        spec = [None] * len(leaf.shape) if strategy == "pure_dp" \
+            else _param_spec(path, leaf.shape)
+        p = guarded_spec(mesh, leaf.shape, spec)
+        if fsdp_axes:
+            entries = list(p) + [None] * (len(leaf.shape) - len(p))
+            n = _axis_size(mesh, tuple(a for a in fsdp_axes
+                                       if a in mesh.axis_names))
+            cands = [(d, i) for i, (d, s) in enumerate(
+                zip(leaf.shape, entries)) if s is None and d % n == 0
+                and d >= n and n > 1]
+            if cands:
+                _, i = max(cands)
+                entries[i] = tuple(a for a in fsdp_axes
+                                   if a in mesh.axis_names)
+                p = P(*entries)
+        return NamedSharding(mesh, p)
+
+    flat = dict(_flatten_with_paths(params_shape))
+    specs = {p: one(p, l) for p, l in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}.{k}" if prefix else k)
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [rebuild(v, f"{prefix}[{i}]") for i, v in enumerate(tree)]
+            if hasattr(tree, "_fields"):     # NamedTuple (e.g. AdamWState)
+                return type(tree)(*t)
+            return type(tree)(t)
+        return specs[prefix]
+
+    return rebuild(params_shape)
+
+
+def zero_shardings(mesh: Mesh, params_shape, strategy: str = "tp"):
+    """ZeRO-style optimizer-state sharding: additionally shard the largest
+    remaining unsharded dim over the DP axes when divisible (the classic
+    distributed-optimizer trick; falls back to the param sharding)."""
+    base = param_shardings(mesh, params_shape, strategy=strategy)
+    dp = dp_axes(mesh)
+    dp_n = _axis_size(mesh, dp)
+
+    def one(leaf_shape, sharding: NamedSharding) -> NamedSharding:
+        spec = list(sharding.spec) + [None] * (
+            len(leaf_shape) - len(sharding.spec))
+        if not dp or dp_n <= 1:
+            return sharding
+        # find the largest dim not already sharded that dp divides
+        cands = [(d, i) for i, (d, s) in enumerate(zip(leaf_shape, spec))
+                 if s is None and d % dp_n == 0]
+        if not cands:
+            return sharding
+        _, i = max(cands)
+        spec[i] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(sharding.mesh, P(*spec))
+
+    return jax.tree.map(
+        lambda l, s: one(l.shape, s), params_shape, base,
+        is_leaf=lambda x: hasattr(x, "shape"))

@@ -1,0 +1,164 @@
+"""Mamba-2 (SSD — state-space duality) layer, chunked, pure JAX.
+
+Implements the block-decomposition algorithm of arXiv:2405.21060: within a
+chunk the recurrence is computed as a masked quadratic attention-like
+product (MXU-friendly), across chunks as a linear state recurrence — the
+"dual" form.  Decode is the O(1)-state recurrent step.
+
+The paper-under-reproduction's technique does not apply inside the scan
+(attention-free; no conv-style layout choice) — channel-blocked layouts
+apply to the in/out projections only; see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q, H) log-decay increments -> L[..., i, j, H] = sum_{j<t<=i} a_t
+    for i >= j, -inf otherwise (exp -> lower-triangular decay matrix)."""
+    q = a.shape[-2]
+    cs = jnp.cumsum(a, axis=-2)                       # (..., Q, H)
+    diff = cs[..., :, None, :] - cs[..., None, :, :]  # (..., Q, Q, H)
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask[..., None], diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b_mat: jnp.ndarray, c_mat: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, H, P); dt: (B, T, H); a_log: (H,) [A = -exp(a_log)];
+    b_mat, c_mat: (B, T, N) (single group, broadcast over heads).
+    Returns (y (B, T, H, P), final_state (B, H, P, N))."""
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        # dt=0 padding is exact: zero input contribution, unit decay
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nc = tp // q
+    af = -jnp.exp(a_log.astype(jnp.float32))          # (H,) negative
+
+    xd = (x * dt[..., None]).astype(jnp.float32)      # dt-weighted inputs
+    adt = dt.astype(jnp.float32) * af                 # (B, T, H) log decays
+
+    xc = xd.reshape(bsz, nc, q, h, p)
+    ac = adt.reshape(bsz, nc, q, h)
+    bc = b_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cc = c_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    # 1. intra-chunk: masked quadratic form (the "attention" dual)
+    ell = jnp.exp(_segsum(ac))                        # (B, C, Q, Q, H)
+    y_diag = jnp.einsum("bcin,bcjn,bcijh,bcjhp->bcihp", cc, bc, ell, xc)
+
+    # 2. per-chunk end states
+    cs = jnp.cumsum(ac, axis=2)                       # (B, C, Q, H)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)     # (B, C, Q, H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_to_end, xc)
+
+    # 3. inter-chunk linear recurrence over the C axis
+    chunk_decay = jnp.exp(cs[:, :, -1, :])            # (B, C, H)
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s_prev, inp):
+        dec, snew = inp                                # (B, H), (B, H, P, N)
+        s = s_prev * dec[:, :, None, None] + snew
+        return s, s_prev                               # emit state at chunk START
+
+    dec_t = chunk_decay.transpose(1, 0, 2)             # (C, B, H)
+    st_t = states.transpose(1, 0, 2, 3, 4)             # (C, B, H, P, N)
+    s_last, s_starts = jax.lax.scan(step, s0, (dec_t, st_t))
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)       # (B, C, H, P, N)
+
+    # 4. contribution of the carried-in state to each position
+    decay_from_start = jnp.exp(cs)                     # (B, C, Q, H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, s_starts,
+                       decay_from_start)
+
+    y = (y_diag + y_off).reshape(bsz, tp, h, p)[:, :t]
+    return y.astype(x.dtype), s_last
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                    b_mat: jnp.ndarray, c_mat: jnp.ndarray,
+                    state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent step.  x: (B, H, P); dt: (B, H); b,c: (B, N);
+    state: (B, H, P, N)."""
+    af = -jnp.exp(a_log.astype(jnp.float32))
+    dec = jnp.exp(dt.astype(jnp.float32) * af)        # (B, H)
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    outer = jnp.einsum("bhp,bn->bhpn", xd, b_mat.astype(jnp.float32))
+    new_state = state * dec[:, :, None, None] + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_mat.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (the xBC short conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  conv_state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, C); w: (K, C) depthwise.  Returns (y, new_state) where
+    state carries the trailing K-1 positions for decode continuity."""
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)      # (B, T+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else conv_state
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 layer
+# ---------------------------------------------------------------------------
+
+def mamba2_layer(x: jnp.ndarray, p: Dict, cfg: LMConfig, *,
+                 ssm_state: Optional[jnp.ndarray] = None,
+                 conv_state: Optional[jnp.ndarray] = None,
+                 decode: bool = False):
+    """x: (B, T, d) (T=1 for decode).  Returns (out, (ssm_state, conv_state))."""
+    bsz, t, _ = x.shape
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = cfg.ssm_heads
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x_ssm, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    xh = x_ssm.reshape(bsz, t, nh, hd)
+    if decode:
+        y, new_state = ssd_decode_step(
+            xh[:, 0], dt[:, 0], p["a_log"], b_mat[:, 0], c_mat[:, 0],
+            ssm_state if ssm_state is not None
+            else jnp.zeros((bsz, nh, hd, n), jnp.float32))
+        y = y[:, None]
+    else:
+        y, new_state = ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat,
+                                   cfg.ssm_chunk, init_state=ssm_state)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, t, di)
+    # gated RMSNorm (mamba2's norm_before_gate=False formulation)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * p["norm_w"]
+    return y @ p["out_proj"], (new_state, new_conv)

@@ -1,0 +1,4 @@
+"""Layout-aware layer library (ops) + parameter init."""
+from repro.nn.init import Params, count_params, init_params
+
+__all__ = ["Params", "count_params", "init_params"]

@@ -1,0 +1,59 @@
+"""Parameter initialization for graph models.
+
+Parameters live in the *logical* layouts (KCRS conv weights, per-channel BN
+vectors); the engine pre-transforms them to the planner's physical layouts
+at bind time, mirroring §3.2's compile-time weight transformation.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+
+Params = Dict[str, Dict[str, jnp.ndarray]]
+
+
+def init_params(graph: Graph, input_shapes=None, seed: int = 0,
+                dtype=jnp.float32) -> Params:
+    """He-normal conv/dense weights; BN folded to non-trivial scale/shift so
+    planned-vs-unplanned equivalence tests exercise real numerics."""
+    if input_shapes is not None:
+        graph.infer_shapes(input_shapes)
+    rng = np.random.default_rng(seed)
+    params: Params = {}
+    for node in graph.topo_order():
+        a = node.attrs
+        if node.op == "conv2d":
+            cin = a["in_channels"] // a.get("groups", 1)
+            fan_in = cin * a["kh"] * a["kw"]
+            w = rng.normal(0, np.sqrt(2.0 / fan_in),
+                           size=(a["out_channels"], cin, a["kh"], a["kw"]))
+            p = {"w": jnp.asarray(w, dtype)}
+            if a.get("bias"):
+                p["b"] = jnp.asarray(rng.normal(0, 0.01,
+                                                size=(a["out_channels"],)),
+                                     dtype)
+            params[node.name] = p
+        elif node.op == "batch_norm":
+            c = node.shape[1] if node.shape else a["channels"]
+            params[node.name] = {
+                "scale": jnp.asarray(rng.uniform(0.5, 1.5, size=(c,)), dtype),
+                "shift": jnp.asarray(rng.normal(0, 0.1, size=(c,)), dtype),
+            }
+        elif node.op == "dense":
+            din = graph.nodes[node.inputs[0]].shape[1]
+            w = rng.normal(0, np.sqrt(2.0 / din), size=(din, a["units"]))
+            params[node.name] = {
+                "w": jnp.asarray(w, dtype),
+                "b": jnp.asarray(np.zeros(a["units"]), dtype),
+            }
+    return params
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(v.shape)) for p in params.values()
+               for v in p.values())

@@ -1,0 +1,190 @@
+"""Layout-aware layer implementations.
+
+Every op here runs in whatever physical layout the planner assigned —
+``NCHW`` or ``NCHW[x]c`` — without densifying back to the default layout.
+Spatial dims sit at axes (2, 3) in both layouts, so pooling and padding
+share code; channel-pointwise ops (batch-norm scale/shift) broadcast against
+pre-blocked parameters the engine prepared at bind time (§3.2 weight
+pre-transformation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import Layout, relayout
+from repro.core.schedule import ConvSchedule
+from repro.kernels.ops import conv2d_blocked
+
+
+# ---------------------------------------------------------------------------
+# Convolution
+# ---------------------------------------------------------------------------
+
+def conv2d_nchw_direct(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                       pad=0, groups: int = 1) -> jnp.ndarray:
+    """Unblocked direct conv — the Table 3 row-1 baseline template.  Same
+    loop nest as the blocked kernel but over the raw NCHW layout."""
+    n, c, h, wd = x.shape
+    k, c_per_g, kh, kw = w.shape
+    ph, pw = (pad, pad) if isinstance(pad, int) else tuple(pad)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    oh = (h + 2 * ph - kh) // stride + 1
+    ow = (wd + 2 * pw - kw) // stride + 1
+    kpg = k // groups
+    outs = []
+    for g in range(groups):
+        xg = xp[:, g * c_per_g:(g + 1) * c_per_g]
+        wg = w[g * kpg:(g + 1) * kpg]
+        acc = jnp.zeros((n, kpg, oh, ow), dtype=jnp.float32)
+        for dh in range(kh):
+            for dw in range(kw):
+                patch = xg[:, :, dh:dh + oh * stride:stride,
+                           dw:dw + ow * stride:stride]
+                acc = acc + jnp.einsum(
+                    "nchw,kc->nkhw", patch.astype(jnp.float32),
+                    wg[:, :, dh, dw].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        outs.append(acc)
+    out = outs[0] if groups == 1 else jnp.concatenate(outs, axis=1)
+    return out.astype(x.dtype)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
+           layout: Layout, *, stride: int = 1, pad=0,
+           groups: int = 1, schedule: Optional[ConvSchedule] = None,
+           use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """``w`` (and ``b``) arrive pre-transformed for ``layout``:
+    KCRS for NCHW, KCRS[x]c[y]k for blocked."""
+    if layout.is_blocked:
+        assert groups == 1, "grouped convs run in NCHW"
+        out = conv2d_blocked(x, w, stride=stride, pad=pad, schedule=schedule,
+                             use_pallas=use_pallas, interpret=interpret)
+        if b is not None:   # b pre-shaped (Ko, 1, 1, oc_bn)
+            out = out + b[None]
+    else:
+        out = conv2d_nchw_direct(x, w, stride=stride, pad=pad, groups=groups)
+        if b is not None:   # b pre-shaped (K, 1, 1)
+            out = out + b[None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations (inference-simplified, as TVM's passes do)
+# ---------------------------------------------------------------------------
+
+def batch_norm(x: jnp.ndarray, scale: jnp.ndarray, shift: jnp.ndarray,
+               layout: Layout) -> jnp.ndarray:
+    """Inference BN folded to scale/shift; parameters pre-blocked:
+    NCHW: (C, 1, 1);  NCHW[x]c: (C//x, 1, 1, x)."""
+    return x * scale[None] + shift[None]
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0)
+
+
+def softmax(x: jnp.ndarray, layout: Layout) -> jnp.ndarray:
+    if x.ndim == 2:
+        return jax.nn.softmax(x, axis=-1)
+    if layout.is_blocked:   # joint softmax over (C//x, x)
+        m = x.max(axis=(1, 4), keepdims=True)
+        e = jnp.exp(x - m)
+        return e / e.sum(axis=(1, 4), keepdims=True)
+    m = x.max(axis=1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def l2_normalize(x: jnp.ndarray, layout: Layout, eps: float = 1e-12
+                 ) -> jnp.ndarray:
+    if layout.is_blocked:
+        sq = (x * x).sum(axis=(1, 4), keepdims=True)
+    else:
+        sq = (x * x).sum(axis=1, keepdims=True)
+    return x * jax.lax.rsqrt(sq + eps)
+
+
+# ---------------------------------------------------------------------------
+# Pooling — spatial axes are (2, 3) in both layouts
+# ---------------------------------------------------------------------------
+
+def _pool(x: jnp.ndarray, k: int, stride: int, pad: int, ceil_mode: bool,
+          reducer: str) -> jnp.ndarray:
+    h, w = x.shape[2], x.shape[3]
+    if ceil_mode:
+        oh = -(-(h + 2 * pad - k) // stride) + 1
+        ow = -(-(w + 2 * pad - k) // stride) + 1
+        eh = (oh - 1) * stride + k - h - pad
+        ew = (ow - 1) * stride + k - w - pad
+    else:
+        oh = (h + 2 * pad - k) // stride + 1
+        ow = (w + 2 * pad - k) // stride + 1
+        eh, ew = pad, pad
+    fill = -jnp.inf if reducer == "max" else 0.0
+    widths = [(0, 0)] * x.ndim
+    widths[2] = (pad, max(eh, pad))
+    widths[3] = (pad, max(ew, pad))
+    xp = jnp.pad(x, widths, constant_values=fill)
+    acc = None
+    for dh in range(k):
+        for dw in range(k):
+            sl = [slice(None)] * x.ndim
+            sl[2] = slice(dh, dh + oh * stride, stride)
+            sl[3] = slice(dw, dw + ow * stride, stride)
+            patch = xp[tuple(sl)]
+            if acc is None:
+                acc = patch
+            elif reducer == "max":
+                acc = jnp.maximum(acc, patch)
+            else:
+                acc = acc + patch
+    if reducer == "avg":
+        acc = acc / (k * k)
+    return acc
+
+
+def max_pool(x, k, stride=None, pad=0, ceil_mode=False):
+    return _pool(x, k, stride or k, pad, ceil_mode, "max")
+
+
+def avg_pool(x, k, stride=None, pad=0, ceil_mode=False):
+    return _pool(x, k, stride or k, pad, ceil_mode, "avg")
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return x.mean(axis=(2, 3), keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Structure ops
+# ---------------------------------------------------------------------------
+
+def add(*xs: jnp.ndarray) -> jnp.ndarray:
+    out = xs[0]
+    for x in xs[1:]:
+        out = out + x
+    return out
+
+
+def concat(xs: Sequence[jnp.ndarray], layout: Layout) -> jnp.ndarray:
+    # channel concat: super-channel axis is 1 in NCHW, blocked, and 2-D
+    return jnp.concatenate(xs, axis=1)
+
+
+def flatten(x: jnp.ndarray) -> jnp.ndarray:
+    return x.reshape(x.shape[0], -1)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray]
+          ) -> jnp.ndarray:
+    out = x @ w
+    return out + b[None] if b is not None else out
+
+
+def layout_transform(x: jnp.ndarray, src: Layout, dst: Layout) -> jnp.ndarray:
+    if x.ndim == 2:   # flattened tensors carry the default layout tag only
+        return x
+    return relayout(x, src, dst)

@@ -1,0 +1,4 @@
+"""Optimizers: AdamW (ZeRO-shardable), SGD, LR schedules."""
+from repro.optim.adamw import AdamW, AdamWState, SGD, cosine_lr
+
+__all__ = ["AdamW", "AdamWState", "SGD", "cosine_lr"]

@@ -1,0 +1,11 @@
+"""Fault tolerance + distributed-optimization runtime."""
+from repro.runtime import compression
+from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                           StragglerMitigator,
+                                           StragglerPolicy,
+                                           plan_elastic_mesh,
+                                           rebalanced_batch_split)
+
+__all__ = ["compression", "HeartbeatMonitor", "StragglerMitigator",
+           "StragglerPolicy", "plan_elastic_mesh",
+           "rebalanced_batch_split"]

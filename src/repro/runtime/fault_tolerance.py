@@ -1,0 +1,145 @@
+"""Fault tolerance: heartbeats, failure detection, elastic re-meshing,
+straggler mitigation.
+
+Mechanism (what would run on a 1000+-node fleet):
+
+* every host posts a heartbeat each step; the supervisor declares a host
+  dead after ``timeout_s`` of silence;
+* on failure the supervisor (1) quiesces, (2) computes the largest valid
+  mesh over the survivors, (3) restores the latest checkpoint with the new
+  mesh's shardings (checkpoints are stored unsharded exactly for this),
+  (4) re-slices the deterministic data stream, (5) resumes — the training
+  trajectory is bit-identical to a run that had started on the small mesh
+  at that step;
+* stragglers (step time > factor x median) are first given fewer batch
+  rows (deterministic re-slice), then evicted like failures if they stay
+  slow.
+
+The decision logic is pure and unit-tested; the demo example drives it
+with injected failures on the CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats
+# ---------------------------------------------------------------------------
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[int], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        now = clock()
+        self.last_seen: Dict[int, float] = {h: now for h in hosts}
+        self.dead: set = set()
+
+    def beat(self, host: int) -> None:
+        if host not in self.dead:
+            self.last_seen[host] = self.clock()
+
+    def check(self) -> List[int]:
+        """Returns hosts newly declared dead."""
+        now = self.clock()
+        newly = [h for h, t in self.last_seen.items()
+                 if h not in self.dead and now - t > self.timeout_s]
+        self.dead.update(newly)
+        return newly
+
+    @property
+    def alive(self) -> List[int]:
+        return sorted(h for h in self.last_seen if h not in self.dead)
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh planning
+# ---------------------------------------------------------------------------
+
+def plan_elastic_mesh(n_devices: int, *, model_axis: int,
+                      min_data_axis: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid over the survivors.
+
+    The model axis is preserved if possible (params repartition is the
+    expensive dimension); the data axis absorbs the loss — the classic
+    elasticity policy.  Falls back to shrinking the model axis by factors
+    of 2 when too few devices remain."""
+    m = model_axis
+    while m > 1:
+        d = n_devices // m
+        if d >= min_data_axis and d * m <= n_devices:
+            return d, m
+        m //= 2
+    return max(n_devices, 1), 1
+
+
+def rebalanced_batch_split(global_batch: int, weights: Sequence[float]
+                           ) -> List[int]:
+    """Split a global batch proportionally to per-host speed weights
+    (1/step_time), keeping the total exact — straggler mitigation tier 1."""
+    total_w = sum(weights)
+    raw = [global_batch * w / total_w for w in weights]
+    out = [int(r) for r in raw]
+    rem = global_batch - sum(out)
+    # hand remainders to the fastest hosts
+    order = sorted(range(len(weights)), key=lambda i: -weights[i])
+    for i in range(rem):
+        out[order[i % len(order)]] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    slow_factor: float = 1.5     # step_time > factor x median -> straggler
+    evict_after: int = 3         # consecutive straggler steps -> evict
+    window: int = 5              # smoothing window
+
+
+class StragglerMitigator:
+    def __init__(self, hosts: Sequence[int],
+                 policy: StragglerPolicy = StragglerPolicy()):
+        self.policy = policy
+        self.history: Dict[int, List[float]] = {h: [] for h in hosts}
+        self.strikes: Dict[int, int] = {h: 0 for h in hosts}
+
+    def record(self, times: Dict[int, float]) -> None:
+        for h, t in times.items():
+            hist = self.history.setdefault(h, [])
+            hist.append(t)
+            del hist[:-self.policy.window]
+
+    def _avg(self, h: int) -> float:
+        hist = self.history[h] or [0.0]
+        return sum(hist) / len(hist)
+
+    def stragglers(self) -> List[int]:
+        avgs = {h: self._avg(h) for h in self.history}
+        med = sorted(avgs.values())[len(avgs) // 2]
+        out = []
+        for h, t in avgs.items():
+            if med > 0 and t > self.policy.slow_factor * med:
+                self.strikes[h] = self.strikes.get(h, 0) + 1
+                out.append(h)
+            else:
+                self.strikes[h] = 0
+        return out
+
+    def evictions(self) -> List[int]:
+        return [h for h, s in self.strikes.items()
+                if s >= self.policy.evict_after]
+
+    def batch_weights(self) -> Dict[int, float]:
+        """1/step-time weights for rebalanced_batch_split (tier-1
+        mitigation: slow hosts get proportionally fewer rows)."""
+        return {h: 1.0 / max(self._avg(h), 1e-6) for h in self.history}
+
+    def drop(self, host: int) -> None:
+        self.history.pop(host, None)
+        self.strikes.pop(host, None)

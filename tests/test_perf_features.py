@@ -1,0 +1,155 @@
+"""Perf-iteration features: sharding strategies, microbatching, fused
+gates, remat policies, unroll measurement mode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.launch.dryrun import make_train_step
+from repro.models.lm import (decode_step, forward, init_params, loss_fn,
+                             prefill)
+from repro.models.lm.sharding import _param_spec
+from repro.optim import AdamW
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Param sharding rules (pure pattern logic)
+# ---------------------------------------------------------------------------
+
+def test_param_spec_patterns():
+    assert _param_spec("embed", (1000, 64)) == [None, "model", None][:2] \
+        or _param_spec("embed", (1000, 64))[0] == "model"
+    assert _param_spec("layers.attn.wq", (4, 64, 128))[-1] == "model"
+    assert _param_spec("layers.attn.wo", (4, 128, 64))[-2] == "model"
+    assert _param_spec("layers.moe.experts.wu", (4, 8, 64, 96))[1] == "model"
+    assert _param_spec("layers.mlp.wd", (4, 96, 64))[-2] == "model"
+    # gate weights: OUTPUT dim sharded (the §Perf R2 rule)
+    assert _param_spec("layers_list[0].rec.w_gates", (64, 128))[-1] \
+        == "model"
+    # norms replicated
+    assert _param_spec("final_norm.w", (64,)) == [None]
+
+
+# ---------------------------------------------------------------------------
+# Microbatched gradient accumulation == full-batch step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("micro", [2, 4])
+def test_microbatch_matches_full_batch(micro):
+    """Accumulated microbatch GRADS equal the full-batch grads.  (Post-Adam
+    params are not compared: at step 1 the update is ~sign(g)·lr, which
+    amplifies fp32 reduction-order noise on near-zero grads.)"""
+    cfg = reduced(ARCHS["qwen2-1.5b"])
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (8, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+
+    (l1, _), g_full = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch)
+
+    def split(x):
+        return x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+
+    mb = jax.tree.map(split, batch)
+    g_acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    l_acc = 0.0
+    for i in range(micro):
+        b_i = jax.tree.map(lambda x: x[i], mb)
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, b_i)
+        g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+        l_acc += float(l)
+    assert float(l1) == pytest.approx(l_acc / micro, rel=1e-4)
+    scale = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(g_full)))
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32) / micro,
+            rtol=5e-3, atol=5e-4 * float(scale))
+
+
+# ---------------------------------------------------------------------------
+# Config-variant numerics: fused gates / remat policies / unroll
+# ---------------------------------------------------------------------------
+
+def _decode_consistency(cfg, tol=5e-3):
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    logits, _ = forward(params, cfg, toks)
+    cache, _ = prefill(params, cfg, toks[:, :15], max_len=32)
+    lg, _ = decode_step(params, cfg, toks[:, 15:16], cache, jnp.int32(15))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_gates_decode_consistent():
+    cfg = dataclasses.replace(reduced(ARCHS["recurrentgemma-2b"]),
+                              fused_gates=True)
+    _decode_consistency(cfg)
+
+
+def test_remat_policies_same_loss():
+    base = reduced(ARCHS["qwen2-1.5b"])
+    toks = jax.random.randint(KEY, (2, 16), 0, base.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    losses = []
+    for kw in ({}, {"remat": True}, {"remat": True, "remat_policy": "dots"}):
+        cfg = dataclasses.replace(base, **kw)
+        params = init_params(cfg, KEY)
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch)
+        losses.append(float(l))
+        assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+    assert losses[0] == pytest.approx(losses[1], rel=1e-5)
+    assert losses[0] == pytest.approx(losses[2], rel=1e-5)
+
+
+def test_unroll_layers_same_numerics():
+    base = reduced(ARCHS["stablelm-3b"])
+    cfg_u = dataclasses.replace(base, unroll_layers=True)
+    params = init_params(base, KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, base.vocab)
+    a, _ = forward(params, base, toks)
+    b, _ = forward(params, cfg_u, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_attn_chunk_sizes_same_numerics():
+    base = reduced(ARCHS["yi-9b"])
+    cfg_c = dataclasses.replace(base, attn_q_chunk=4, attn_kv_chunk=8)
+    params = init_params(base, KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, base.vocab)
+    a, _ = forward(params, base, toks)
+    b, _ = forward(params, cfg_c, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssm_chunk_sizes_same_numerics():
+    base = reduced(ARCHS["mamba2-130m"])
+    params = init_params(base, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, base.vocab)
+    a, _ = forward(params, base, toks)
+    for chunk in (4, 16):
+        cfg_c = dataclasses.replace(base, ssm_chunk=chunk)
+        b, _ = forward(params, cfg_c, toks)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_bf16_moments_still_converges():
+    opt = AdamW(lr=0.1, weight_decay=0.0, moment_dtype="bfloat16")
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2

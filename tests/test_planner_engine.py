@@ -1,0 +1,126 @@
+"""Planner passes + engine: semantics preservation across all Table-3 modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.core.planner import MODES, conv_dependencies, plan
+from repro.core.layout import NCHW
+from repro.engine import compile_model
+from repro.nn.init import init_params
+
+
+def _mini_resnet():
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=16, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("bn1", "batch_norm", ["c1"])
+    g.add("r1", "relu", ["bn1"])
+    g.add("mp", "max_pool", ["r1"], k=3, stride=2, pad=1)
+    g.add("c2", "conv2d", ["mp"], in_channels=16, out_channels=32, kh=3,
+          kw=3, pad=1)
+    g.add("c3", "conv2d", ["mp"], in_channels=16, out_channels=32, kh=1,
+          kw=1)
+    g.add("add", "add", ["c2", "c3"])
+    g.add("r2", "relu", ["add"])
+    g.add("c4", "conv2d", ["r2"], in_channels=32, out_channels=32, kh=3,
+          kw=3, pad=1)
+    g.add("gap", "global_avg_pool", ["c4"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=10)
+    g.add("sm", "softmax", ["fc"])
+    g.mark_output("sm")
+    return g, {"in": (2, 3, 32, 32)}
+
+
+def _mini_concat():
+    """Inception-ish: branches with different channel counts concat'd."""
+    g = Graph()
+    g.add("in", "input")
+    g.add("c0", "conv2d", ["in"], in_channels=3, out_channels=16, kh=3,
+          kw=3, pad=1)
+    g.add("b1", "conv2d", ["c0"], in_channels=16, out_channels=8, kh=1,
+          kw=1)
+    g.add("b2", "conv2d", ["c0"], in_channels=16, out_channels=12, kh=3,
+          kw=3, pad=1)
+    g.add("cat", "concat", ["b1", "b2"])
+    g.add("c5", "conv2d", ["cat"], in_channels=20, out_channels=16, kh=1,
+          kw=1)
+    g.add("gap", "global_avg_pool", ["c5"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=4)
+    g.mark_output("fc")
+    return g, {"in": (1, 3, 16, 16)}
+
+
+@pytest.mark.parametrize("builder", [_mini_resnet, _mini_concat])
+def test_all_modes_semantics_preserving(builder, rng):
+    g, shapes = builder()
+    params = init_params(g, shapes, seed=1)
+    x = jnp.asarray(rng.normal(size=shapes[next(iter(shapes))])
+                    .astype(np.float32))
+    ref = None
+    for mode in MODES:
+        m = compile_model(plan(g, shapes, mode=mode), params)
+        out = m.predict(x)
+        if ref is None:
+            ref = out
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_transform_counts_ladder():
+    """Row-2 (around-each-conv) must insert more transforms than rows 3/4."""
+    g, shapes = _mini_resnet()
+    counts = {mode: plan(g, shapes, mode=mode).planned.n_transforms
+              for mode in MODES}
+    assert counts["nchw"] == 0
+    assert counts["layout"] > counts["transform-elim"]
+    assert counts["transform-elim"] >= 2   # entry + exit boundaries only
+
+
+def test_planned_weights_pretransformed():
+    """§3.2: conv weights are blocked once at bind time."""
+    from repro.engine.executor import bind_params
+    g, shapes = _mini_resnet()
+    p = plan(g, shapes, mode="transform-elim")
+    params = init_params(g, shapes, seed=0)
+    bound = bind_params(p, params)
+    s = p.planned.schedules["c2"]
+    assert bound["c2"]["w"].ndim == 6      # KCRS[x]c[y]k
+    assert bound["c2"]["w"].shape[-2:] == (s.ic_bn, s.oc_bn)
+
+
+def test_conv_dependencies_finds_coupling():
+    g, shapes = _mini_resnet()
+    g.infer_shapes(shapes)
+    edges, couplings = conv_dependencies(g)
+    pairs = {(u, v) for u, v, _ in edges}
+    assert ("c1", "c2") in pairs and ("c1", "c3") in pairs
+    assert ("c2", "c4") in pairs and ("c3", "c4") in pairs
+    assert any({a, b} == {"c2", "c3"} for a, b, _ in couplings)
+
+
+def test_layout_dependent_boundary_resets():
+    """flatten/dense force NCHW; no blocked layout crosses them."""
+    g, shapes = _mini_resnet()
+    p = plan(g, shapes, mode="global-search")
+    lay = p.planned.layouts
+    gg = p.planned.graph
+    for node in gg.topo_order():
+        if node.op in ("flatten", "dense"):
+            for i in node.inputs:
+                assert not lay[i].is_blocked
+
+
+def test_pallas_engine_path(rng):
+    g, shapes = _mini_concat()
+    params = init_params(g, shapes, seed=2)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(plan(g, shapes, mode="nchw"), params).predict(x)
+    out = compile_model(plan(g, shapes, mode="global-search"), params,
+                        use_pallas=True, interpret=True).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)

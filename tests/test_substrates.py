@@ -1,0 +1,220 @@
+"""Optimizer, data pipeline, checkpoint store, fault-tolerance runtime."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointStore
+from repro.data import DataConfig, SyntheticLMStream
+from repro.optim import AdamW, SGD, cosine_lr
+from repro.runtime import (HeartbeatMonitor, StragglerMitigator,
+                           StragglerPolicy, compression,
+                           plan_elastic_mesh, rebalanced_batch_split)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_clips_gradients():
+    opt = AdamW(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, m = opt.update({"w": jnp.asarray([100.0, 0, 0])}, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(100.0)
+
+
+def test_cosine_lr_shape():
+    assert float(cosine_lr(0, base=1.0, warmup=10, total=100)) == 0.0
+    assert float(cosine_lr(10, base=1.0, warmup=10, total=100)) \
+        == pytest.approx(1.0)
+    assert float(cosine_lr(100, base=1.0, warmup=10, total=100)) \
+        == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic():
+    dc = DataConfig(global_batch=8, seq_len=16, vocab=100, seed=3)
+    s1 = SyntheticLMStream(dc).global_batch(5)
+    s2 = SyntheticLMStream(dc).global_batch(5)
+    np.testing.assert_array_equal(s1["tokens"], s2["tokens"])
+
+
+def test_data_host_slices_partition():
+    dc = DataConfig(global_batch=8, seq_len=16, vocab=100)
+    stream = SyntheticLMStream(dc)
+    full = stream.global_batch(2)["tokens"]
+    parts = [stream.host_slice(2, i, 4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_data_reshard_consistency():
+    """Elastic re-shard: same step's data under a different host count is
+    the same global batch, just re-sliced."""
+    dc = DataConfig(global_batch=12, seq_len=8, vocab=50)
+    stream = SyntheticLMStream(dc)
+    a = np.concatenate([stream.host_slice(7, i, 4)["tokens"]
+                        for i in range(4)])
+    b = np.concatenate([stream.host_slice(7, i, 3)["tokens"]
+                        for i in range(3)])
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones(4, jnp.int32), jnp.zeros((2, 2))]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    t = _tree()
+    store.save(10, t, meta={"loss": 1.5})
+    out, step, meta = store.restore(t)
+    assert step == 10 and meta["loss"] == 1.5
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_namedtuple_state(tmp_path):
+    opt = AdamW()
+    params = {"w": jnp.ones((3, 2))}
+    state = opt.init(params)
+    store = CheckpointStore(tmp_path)
+    store.save(1, (params, state))
+    (p2, s2), _, _ = store.restore((params, state))
+    assert type(s2).__name__ == "AdamWState"
+    np.testing.assert_array_equal(np.asarray(s2.step), np.asarray(state.step))
+
+
+def test_checkpoint_async_and_prune(tmp_path):
+    store = CheckpointStore(tmp_path)
+    for s in (1, 2, 3, 4):
+        store.save(s, _tree(), blocking=False)
+    store.wait()
+    assert store.steps() == [1, 2, 3, 4]
+    store.prune(keep_last=2)
+    assert store.steps() == [3, 4]
+    assert store.latest_step() == 4
+
+
+def test_resume_bit_identical(tmp_path):
+    """5 steps straight == 3 steps + save/restore + 2 steps."""
+    opt = AdamW(lr=0.05)
+
+    def run(n, params, state, start=0):
+        for i in range(start, n):
+            g = {"w": 2 * params["w"] + i}
+            params, state, _ = opt.update(g, state, params)
+        return params, state
+
+    p0 = {"w": jnp.asarray([1.0, -1.0])}
+    pa, sa = run(5, p0, opt.init(p0))
+
+    pb, sb = run(3, p0, opt.init(p0))
+    store = CheckpointStore(tmp_path)
+    store.save(3, (pb, sb))
+    (pb2, sb2), step, _ = store.restore((pb, sb))
+    pb3, sb3 = run(5, pb2, sb2, start=step)
+    np.testing.assert_array_equal(np.asarray(pa["w"]), np.asarray(pb3["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_failure():
+    t = [0.0]
+    mon = HeartbeatMonitor([0, 1, 2], timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    mon.beat(0)
+    mon.beat(1)
+    t[0] = 12.0
+    assert mon.check() == [2]
+    assert mon.alive == [0, 1]
+    t[0] = 30.0
+    assert sorted(mon.check()) == [0, 1]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 600), m=st.sampled_from([4, 8, 16]))
+def test_elastic_mesh_plan_valid(n, m):
+    d, mm = plan_elastic_mesh(n, model_axis=m)
+    assert d * mm <= max(n, 1) and d >= 1 and mm >= 1
+    assert m % mm == 0       # model axis shrinks by powers of two only
+
+
+def test_elastic_mesh_prefers_model_axis():
+    """Memory-feasibility-first policy: keep the TP width whenever enough
+    devices survive (param fit dominates), shrink it by powers of two —
+    not to 1 — when fewer than model_axis devices remain."""
+    assert plan_elastic_mesh(255, model_axis=16) == (15, 16)
+    assert plan_elastic_mesh(15, model_axis=16) == (1, 8)
+    assert plan_elastic_mesh(512, model_axis=16) == (32, 16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 512), seed=st.integers(0, 99))
+def test_rebalanced_split_exact(b, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 2.0, size=4)
+    parts = rebalanced_batch_split(b, list(w))
+    assert sum(parts) == b and all(p >= 0 for p in parts)
+
+
+def test_straggler_detect_and_evict():
+    mit = StragglerMitigator([0, 1, 2, 3],
+                             StragglerPolicy(slow_factor=1.5, evict_after=2))
+    for _ in range(3):
+        mit.record({0: 1.0, 1: 1.0, 2: 1.0, 3: 5.0})
+        strag = mit.stragglers()
+    assert strag == [3]
+    assert mit.evictions() == [3]
+    w = mit.batch_weights()
+    assert w[3] < w[0]
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_roundtrip_bounded_error():
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=(64, 64)).astype(np.float32))}
+    err = compression.init_error(g)
+    deq, err2 = compression.compress_grads(g, err)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= scale * 0.5 + 1e-6
+    assert compression.compression_ratio(g) > 3.5
+
+
+def test_compression_error_feedback_accumulates():
+    """Error feedback: the sum of dequantized grads over steps converges
+    to the true sum (residual carried, not lost)."""
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32) * 1e-3)}
+    err = compression.init_error(g)
+    total = jnp.zeros(32)
+    for _ in range(50):
+        deq, err = compression.compress_grads(g, err)
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g["w"] * 50),
+                               rtol=0.05, atol=1e-4)
