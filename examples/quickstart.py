@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python examples/quickstart.py [model] [image]
 
-Builds ResNet-18 (default) as a graph, runs NeoCPU's four optimization
-levels (NCHW baseline -> blocked layout -> transform elimination -> global
-search), verifies all four produce identical outputs, and prints the
-planner's predicted v5e latency ladder plus host wall-clock.
+Builds ResNet-18 (default) as a graph, runs NeoCPU's optimization ladder
+(NCHW baseline -> blocked layout -> transform elimination -> global
+search -> operation fusion), verifies every level produces identical
+outputs, and prints the planner's predicted v5e latency ladder plus host
+wall-clock.
 """
 import sys
 import time
@@ -50,7 +51,7 @@ def main():
               f"transforms={p.planned.n_transforms:3d}  solver={solver:10s} "
               f"max|Δ|={err:.1e}")
         assert err < 1e-4, "planned graph must be semantics-preserving"
-    print("all four modes numerically identical — planning is free of "
+    print("all modes numerically identical — planning is free of "
           "semantic drift")
 
 

@@ -115,6 +115,44 @@ def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
 
 
 # ---------------------------------------------------------------------------
+# Epilogue cost (§3.1 operation fusion)
+# ---------------------------------------------------------------------------
+
+def epilogue_bytes(nchw_shape: Tuple[int, ...], *, bn: bool = False,
+                   relu: bool = False, residual: bool = False,
+                   fused: bool = False, dtype_bytes: int = 4) -> int:
+    """HBM traffic for a conv's elementwise epilogue.
+
+    Unfused graphs dispatch BN / residual-add / ReLU as separate nodes, each
+    round-tripping the full conv output through memory (read + write; the add
+    also reads the residual operand).  A fused ``conv_block`` applies the
+    affine/ReLU while the output block is still register/VMEM-resident, so
+    the only epilogue traffic left is the single residual read.
+    """
+    elems = 1
+    for d in nchw_shape:
+        elems *= int(d)
+    tensor = elems * dtype_bytes
+    if fused:
+        return tensor if residual else 0
+    total = 0
+    if bn:
+        total += 2 * tensor
+    if residual:
+        total += 3 * tensor
+    if relu:
+        total += 2 * tensor
+    return total
+
+
+def epilogue_cost_s(nchw_shape: Tuple[int, ...], *, bn: bool = False,
+                    relu: bool = False, residual: bool = False,
+                    fused: bool = False, dtype_bytes: int = 4) -> float:
+    return epilogue_bytes(nchw_shape, bn=bn, relu=relu, residual=residual,
+                          fused=fused, dtype_bytes=dtype_bytes) / HBM_BW
+
+
+# ---------------------------------------------------------------------------
 # Layout-transform cost (graph-edge cost in the global search)
 # ---------------------------------------------------------------------------
 

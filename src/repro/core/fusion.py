@@ -1,0 +1,150 @@
+"""Graph-level operation fusion (NeoCPU §3.1).
+
+The first graph optimization the paper applies before any layout planning:
+CONV followed by cheap elementwise post-processing should execute in one
+pass, so the BN scale/shift, residual add and ReLU happen while the conv's
+output block is still register/VMEM-resident instead of round-tripping each
+intermediate through HBM.
+
+This pass pattern-matches the two epilogue shapes the CNN zoo produces
+
+    conv2d [+bias] -> batch_norm -> relu                 (plain unit)
+    conv2d [+bias] [-> batch_norm] -> add(residual) -> relu   (ResNet tail)
+
+plus every prefix of them (``conv -> bn``, ``conv -> relu``,
+``conv -> add``), and collapses each chain into a single ``conv_block``
+node that carries the conv attributes plus an epilogue description:
+
+    bn_from   name of the absorbed batch_norm (its scale/shift fold into
+              the conv at bind time — §3.2 weight pre-transformation)
+    relu      apply max(x, 0) before the final store
+    inputs    [data] or [data, residual]; the residual is consumed in the
+              conv's *output* layout, which the planner turns into a
+              layout coupling exactly like Elementwise_Add (§3.3.2)
+
+Fusion legality is the classic sole-consumer rule: a node is absorbed only
+if the chain tensor feeding it has no other consumer and is not a graph
+output — a conv feeding two consumers keeps its intermediate materialized
+and must not fuse past the fan-out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.graph import Graph, Node
+
+
+@dataclasses.dataclass
+class FusedChain:
+    """One matched conv epilogue chain (all names refer to the source graph)."""
+
+    conv: str
+    bn: Optional[str] = None
+    residual: Optional[str] = None     # producer of the second add input
+    relu: bool = False
+    absorbed: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def tail(self) -> str:
+        """Last absorbed node — the tensor the block's consumers see."""
+        return self.absorbed[-1]
+
+
+@dataclasses.dataclass
+class FusionReport:
+    n_blocks: int                       # conv_block nodes emitted
+    n_absorbed: int                     # bn/relu/add nodes removed
+    chains: Dict[str, FusedChain]       # conv name -> its chain
+
+
+def _sole_consumer(graph: Graph, succ: Dict[str, List[str]],
+                   outputs: Set[str], name: str) -> Optional[Node]:
+    """The unique consumer of ``name``, or None if the tensor must stay
+    materialized (fan-out > 1, or it is a model output)."""
+    if name in outputs:
+        return None
+    consumers = succ[name]
+    if len(consumers) != 1:
+        return None
+    return graph.nodes[consumers[0]]
+
+
+def _match_chain(graph: Graph, succ: Dict[str, List[str]], outputs: Set[str],
+                 conv: Node, taken: Set[str]) -> Optional[FusedChain]:
+    """Greedy longest match of conv -> [bn] -> [add] -> [relu]."""
+    chain = FusedChain(conv=conv.name)
+    tail = conv.name
+
+    def absorb(node: Node) -> str:
+        chain.absorbed.append(node.name)
+        return node.name
+
+    nxt = _sole_consumer(graph, succ, outputs, tail)
+    if nxt is not None and nxt.op == "batch_norm" and nxt.name not in taken:
+        chain.bn = nxt.name
+        tail = absorb(nxt)
+        nxt = _sole_consumer(graph, succ, outputs, tail)
+    if (nxt is not None and nxt.op == "add" and nxt.name not in taken
+            and len(nxt.inputs) == 2 and tail in nxt.inputs):
+        others = [i for i in nxt.inputs if i != tail]
+        # x + x (both operands the chain tensor) cannot become a residual
+        if len(others) == 1 and others[0] not in chain.absorbed:
+            chain.residual = others[0]
+            tail = absorb(nxt)
+            nxt = _sole_consumer(graph, succ, outputs, tail)
+    if nxt is not None and nxt.op == "relu" and nxt.name not in taken:
+        chain.relu = True
+        absorb(nxt)
+    return chain if chain.absorbed else None
+
+
+def fuse_graph(graph: Graph) -> Tuple[Graph, FusionReport]:
+    """Rewrite ``graph`` with every matched epilogue chain collapsed into a
+    ``conv_block`` node named after its conv (so conv parameters bind under
+    the same key; the absorbed BN's name is kept in ``bn_from``)."""
+    succ = graph.successors()
+    outputs = set(graph.outputs)
+    taken: Set[str] = set()             # absorbed epilogue nodes
+    chains: Dict[str, FusedChain] = {}
+    for node in graph.topo_order():
+        if node.op != "conv2d" or node.attrs.get("groups", 1) != 1:
+            continue
+        chain = _match_chain(graph, succ, outputs, node, taken)
+        if chain is not None:
+            chains[node.name] = chain
+            taken.update(chain.absorbed)
+
+    tail_of = {c.tail: c for c in chains.values()}
+    fused = Graph()
+    mapped: Dict[str, str] = {}
+    for node in graph.topo_order():
+        chain = tail_of.get(node.name)
+        if chain is not None:
+            # the block is emitted at its *tail's* topo position so the
+            # residual producer (an input of the absorbed add) already exists
+            conv = graph.nodes[chain.conv]
+            attrs = dict(conv.attrs)
+            attrs.update(bn_from=chain.bn, relu=chain.relu,
+                         fused_from=tuple(chain.absorbed))
+            inputs = [mapped[conv.inputs[0]]]
+            if chain.residual is not None:
+                inputs.append(mapped[chain.residual])
+            fused.add(conv.name, "conv_block", inputs, **attrs)
+            fused.nodes[conv.name].shape = conv.shape
+            for name in (chain.conv, *chain.absorbed):
+                mapped[name] = conv.name
+        elif node.name in taken or node.name in chains:
+            continue                    # emitted with its chain's tail
+        else:
+            fused.add(node.name, node.op,
+                      [mapped[i] for i in node.inputs], **dict(node.attrs))
+            fused.nodes[node.name].shape = node.shape
+            mapped[node.name] = node.name
+    for o in graph.outputs:
+        fused.mark_output(mapped[o])
+    report = FusionReport(
+        n_blocks=len(chains),
+        n_absorbed=sum(len(c.absorbed) for c in chains.values()),
+        chains=chains)
+    return fused, report

@@ -16,6 +16,9 @@ from repro.core.layout import LayoutCategory
 # op name -> layout category (paper §3.2's three classes)
 OP_CATEGORY: Dict[str, LayoutCategory] = {
     "conv2d": LayoutCategory.TOLERANT,
+    # fused CONV -> BN -> ReLU (-> add) epilogue produced by core.fusion;
+    # layout-tolerant *as a unit* (§3.1 fusion before §3.3 layout planning)
+    "conv_block": LayoutCategory.TOLERANT,
     "batch_norm": LayoutCategory.TOLERANT,
     "max_pool": LayoutCategory.TOLERANT,
     "avg_pool": LayoutCategory.TOLERANT,
@@ -107,7 +110,9 @@ class Graph:
         return succ
 
     def conv_nodes(self) -> List[Node]:
-        return [n for n in self.topo_order() if n.op == "conv2d"]
+        """All schedulable convolutions — plain and fused (conv_block)."""
+        return [n for n in self.topo_order()
+                if n.op in ("conv2d", "conv_block")]
 
     # -- shape inference -----------------------------------------------------
     def infer_shapes(self, input_shapes: Dict[str, Tuple[int, ...]]) -> None:
@@ -133,7 +138,9 @@ def _infer_one(g: Graph, node: Node, input_shapes) -> Tuple[int, ...]:
     a = node.attrs
     if node.op == "input":
         return tuple(input_shapes[node.name])
-    if node.op == "conv2d":
+    if node.op in ("conv2d", "conv_block"):
+        # conv_block: inputs[0] is data; an optional inputs[1] residual has
+        # the output shape and does not change shape inference
         n, c, h, w = ins[0]
         oh, ow = _conv_out_hw(h, w, a["kh"], a["kw"], a.get("stride", 1),
                               a.get("pad", 0), a.get("dilation", 1),

@@ -7,12 +7,18 @@ This is NeoCPU's pipeline assembled: given a model graph, (1) run the
 data-dependency paths that cross only oblivious/tolerant ops — and solve it
 by DP or PBQP, (3) rewrite the graph with ``eliminate_transforms``.
 
-Four modes reproduce Table 3's ablation ladder:
+Five modes extend Table 3's ablation ladder (rows 1-4 are the paper's; the
+fifth stacks §3.1 operation fusion on top of the full pipeline):
 
     "nchw"           row 1 — no blocking (baseline = 1x)
     "layout"         row 2 — blocked CONVs, transforms around each CONV
     "transform-elim" row 3 — one uniform block x, transforms eliminated
     "global-search"  row 4 — per-CONV schemes from the global search
+    "fusion"         row 5 — CONV->BN->ReLU(->add) chains fused into
+                     conv_block epilogues *before* layout planning, then
+                     per-CONV schemes as in row 4; fused blocks are
+                     layout-tolerant as a unit and their residual input
+                     couples to the block's output layout
 """
 from __future__ import annotations
 
@@ -22,7 +28,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import global_search
-from repro.core.cost import transform_cost_s
+from repro.core.cost import epilogue_cost_s, transform_cost_s
+from repro.core.fusion import FusionReport, fuse_graph
 from repro.core.graph import Graph, MULTI_INPUT_SAME_LAYOUT, Node
 from repro.core.layout import LayoutCategory, candidate_blocks, nchwc
 from repro.core.local_search import (LocalSearchResult, Runner,
@@ -30,7 +37,7 @@ from repro.core.local_search import (LocalSearchResult, Runner,
 from repro.core.schedule import ConvSchedule, ConvWorkload
 from repro.core.transform_elim import PlannedGraph, eliminate_transforms
 
-MODES = ("nchw", "layout", "transform-elim", "global-search")
+MODES = ("nchw", "layout", "transform-elim", "global-search", "fusion")
 
 
 def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
@@ -50,10 +57,13 @@ class Plan:
     solution: Optional[global_search.SchemeSolution]
     predicted_conv_s: float
     predicted_transform_s: float
+    predicted_epilogue_s: float = 0.0
+    fusion: Optional[FusionReport] = None
 
     @property
     def predicted_total_s(self) -> float:
-        return self.predicted_conv_s + self.predicted_transform_s
+        return (self.predicted_conv_s + self.predicted_transform_s
+                + self.predicted_epilogue_s)
 
 
 # ---------------------------------------------------------------------------
@@ -74,10 +84,18 @@ def conv_dependencies(graph: Graph):
     for node in graph.topo_order():
         if node.op == "input":
             ancestors[node.name] = frozenset()
-        elif node.op == "conv2d":
+        elif node.op in ("conv2d", "conv_block"):
             feeder = graph.nodes[node.inputs[0]]
             for a in ancestors[feeder.name]:
                 edges.append((a, node.name, feeder.shape))
+            if len(node.inputs) > 1:
+                # fused residual: consumed in this conv's *output* layout, so
+                # the producing conv's oc_bn must match ours — a coupling,
+                # not a normal ic/oc edge (§3.3.2 Elementwise_Add rule)
+                res = graph.nodes[node.inputs[1]]
+                for a in ancestors[res.name]:
+                    if a != node.name:
+                        couplings.append((a, node.name, res.shape))
             ancestors[node.name] = frozenset([node.name])
         elif node.op in MULTI_INPUT_SAME_LAYOUT:
             sets = [ancestors[i] for i in node.inputs]
@@ -189,6 +207,12 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
     if mode not in MODES:
         raise ValueError(f"mode {mode!r} not in {MODES}")
     graph.infer_shapes(input_shapes)
+    fusion_report: Optional[FusionReport] = None
+    if mode == "fusion":
+        # §3.1: fuse epilogues first so each fused block is layout-tolerant
+        # as a unit, then plan layouts exactly as in "global-search"
+        graph, fusion_report = fuse_graph(graph)
+        graph.infer_shapes(input_shapes)
     db = db or ScheduleDatabase()
 
     locals_: Dict[str, LocalSearchResult] = {}
@@ -232,5 +256,29 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
             conv_s += conv_schedule_cost(wl, naive).total_s
     from repro.core.cost import HBM_BW
     tr_s = planned.transform_bytes_total / HBM_BW
+    epi_s = _predicted_epilogue_s(planned.graph)
     return Plan(planned=planned, mode=mode, solution=solution,
-                predicted_conv_s=conv_s, predicted_transform_s=tr_s)
+                predicted_conv_s=conv_s, predicted_transform_s=tr_s,
+                predicted_epilogue_s=epi_s, fusion=fusion_report)
+
+
+def _predicted_epilogue_s(graph: Graph) -> float:
+    """Elementwise-epilogue traffic of the planned graph: standalone BN /
+    ReLU / add nodes each pay full read+write passes; fused conv_block
+    epilogues pay only the residual read (core.cost.epilogue_bytes)."""
+    total = 0.0
+    for node in graph.topo_order():
+        if node.shape is None or len(node.shape) != 4:
+            continue
+        if node.op == "conv_block":
+            total += epilogue_cost_s(
+                node.shape, bn=node.attrs.get("bn_from") is not None,
+                relu=bool(node.attrs.get("relu")),
+                residual=len(node.inputs) > 1, fused=True)
+        elif node.op == "batch_norm":
+            total += epilogue_cost_s(node.shape, bn=True)
+        elif node.op == "relu":
+            total += epilogue_cost_s(node.shape, relu=True)
+        elif node.op == "add":
+            total += epilogue_cost_s(node.shape, residual=True)
+    return total

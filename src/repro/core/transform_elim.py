@@ -85,7 +85,7 @@ class _Rewriter:
             ins = [self.mapped[i] for i in node.inputs]
             if node.op == "input":
                 self._emit(node, [], NCHW)
-            elif node.op == "conv2d":
+            elif node.op in ("conv2d", "conv_block"):
                 self._rewrite_conv(node, ins)
             elif node.op in MULTI_INPUT_SAME_LAYOUT:
                 self._rewrite_multi(node, ins)
@@ -106,19 +106,25 @@ class _Rewriter:
                             transform_bytes_total=self.bytes_moved)
 
     def _rewrite_conv(self, node: Node, ins: List[str]) -> None:
+        # handles conv2d and the fused conv_block; a conv_block's optional
+        # second input (the residual) is added in the conv's *output* layout,
+        # because the fused add happens after the channel contraction
         sched = self.schedules.get(node.name)
         if sched is None:  # NCHW-baseline mode: no blocking at all
-            ins = [self._ensure(ins[0], NCHW)]
+            ins = [self._ensure(i, NCHW) for i in ins]
             self._emit(node, ins, NCHW)
             return
         want_in = nchwc(sched.ic_bn)
+        want_out = nchwc(sched.oc_bn)
         if self.around:
             # Table 3 row 2: transform in, compute blocked, transform out
-            ins = [self._ensure(ins[0], NCHW)]
-            ins = [self._ensure(ins[0], want_in)]
+            data = self._ensure(self._ensure(ins[0], NCHW), want_in)
         else:
-            ins = [self._ensure(ins[0], want_in)]
-        new = self._emit(node, ins, nchwc(sched.oc_bn))
+            data = self._ensure(ins[0], want_in)
+        new_ins = [data]
+        if len(ins) > 1:
+            new_ins.append(self._ensure(ins[1], want_out))
+        new = self._emit(node, new_ins, want_out)
         if self.around:
             back = self._ensure(new, NCHW)
             self.mapped[node.name] = back

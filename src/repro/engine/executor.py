@@ -3,14 +3,30 @@
 Binding a ``Plan`` to parameters performs §3.2's compile-time weight
 transformation once — conv kernels to ``KCRS[x]c[y]k``, BN vectors to the
 blocked broadcast shape — then the forward pass executes the rewritten
-graph with zero runtime weight relayouts.  The forward function is jitted
-with the (pre-transformed) params as a traced argument, so weight updates
-don't recompile.
+graph with zero runtime weight relayouts.  For fused ``conv_block`` nodes
+(§3.1 operation fusion) binding also folds the absorbed BatchNorm into the
+conv: the scale multiplies the kernel's output channels and the shift
+becomes the block's bias-like epilogue vector, so the fused kernel runs a
+pure conv + shift + (residual) + ReLU epilogue.  The forward function is
+jitted with the (pre-transformed) params as a traced argument, so weight
+updates don't recompile.
+
+Two dispatch modes:
+
+* ``"whole"`` (default) — one ``jax.jit`` over the full graph walk; XLA
+  sees the entire model.
+* ``"op"``    — classic graph-runtime dispatch: every node is its own
+  jitted executable and intermediates materialize between nodes, the
+  execution model of the paper's TVM/MXNet baselines.  This is the mode
+  where graph-level fusion is measured (benchmarks/fusion_ablation.py):
+  a fused plan dispatches one kernel where the unfused plan dispatches
+  conv + BN + add + ReLU.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+import functools
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +45,67 @@ def _block_channel_vec(v: jnp.ndarray, layout: Layout) -> jnp.ndarray:
     return v[:, None, None]                                # (C, 1, 1)
 
 
-def bind_params(plan: Plan, params: Params) -> Params:
+def _bind_conv_block(plan: Plan, node, params: Params,
+                     fold_bn: bool) -> Dict[str, jnp.ndarray]:
+    """Fused-block binding: conv weight/bias under the block's own name,
+    the absorbed BN's scale/shift under ``attrs["bn_from"]``.  With
+    ``fold_bn`` (the default — conv weights are static at bind time) the
+    scale is multiplied into the kernel's output channels and only the
+    shift survives as an epilogue vector."""
+    p_conv = params[node.name]
+    w = p_conv["w"]
+    scale: Optional[jnp.ndarray] = None
+    shift: Optional[jnp.ndarray] = None
+    if "b" in p_conv:
+        shift = p_conv["b"].astype(jnp.float32)
+    bn_from = node.attrs.get("bn_from")
+    if bn_from is not None:
+        p_bn = params[bn_from]
+        s = p_bn["scale"].astype(jnp.float32)
+        t = p_bn["shift"].astype(jnp.float32)
+        # bn(conv(x) + b) = conv(x) * s + (b * s + t)
+        shift = t if shift is None else shift * s + t
+        scale = s
+    if fold_bn and scale is not None:
+        w = (w.astype(jnp.float32)
+             * scale[:, None, None, None]).astype(w.dtype)
+        scale = None
+
+    lay = plan.planned.layouts[node.name]
+    sched = plan.planned.schedules.get(node.name)
+    q: Dict[str, jnp.ndarray] = {}
+    if sched is not None and lay.is_blocked:
+        q["w"] = kernel_to_kcrs_ck(w, sched.ic_bn, sched.oc_bn)
+
+        def blk(v):
+            return v.reshape(v.shape[0] // sched.oc_bn, sched.oc_bn)
+    else:
+        q["w"] = w
+
+        def blk(v):
+            return v[:, None, None]
+    if scale is not None:
+        q["scale"] = blk(scale)
+    if shift is not None:
+        q["shift"] = blk(shift)
+    return q
+
+
+def bind_params(plan: Plan, params: Params, fold_bn: bool = True) -> Params:
     """Pre-transform logical parameters to the plan's physical layouts."""
     g = plan.planned.graph
     out: Params = {}
+    consumed = set()
+    for node in g.topo_order():
+        if node.op != "conv_block":
+            continue
+        out[node.name] = _bind_conv_block(plan, node, params, fold_bn)
+        consumed.add(node.name)
+        if node.attrs.get("bn_from") is not None:
+            consumed.add(node.attrs["bn_from"])
     for name, p in params.items():
+        if name in consumed:
+            continue
         node = g.nodes.get(name)
         if node is None:       # node was renamed/removed by the rewrite
             out[name] = dict(p)
@@ -58,6 +130,64 @@ def bind_params(plan: Plan, params: Params) -> Params:
     return out
 
 
+def _eval_node(node, lay: Layout, schedule, use_pallas: bool,
+               interpret: bool, p: Dict[str, jnp.ndarray],
+               *ins: jnp.ndarray) -> jnp.ndarray:
+    """One graph node on already-computed inputs — shared by both dispatch
+    modes (the whole-graph jit and the per-node graph-runtime path)."""
+    a = node.attrs
+    if node.op == "conv2d":
+        ph = a.get("pad", 0)
+        pw = a.get("pad_w", -1)
+        return ops.conv2d(
+            ins[0], p["w"], p.get("b"), lay,
+            stride=a.get("stride", 1),
+            pad=ph if pw < 0 else (ph, pw),
+            groups=a.get("groups", 1),
+            schedule=schedule,
+            use_pallas=use_pallas, interpret=interpret)
+    if node.op == "conv_block":
+        ph = a.get("pad", 0)
+        pw = a.get("pad_w", -1)
+        return ops.conv_block(
+            ins[0], p["w"], p.get("scale"), p.get("shift"),
+            ins[1] if len(ins) > 1 else None, lay,
+            stride=a.get("stride", 1),
+            pad=ph if pw < 0 else (ph, pw),
+            groups=a.get("groups", 1), relu=bool(a.get("relu")),
+            schedule=schedule,
+            use_pallas=use_pallas, interpret=interpret)
+    if node.op == "batch_norm":
+        return ops.batch_norm(ins[0], p["scale"], p["shift"], lay)
+    if node.op == "relu":
+        return ops.relu(ins[0])
+    if node.op == "softmax":
+        return ops.softmax(ins[0], lay)
+    if node.op == "l2_normalize":
+        return ops.l2_normalize(ins[0], lay)
+    if node.op == "max_pool":
+        return ops.max_pool(ins[0], a["k"], a.get("stride", a["k"]),
+                            a.get("pad", 0), a.get("ceil_mode", False))
+    if node.op == "avg_pool":
+        return ops.avg_pool(ins[0], a["k"], a.get("stride", a["k"]),
+                            a.get("pad", 0), a.get("ceil_mode", False))
+    if node.op == "global_avg_pool":
+        return ops.global_avg_pool(ins[0])
+    if node.op == "add":
+        return ops.add(*ins)
+    if node.op == "concat":
+        return ops.concat(list(ins), lay)
+    if node.op == "flatten":
+        return ops.flatten(ins[0])
+    if node.op == "reshape":
+        return ins[0].reshape(a["shape"])
+    if node.op == "dense":
+        return ops.dense(ins[0], p["w"], p.get("b"))
+    if node.op == "layout_transform":
+        return ops.layout_transform(ins[0], a["src_layout"], a["dst_layout"])
+    raise NotImplementedError(node.op)
+
+
 @dataclasses.dataclass
 class CompiledModel:
     """Callable end-to-end executable for one plan."""
@@ -66,68 +196,38 @@ class CompiledModel:
     params: Params               # pre-transformed (bind_params output)
     use_pallas: bool = False
     interpret: bool = True
+    dispatch: str = "whole"      # "whole" (one jit) | "op" (per-node jit)
 
     def __post_init__(self):
         structure = self.plan.planned
         use_pallas, interpret = self.use_pallas, self.interpret
+        topo = structure.graph.topo_order()
+
+        if self.dispatch not in ("whole", "op"):
+            raise ValueError(f"unknown dispatch mode {self.dispatch!r}")
+        fns = {n.name: functools.partial(
+                   _eval_node, n, structure.layouts[n.name],
+                   structure.schedules.get(n.name), use_pallas, interpret)
+               for n in topo if n.op != "input"}
+        if self.dispatch == "op":
+            # graph-runtime dispatch: one XLA executable per node, compiled
+            # once, intermediates materialized between dispatches
+            fns = {name: jax.jit(f) for name, f in fns.items()}
 
         def forward(params: Params, inputs: Dict[str, jnp.ndarray]):
             env: Dict[str, jnp.ndarray] = {}
-            for node in structure.graph.topo_order():
-                a = node.attrs
-                lay = structure.layouts[node.name]
-                ins = [env[i] for i in node.inputs]
-                p = params.get(node.name, {})
+            for node in topo:
                 if node.op == "input":
                     env[node.name] = inputs[node.name]
-                elif node.op == "conv2d":
-                    ph = a.get("pad", 0)
-                    pw = a.get("pad_w", -1)
-                    env[node.name] = ops.conv2d(
-                        ins[0], p["w"], p.get("b"), lay,
-                        stride=a.get("stride", 1),
-                        pad=ph if pw < 0 else (ph, pw),
-                        groups=a.get("groups", 1),
-                        schedule=structure.schedules.get(node.name),
-                        use_pallas=use_pallas, interpret=interpret)
-                elif node.op == "batch_norm":
-                    env[node.name] = ops.batch_norm(ins[0], p["scale"],
-                                                    p["shift"], lay)
-                elif node.op == "relu":
-                    env[node.name] = ops.relu(ins[0])
-                elif node.op == "softmax":
-                    env[node.name] = ops.softmax(ins[0], lay)
-                elif node.op == "l2_normalize":
-                    env[node.name] = ops.l2_normalize(ins[0], lay)
-                elif node.op == "max_pool":
-                    env[node.name] = ops.max_pool(
-                        ins[0], a["k"], a.get("stride", a["k"]),
-                        a.get("pad", 0), a.get("ceil_mode", False))
-                elif node.op == "avg_pool":
-                    env[node.name] = ops.avg_pool(
-                        ins[0], a["k"], a.get("stride", a["k"]),
-                        a.get("pad", 0), a.get("ceil_mode", False))
-                elif node.op == "global_avg_pool":
-                    env[node.name] = ops.global_avg_pool(ins[0])
-                elif node.op == "add":
-                    env[node.name] = ops.add(*ins)
-                elif node.op == "concat":
-                    env[node.name] = ops.concat(ins, lay)
-                elif node.op == "flatten":
-                    env[node.name] = ops.flatten(ins[0])
-                elif node.op == "reshape":
-                    env[node.name] = ins[0].reshape(a["shape"])
-                elif node.op == "dense":
-                    env[node.name] = ops.dense(ins[0], p["w"], p.get("b"))
-                elif node.op == "layout_transform":
-                    env[node.name] = ops.layout_transform(
-                        ins[0], a["src_layout"], a["dst_layout"])
-                else:
-                    raise NotImplementedError(node.op)
+                    continue
+                env[node.name] = fns[node.name](
+                    params.get(node.name, {}),
+                    *[env[i] for i in node.inputs])
             outs = [env[o] for o in structure.graph.outputs]
             return outs[0] if len(outs) == 1 else tuple(outs)
 
-        self._forward = jax.jit(forward)
+        self._forward = jax.jit(forward) if self.dispatch == "whole" \
+            else forward
 
     def __call__(self, inputs: Dict[str, jnp.ndarray]):
         return self._forward(self.params, inputs)
@@ -140,7 +240,8 @@ class CompiledModel:
 
 
 def compile_model(plan: Plan, params: Params, use_pallas: bool = False,
-                  interpret: bool = True) -> CompiledModel:
-    bound = bind_params(plan, params)
+                  interpret: bool = True, fold_bn: bool = True,
+                  dispatch: str = "whole") -> CompiledModel:
+    bound = bind_params(plan, params, fold_bn=fold_bn)
     return CompiledModel(plan=plan, params=bound, use_pallas=use_pallas,
-                         interpret=interpret)
+                         interpret=interpret, dispatch=dispatch)

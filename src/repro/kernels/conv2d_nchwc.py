@@ -27,13 +27,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.schedule import ConvSchedule
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, stride: int, kh: int, kw: int,
-                 oh_bn: int, ow_bn: int, ow: int, unroll_ker: bool):
+def _conv_kernel(x_ref, w_ref, *rest, stride: int, kh: int, kw: int,
+                 oh_bn: int, ow_bn: int, ow: int, unroll_ker: bool,
+                 has_scale: bool, has_shift: bool, has_residual: bool,
+                 relu: bool):
+    refs = list(rest)
+    o_ref = refs.pop()
+    scale_ref = refs.pop(0) if has_scale else None
+    shift_ref = refs.pop(0) if has_shift else None
+    res_ref = refs.pop(0) if has_residual else None
     ci = pl.program_id(3)
     ohb = pl.program_id(2)
 
@@ -79,16 +86,44 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, stride: int, kh: int, kw: int,
             acc = jax.lax.fori_loop(0, kh * kw, body, out_row)
         o_ref[0, 0, dh] = acc
 
+    if has_scale or has_shift or has_residual or relu:
+        # §3.1 fused epilogue: on the last reduction step — while the output
+        # block is still VMEM-resident — apply the per-channel affine, the
+        # residual add, and ReLU before the block is ever stored to HBM
+        @pl.when(ci == pl.num_programs(3) - 1)
+        def _epilogue():
+            acc = o_ref[...]                       # (1, 1, oh_bn, OW, oc_bn)
+            if has_scale:
+                acc = acc * scale_ref[...][None, None, None]   # (1, oc_bn)
+            if has_shift:
+                acc = acc + shift_ref[...][None, None, None]
+            if has_residual:
+                acc = acc + res_ref[...].astype(jnp.float32)
+            if relu:
+                acc = jnp.maximum(acc, 0.0)
+            o_ref[...] = acc
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "schedule", "interpret"))
+    static_argnames=("stride", "schedule", "relu", "interpret"))
 def conv2d_nchwc_pallas(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                        scale: jnp.ndarray | None = None,
+                        shift: jnp.ndarray | None = None,
+                        residual: jnp.ndarray | None = None,
                         *, stride: int = 1,
                         schedule: ConvSchedule,
+                        relu: bool = False,
                         interpret: bool = True) -> jnp.ndarray:
     """Blocked conv via pallas_call.  ``x_blocked`` must already be padded:
-    (N, C_in//ic_bn, H_pad, W_pad, ic_bn); weights (Ko, Ci, KH, KW, ic, oc)."""
+    (N, C_in//ic_bn, H_pad, W_pad, ic_bn); weights (Ko, Ci, KH, KW, ic, oc).
+
+    The optional fused epilogue (core.fusion's conv_block) applies
+    ``out * scale + shift`` (per-channel vectors pre-blocked to
+    ``(Ko, oc_bn)``), adds a ``residual`` in the output's own blocked
+    layout, and clamps with ReLU — all on the last reduction step, before
+    the fp32 accumulator leaves VMEM.
+    """
     n, ci_chunks, h_pad, w_pad, ic_bn = x_blocked.shape
     ko_chunks, ci_chunks_w, kh, kw, ic_bn_w, oc_bn = w_blocked.shape
     assert (ci_chunks, ic_bn) == (ci_chunks_w, ic_bn_w), "layout mismatch"
@@ -101,23 +136,38 @@ def conv2d_nchwc_pallas(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
     grid = (n, ko_chunks, oh // oh_bn, ci_chunks)
     kernel = functools.partial(
         _conv_kernel, stride=stride, kh=kh, kw=kw, oh_bn=oh_bn,
-        ow_bn=ow_bn, ow=ow, unroll_ker=schedule.unroll_ker)
+        ow_bn=ow_bn, ow=ow, unroll_ker=schedule.unroll_ker,
+        has_scale=scale is not None, has_shift=shift is not None,
+        has_residual=residual is not None, relu=relu)
+    in_specs = [
+        pl.BlockSpec((1, 1, h_pad, w_pad, ic_bn),
+                     lambda b, k, o, c: (b, c, 0, 0, 0)),
+        pl.BlockSpec((1, 1, kh, kw, ic_bn, oc_bn),
+                     lambda b, k, o, c: (k, c, 0, 0, 0, 0)),
+    ]
+    operands = [x_blocked, w_blocked]
+    for vec in (scale, shift):
+        if vec is not None:
+            assert vec.shape == (ko_chunks, oc_bn), (vec.shape, w_blocked.shape)
+            in_specs.append(pl.BlockSpec((1, oc_bn),
+                                         lambda b, k, o, c: (k, 0)))
+            operands.append(vec.astype(jnp.float32))
+    if residual is not None:
+        assert residual.shape == (n, ko_chunks, oh, ow, oc_bn), residual.shape
+        in_specs.append(pl.BlockSpec((1, 1, oh_bn, ow, oc_bn),
+                                     lambda b, k, o, c: (b, k, o, 0, 0)))
+        operands.append(residual)
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, h_pad, w_pad, ic_bn),
-                         lambda b, k, o, c: (b, c, 0, 0, 0)),
-            pl.BlockSpec((1, 1, kh, kw, ic_bn, oc_bn),
-                         lambda b, k, o, c: (k, c, 0, 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, oh_bn, ow, oc_bn),
                                lambda b, k, o, c: (b, k, o, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(
             (n, ko_chunks, oh, ow, oc_bn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x_blocked, w_blocked)
+    )(*operands)
     return out.astype(x_blocked.dtype)

@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -74,7 +75,7 @@ def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((s.bm, s.bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

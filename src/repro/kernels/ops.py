@@ -34,29 +34,82 @@ def pad_blocked(x_blocked: jnp.ndarray, pad) -> jnp.ndarray:
     return jnp.pad(x_blocked, ((0, 0), (0, 0), (ph, ph), (pw, pw), (0, 0)))
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad"))
-def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
-                     stride: int = 1, pad=0) -> jnp.ndarray:
-    """Blocked direct conv as XLA ops — the template's jnp instantiation.
+def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
+                       stride: int, pad, relu: bool) -> jnp.ndarray:
+    """Blocked direct conv + optional fused epilogue as XLA ops — the
+    template's jnp instantiation.
 
     out[n,ko,oh,ow,oc] = sum_{ci,kh,kw,ic} x[n,ci,oh*s+kh,ow*s+kw,ic]
                                            * w[ko,ci,kh,kw,ic,oc]
+
+    then (fused, still in the fp32 accumulator — XLA folds these into the
+    final accumulation pass instead of separate full-tensor round trips):
+    ``out = relu(out * scale + shift + residual)``.
     """
     xp = pad_blocked(x_blocked, pad)
     n, ci, hp, wp, ic_bn = xp.shape
     ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
     oh = (hp - kh) // stride + 1
     ow = (wp - kw) // stride + 1
-    acc = jnp.zeros((n, ko, oh, ow, oc_bn), dtype=jnp.float32)
-    for dh in range(kh):
-        for dw in range(kw):
-            patch = xp[:, :, dh:dh + oh * stride:stride,
-                       dw:dw + ow * stride:stride, :]
-            acc = acc + jnp.einsum(
-                "nchwi,kcio->nkhwo", patch.astype(jnp.float32),
-                w_blocked[:, :, dh, dw].astype(jnp.float32),
-                preferred_element_type=jnp.float32)
+    # Accumulate in the dot-natural (n, oh, ow, ko, oc) order — the einsum's
+    # M dims (n, h, w) stay adjacent to its N dims (k, o), so XLA emits the
+    # GEMM with no per-tap transpose; one transpose back to the blocked
+    # NCHW[x]c order happens after the last tap (1.3-2.3x on ResNet bodies).
+    if ic_bn < 8:
+        # sub-sublane contraction (e.g. the RGB stem, ic_bn=3): per-tap
+        # micro-GEMMs with K=ic_bn degenerate on any backend, so stack the
+        # kh*kw taps into one contraction of size kh*kw*ic_bn instead —
+        # ~40x on the ResNet stem here.  For ic_bn >= 8 the per-tap loop
+        # wins because stacking materializes the input kh*kw times.
+        taps = jnp.stack(
+            [xp[:, :, dh:dh + oh * stride:stride,
+                dw:dw + ow * stride:stride, :]
+             for dh in range(kh) for dw in range(kw)],
+            axis=2)                                  # (n, ci, t, oh, ow, ic)
+        wt = w_blocked.reshape(ko, ci_w, kh * kw, ic_w, oc_bn)
+        acc = jnp.einsum(
+            "ncthwi,kctio->nhwko", taps.astype(jnp.float32),
+            wt.astype(jnp.float32), preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.zeros((n, oh, ow, ko, oc_bn), dtype=jnp.float32)
+        for dh in range(kh):
+            for dw in range(kw):
+                patch = xp[:, :, dh:dh + oh * stride:stride,
+                           dw:dw + ow * stride:stride, :]
+                acc = acc + jnp.einsum(
+                    "nchwi,kcio->nhwko", patch.astype(jnp.float32),
+                    w_blocked[:, :, dh, dw].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    acc = acc.transpose(0, 3, 1, 2, 4)               # -> (n, ko, oh, ow, oc)
+    if scale is not None:   # (Ko, oc_bn) per-channel affine
+        acc = acc * scale.astype(jnp.float32)[None, :, None, None, :]
+    if shift is not None:
+        acc = acc + shift.astype(jnp.float32)[None, :, None, None, :]
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
     return acc.astype(x_blocked.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                     stride: int = 1, pad=0) -> jnp.ndarray:
+    """Plain blocked conv (no epilogue) — see ``_conv2d_block_core``."""
+    return _conv2d_block_core(x_blocked, w_blocked, None, None, None,
+                              stride, pad, False)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "relu"))
+def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                     scale: jnp.ndarray | None = None,
+                     shift: jnp.ndarray | None = None,
+                     residual: jnp.ndarray | None = None,
+                     stride: int = 1, pad=0,
+                     relu: bool = False) -> jnp.ndarray:
+    """Fused CONV->affine(->add)->ReLU block — see ``_conv2d_block_core``."""
+    return _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
+                              stride, pad, relu)
 
 
 def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
@@ -71,6 +124,27 @@ def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
         return conv2d_nchwc_pallas(xp, w_blocked, stride=stride,
                                    schedule=schedule, interpret=interpret)
     return conv2d_nchwc_jnp(x_blocked, w_blocked, stride=stride, pad=pad)
+
+
+def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
+                         scale: jnp.ndarray | None = None,
+                         shift: jnp.ndarray | None = None,
+                         residual: jnp.ndarray | None = None, *,
+                         stride: int = 1, pad=0, relu: bool = False,
+                         schedule: ConvSchedule | None = None,
+                         use_pallas: bool = False,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Fused conv_block entry on blocked tensors (engine-facing).  ``scale``
+    and ``shift`` are per-channel vectors pre-blocked to ``(Ko, oc_bn)``;
+    ``residual`` arrives in the output's own NCHW[oc_bn]c layout."""
+    if use_pallas:
+        assert schedule is not None
+        xp = pad_blocked(x_blocked, pad)
+        return conv2d_nchwc_pallas(xp, w_blocked, scale, shift, residual,
+                                   stride=stride, schedule=schedule,
+                                   relu=relu, interpret=interpret)
+    return conv2d_block_jnp(x_blocked, w_blocked, scale, shift, residual,
+                            stride=stride, pad=pad, relu=relu)
 
 
 def conv2d(x_nchw: jnp.ndarray, w_kcrs: jnp.ndarray, *, stride: int = 1,

@@ -1,0 +1,10 @@
+"""Compatibility shims for the Pallas TPU API surface.
+
+jax >= 0.4.34 renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``; every kernel imports the resolved class from
+here so the next rename is a one-line fix.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

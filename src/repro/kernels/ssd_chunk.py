@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
 
 
 def _ssd_intra_kernel(cc_ref, bc_ref, acum_ref, x_ref, o_ref):
@@ -62,7 +63,7 @@ def ssd_intra_pallas(cc: jnp.ndarray, bc: jnp.ndarray, acum: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bcn, h, q, p), xd.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(cc, bc, acum, xd)

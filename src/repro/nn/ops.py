@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.layout import Layout, relayout
 from repro.core.schedule import ConvSchedule
-from repro.kernels.ops import conv2d_blocked
+from repro.kernels.ops import conv2d_block_blocked, conv2d_blocked
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +69,36 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
         if b is not None:   # b pre-shaped (K, 1, 1)
             out = out + b[None]
     return out
+
+
+def conv_block(x: jnp.ndarray, w: jnp.ndarray,
+               scale: Optional[jnp.ndarray], shift: Optional[jnp.ndarray],
+               residual: Optional[jnp.ndarray], layout: Layout, *,
+               stride: int = 1, pad=0, groups: int = 1, relu: bool = False,
+               schedule: Optional[ConvSchedule] = None,
+               use_pallas: bool = False,
+               interpret: bool = True) -> jnp.ndarray:
+    """Fused CONV -> per-channel affine (-> residual add) -> ReLU (§3.1
+    operation fusion).  ``w`` arrives pre-transformed for ``layout`` with BN
+    scale usually pre-folded in (then ``scale`` is None); ``scale``/``shift``
+    are pre-blocked per-channel vectors — ``(Ko, oc_bn)`` blocked,
+    ``(C, 1, 1)`` in NCHW — and ``residual`` is in the output layout."""
+    if layout.is_blocked:
+        assert groups == 1, "grouped convs run in NCHW"
+        return conv2d_block_blocked(
+            x, w, scale, shift, residual, stride=stride, pad=pad, relu=relu,
+            schedule=schedule, use_pallas=use_pallas, interpret=interpret)
+    out = conv2d_nchw_direct(x, w, stride=stride, pad=pad,
+                             groups=groups).astype(jnp.float32)
+    if scale is not None:
+        out = out * scale[None]
+    if shift is not None:
+        out = out + shift[None]
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

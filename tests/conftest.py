@@ -5,6 +5,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: slow Pallas interpret-mode tests "
+        "(deselect with -m 'not slow')")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

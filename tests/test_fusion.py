@@ -1,0 +1,233 @@
+"""Graph-level operation fusion (§3.1): pattern matcher, BN folding,
+fused-vs-unfused numerical equivalence on both execution paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost import epilogue_bytes
+from repro.core.fusion import fuse_graph
+from repro.core.graph import Graph
+from repro.core.planner import MODES, plan
+from repro.engine import compile_model
+from repro.nn.init import init_params
+
+
+def _resnet_block_graph():
+    """conv->bn->relu stem, then a residual unit with downsample branch."""
+    g = Graph()
+    g.add("in", "input")
+    g.add("stem", "conv2d", ["in"], in_channels=3, out_channels=16,
+          kh=3, kw=3, stride=1, pad=1)
+    g.add("stem_bn", "batch_norm", ["stem"])
+    g.add("stem_relu", "relu", ["stem_bn"])
+    g.add("a", "conv2d", ["stem_relu"], in_channels=16, out_channels=32,
+          kh=3, kw=3, stride=2, pad=1)
+    g.add("a_bn", "batch_norm", ["a"])
+    g.add("a_relu", "relu", ["a_bn"])
+    g.add("b", "conv2d", ["a_relu"], in_channels=32, out_channels=32,
+          kh=3, kw=3, pad=1)
+    g.add("b_bn", "batch_norm", ["b"])
+    g.add("ds", "conv2d", ["stem_relu"], in_channels=16, out_channels=32,
+          kh=1, kw=1, stride=2)
+    g.add("ds_bn", "batch_norm", ["ds"])
+    g.add("add", "add", ["b_bn", "ds_bn"])
+    g.add("out", "relu", ["add"])
+    g.add("gap", "global_avg_pool", ["out"])
+    g.mark_output("gap")
+    return g, {"in": (1, 3, 16, 16)}
+
+
+def _densenet_block_graph():
+    """Pre-activation layers: fusion crosses the conv -> next-bn boundary."""
+    g = Graph()
+    g.add("in", "input")
+    g.add("stem", "conv2d", ["in"], in_channels=3, out_channels=16,
+          kh=3, kw=3, pad=1)
+    g.add("stem_bn", "batch_norm", ["stem"])
+    g.add("stem_relu", "relu", ["stem_bn"])
+    y = "stem_relu"
+    c = 16
+    for i in range(2):
+        g.add(f"l{i}_conv1", "conv2d", [y], in_channels=c, out_channels=32,
+              kh=1, kw=1)
+        g.add(f"l{i}_bn", "batch_norm", [f"l{i}_conv1"])
+        g.add(f"l{i}_relu", "relu", [f"l{i}_bn"])
+        g.add(f"l{i}_conv2", "conv2d", [f"l{i}_relu"], in_channels=32,
+              out_channels=8, kh=3, kw=3, pad=1)
+        g.add(f"l{i}_cat", "concat", [y, f"l{i}_conv2"])
+        y = f"l{i}_cat"
+        c += 8
+    g.add("gap", "global_avg_pool", [y])
+    g.mark_output("gap")
+    return g, {"in": (1, 3, 8, 8)}
+
+
+# ---------------------------------------------------------------------------
+# Pattern matcher
+# ---------------------------------------------------------------------------
+
+def test_matches_bn_relu_and_residual_tail():
+    g, shapes = _resnet_block_graph()
+    g.infer_shapes(shapes)
+    fused, report = fuse_graph(g)
+    assert report.n_blocks == 4
+    assert fused.nodes["stem"].op == "conv_block"
+    assert fused.nodes["stem"].attrs["bn_from"] == "stem_bn"
+    assert fused.nodes["stem"].attrs["relu"] is True
+    # the main branch absorbs bn + add + relu; the residual is the ds block
+    blk = fused.nodes["b"]
+    assert blk.op == "conv_block"
+    assert blk.inputs == ["a", "ds"]
+    assert blk.attrs["fused_from"] == ("b_bn", "add", "out")
+    # the downsample branch keeps its bn but no relu and no residual
+    ds = fused.nodes["ds"]
+    assert ds.attrs["bn_from"] == "ds_bn"
+    assert ds.attrs["relu"] is False and len(ds.inputs) == 1
+    # all absorbed elementwise nodes are gone
+    for name in ("stem_bn", "stem_relu", "b_bn", "add", "out", "ds_bn"):
+        assert name not in fused.nodes
+
+
+def test_conv_with_fanout_does_not_fuse():
+    """A conv feeding two consumers keeps its output materialized."""
+    g = Graph()
+    g.add("in", "input")
+    g.add("c", "conv2d", ["in"], in_channels=3, out_channels=8, kh=1, kw=1)
+    g.add("bn", "batch_norm", ["c"])      # consumer 1
+    g.add("r", "relu", ["c"])             # consumer 2
+    g.add("add", "add", ["bn", "r"])
+    g.mark_output("add")
+    fused, report = fuse_graph(g)
+    assert report.n_blocks == 0
+    assert fused.nodes["c"].op == "conv2d"
+    assert set(fused.nodes) == set(g.nodes)
+
+
+def test_graph_output_is_not_absorbed_as_intermediate():
+    """A chain must stop before absorbing past a model output."""
+    g = Graph()
+    g.add("in", "input")
+    g.add("c", "conv2d", ["in"], in_channels=3, out_channels=8, kh=1, kw=1)
+    g.add("bn", "batch_norm", ["c"])
+    g.add("r", "relu", ["bn"])
+    g.mark_output("bn")                   # bn's tensor must stay observable
+    g.mark_output("r")
+    fused, report = fuse_graph(g)
+    # conv->bn fuses (bn is the tail, its tensor IS the block output), but
+    # relu cannot be absorbed past an output boundary
+    assert fused.nodes["c"].attrs["fused_from"] == ("bn",)
+    assert "r" in fused.nodes
+    assert fused.outputs == ["c", "r"]
+
+
+def test_fusion_preserves_shapes_and_topo():
+    g, shapes = _resnet_block_graph()
+    g.infer_shapes(shapes)
+    fused, _ = fuse_graph(g)
+    fused.infer_shapes(shapes)
+    for node in fused.topo_order():
+        if node.op == "conv_block":
+            assert node.shape == g.nodes[node.name].shape
+
+
+# ---------------------------------------------------------------------------
+# Numerical equivalence: fused vs unfused, both execution paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("builder", [_resnet_block_graph,
+                                     _densenet_block_graph])
+def test_fused_matches_unfused_jnp(builder, rng):
+    g, shapes = builder()
+    params = init_params(g, shapes, seed=3)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(plan(g, shapes, mode="global-search"),
+                        params).predict(x)
+    p = plan(g, shapes, mode="fusion")
+    assert p.fusion is not None and p.fusion.n_blocks > 0
+    out = compile_model(p, params).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # unfolded-BN variant exercises the in-kernel scale path
+    out_nf = compile_model(p, params, fold_bn=False).predict(x)
+    np.testing.assert_allclose(np.asarray(out_nf), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("builder", [_resnet_block_graph,
+                                     _densenet_block_graph])
+def test_fused_matches_unfused_pallas_interpret(builder, rng):
+    g, shapes = builder()
+    params = init_params(g, shapes, seed=4)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(plan(g, shapes, mode="nchw"), params).predict(x)
+    p = plan(g, shapes, mode="fusion")
+    out = compile_model(p, params, use_pallas=True,
+                        interpret=True).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_op_dispatch_matches_whole_jit(rng):
+    g, shapes = _resnet_block_graph()
+    params = init_params(g, shapes, seed=5)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    p = plan(g, shapes, mode="fusion")
+    whole = compile_model(p, params).predict(x)
+    per_op = compile_model(p, params, dispatch="op").predict(x)
+    np.testing.assert_allclose(np.asarray(per_op), np.asarray(whole),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Planner + cost integration
+# ---------------------------------------------------------------------------
+
+def test_fusion_mode_in_ablation_ladder():
+    assert MODES[-1] == "fusion"
+
+
+def test_fused_epilogue_stops_charging_elementwise_bytes():
+    shape = (1, 64, 28, 28)
+    unfused = (epilogue_bytes(shape, bn=True)
+               + epilogue_bytes(shape, relu=True)
+               + epilogue_bytes(shape, residual=True))
+    fused = epilogue_bytes(shape, bn=True, relu=True, residual=True,
+                           fused=True)
+    assert fused == 64 * 28 * 28 * 4          # only the residual read
+    assert unfused == 7 * 64 * 28 * 28 * 4    # 2 + 3 + 2 full passes
+
+
+def test_plan_predicts_lower_epilogue_cost_when_fused():
+    g, shapes = _resnet_block_graph()
+    unfused = plan(g, shapes, mode="global-search")
+    fused = plan(g, shapes, mode="fusion")
+    assert fused.predicted_epilogue_s < unfused.predicted_epilogue_s
+    assert fused.predicted_total_s < unfused.predicted_total_s
+
+
+def test_residual_creates_layout_coupling():
+    """The fused residual input couples the two producing convs' output
+    layouts, exactly like the unfused Elementwise_Add rule."""
+    from repro.core.planner import conv_dependencies
+    g, shapes = _resnet_block_graph()
+    g.infer_shapes(shapes)
+    fused, _ = fuse_graph(g)
+    fused.infer_shapes(shapes)
+    _, couplings = conv_dependencies(fused)
+    assert any({a, b} == {"b", "ds"} for a, b, _ in couplings)
+
+
+def test_bind_params_folds_bn_into_weights():
+    g, shapes = _resnet_block_graph()
+    params = init_params(g, shapes, seed=6)
+    p = plan(g, shapes, mode="fusion")
+    from repro.engine.executor import bind_params
+    bound = bind_params(p, params)
+    blk = bound["stem"]
+    assert "scale" not in blk             # folded into w
+    assert "shift" in blk                 # survives as the epilogue vector
+    assert blk["w"].ndim == 6             # KCRS[x]c[y]k
+    assert "stem_bn" not in bound         # absorbed, not re-bound
+    unfolded = bind_params(p, params, fold_bn=False)
+    assert "scale" in unfolded["stem"]

@@ -115,6 +115,7 @@ def test_layout_dependent_boundary_resets():
                 assert not lay[i].is_blocked
 
 
+@pytest.mark.slow
 def test_pallas_engine_path(rng):
     g, shapes = _mini_concat()
     params = init_params(g, shapes, seed=2)

@@ -1,6 +1,7 @@
 """The two-stage scheme search: local (3.3.1), global DP/PBQP (3.3.2)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import global_search, pbqp
