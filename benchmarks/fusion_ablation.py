@@ -16,41 +16,24 @@ Both plans are executed in both engine dispatch modes:
               BN/ReLU/add and a full round trip through memory;
 * ``whole`` — one jit over the model, XLA free to fuse across nodes.
 
-Measurement is interleaved A/B (alternating unfused/fused calls each round)
-with the median reported, so slow drifts on a shared host hit both variants
-equally.  Emits ``BENCH_fusion.json``.
+Measurement rides on ``benchmarks/harness.py`` — warmup-phase detection +
+interleaved paired A/B medians — the same methodology as
+``BENCH_variants.json``.  Emits ``BENCH_fusion.json``.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import statistics
-import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from common import _DB  # shared ScheduleDatabase
+from harness import measure_paired
 from repro.core.planner import plan
 from repro.engine import compile_model
 from repro.models.cnn import build
 from repro.nn.init import init_params
-
-
-def _interleaved_ms(fns, repeats: int) -> list:
-    """(median, min) ms per fn, measured in alternating rounds so slow
-    phases of a shared host hit every variant equally."""
-    for f in fns:                       # compile + warm
-        jax.block_until_ready(f())
-        jax.block_until_ready(f())
-    samples = [[] for _ in fns]
-    for _ in range(repeats):
-        for i, f in enumerate(fns):
-            t0 = time.perf_counter()
-            jax.block_until_ready(f())
-            samples[i].append((time.perf_counter() - t0) * 1e3)
-    return [(statistics.median(s), min(s)) for s in samples]
 
 
 def run(model: str, batch: int, image: int, repeats: int) -> dict:
@@ -72,17 +55,17 @@ def run(model: str, batch: int, image: int, repeats: int) -> dict:
     for dispatch in ("op", "whole"):
         mu = compile_model(unfused, params, dispatch=dispatch)
         mf = compile_model(fused, params, dispatch=dispatch)
-        (tu, tu_min), (tf, tf_min) = _interleaved_ms(
-            [lambda: mu.predict(x), lambda: mf.predict(x)], repeats)
+        t_u, t_f = measure_paired(
+            [lambda: mu.predict(x), lambda: mf.predict(x)], repeats=repeats)
         key = "op_dispatch" if dispatch == "op" else "whole_jit"
-        result[key] = {"unfused_ms": round(tu, 3), "fused_ms": round(tf, 3),
-                       "unfused_min_ms": round(tu_min, 3),
-                       "fused_min_ms": round(tf_min, 3),
-                       "speedup": round(tu / tf, 3),
-                       "speedup_min": round(tu_min / tf_min, 3)}
+        result[key] = {"unfused": t_u.to_json(), "fused": t_f.to_json(),
+                       "speedup": round(t_u.median_ms / t_f.median_ms, 3),
+                       "speedup_min": round(t_u.min_ms / t_f.min_ms, 3)}
         print(f"{model} b{batch} i{image} {dispatch:5s}: "
-              f"unfused {tu:.2f}ms fused {tf:.2f}ms "
-              f"speedup {tu / tf:.3f}x (min-based {tu_min / tf_min:.3f}x)")
+              f"unfused {t_u.median_ms:.2f}ms fused {t_f.median_ms:.2f}ms "
+              f"speedup {t_u.median_ms / t_f.median_ms:.3f}x "
+              f"(min-based {t_u.min_ms / t_f.min_ms:.3f}x, "
+              f"warmup {t_u.warmup_rounds} rounds)")
     return result
 
 

@@ -1,0 +1,103 @@
+"""Shared measurement harness for every BENCH_* artifact.
+
+This host is a shared 2-vCPU box with pronounced *phase noise*: multi-second
+stretches where a neighbor tenant (or the first touch of a freshly compiled
+executable) inflates wall-clock by 2-5x, then releases.  Two defenses, used
+together by every benchmark:
+
+* **warmup-phase detection** — before recording anything, run alternating
+  rounds until each variant's rolling-window median stabilizes (successive
+  windows within ``tol`` of each other).  This absorbs both compile/first-
+  touch effects and a noisy phase at benchmark start, instead of guessing a
+  fixed warmup count.
+* **interleaved paired A/B sampling** — all variants are timed round-robin
+  within each round, so a slow phase in the middle of the run hits every
+  variant equally and the reported *medians* stay comparable.
+
+``measure_paired`` is the one entry point; ``Timing`` is what it returns
+per variant.  ``benchmarks/fusion_ablation.py`` and
+``benchmarks/template_variants.py`` both ride on it, so ``BENCH_fusion.json``
+and ``BENCH_variants.json`` share one methodology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, List, Sequence
+
+import jax
+
+
+def _time_one_ms(fn: Callable) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) * 1e3
+
+
+@dataclasses.dataclass
+class Timing:
+    """Per-variant result of one paired measurement."""
+
+    median_ms: float
+    min_ms: float
+    mean_ms: float
+    n_samples: int
+    warmup_rounds: int       # rounds consumed by phase detection
+    samples_ms: List[float] = dataclasses.field(default_factory=list)
+
+    def to_json(self, with_samples: bool = False) -> dict:
+        out = {"median_ms": round(self.median_ms, 3),
+               "min_ms": round(self.min_ms, 3),
+               "mean_ms": round(self.mean_ms, 3),
+               "n_samples": self.n_samples,
+               "warmup_rounds": self.warmup_rounds}
+        if with_samples:
+            out["samples_ms"] = [round(s, 3) for s in self.samples_ms]
+        return out
+
+
+def warmed_up(history: Sequence[Sequence[float]], window: int,
+              tol: float) -> bool:
+    """True when every variant's last-``window`` median is within ``tol``
+    (relative) of the preceding window's median — i.e. the run has left the
+    warmup/noise phase and entered a stable one."""
+    for h in history:
+        if len(h) < 2 * window:
+            return False
+        cur = statistics.median(h[-window:])
+        prev = statistics.median(h[-2 * window:-window])
+        if abs(cur - prev) > tol * max(prev, 1e-9):
+            return False
+    return True
+
+
+def measure_paired(fns: Sequence[Callable], repeats: int = 30,
+                   window: int = 3, tol: float = 0.10,
+                   max_warmup_rounds: int = 12) -> List[Timing]:
+    """Interleaved paired medians with warmup-phase detection.
+
+    ``fns`` are zero-arg callables returning a jax value (blocked on via
+    ``jax.block_until_ready``).  Each round times every fn once, in order;
+    recording starts only once ``warmed_up`` says the phase is stable (or
+    ``max_warmup_rounds`` is exhausted — noisy hosts must not stall the
+    benchmark forever).
+    """
+    for f in fns:                       # compile + first touch
+        jax.block_until_ready(f())
+    history: List[List[float]] = [[] for _ in fns]
+    rounds = 0
+    while rounds < max_warmup_rounds:
+        for i, f in enumerate(fns):
+            history[i].append(_time_one_ms(f))
+        rounds += 1
+        if warmed_up(history, window, tol):
+            break
+    samples: List[List[float]] = [[] for _ in fns]
+    for _ in range(repeats):
+        for i, f in enumerate(fns):
+            samples[i].append(_time_one_ms(f))
+    return [Timing(median_ms=statistics.median(s), min_ms=min(s),
+                   mean_ms=statistics.fmean(s), n_samples=len(s),
+                   warmup_rounds=rounds, samples_ms=s)
+            for s in samples]

@@ -84,15 +84,41 @@ def conv_vmem_bytes(wl: ConvWorkload, s: ConvSchedule) -> int:
 
 def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
                        dtype_peak: float = PEAK_FLOPS_FP32) -> CostBreakdown:
-    """Roofline estimate for one CONV executed under schedule ``s``."""
+    """Roofline estimate for one CONV executed under schedule ``s``.
+
+    The lowering ``variant`` changes both terms:
+
+    * compute — the stacked variants (tap_stack, patch_gemm) contract the
+      full ``kh*kw*ic_bn`` reduction in one GEMM, so their K dim pads much
+      better than per-tap micro-GEMMs when ``ic_bn`` is sub-sublane;
+      patch_gemm additionally flattens M to ``n*oh*ow`` (no ow_bn padding).
+    * memory — per_tap round-trips the fp32 accumulator between taps;
+      tap_stack/patch_gemm materialize the input ``kh*kw`` times (write +
+      GEMM read); scan carries the accumulator in the loop but copies a
+      strided window per tap.
+
+    The workload's fused-epilogue flags add the §3.1 epilogue traffic here,
+    so the local search ranks schedules *with* their epilogue included
+    (fused: only the residual read survives — everything else happens while
+    the accumulator is still register/VMEM-resident).
+    """
     oh, ow = wl.out_hw
     cin = wl.in_channels // wl.groups
-    util = mxu_utilization(s.ow_bn, s.ic_bn, s.oc_bn)
+    khkw = wl.kh * wl.kw
+    variant = s.resolved_variant()
+    if variant in ("tap_stack", "patch_gemm"):
+        # one contraction over the stacked kh*kw*ic reduction
+        util = mxu_utilization(
+            wl.batch * oh * ow if variant == "patch_gemm" else s.ow_bn,
+            khkw * s.ic_bn, s.oc_bn)
+    else:
+        util = mxu_utilization(s.ow_bn, s.ic_bn, s.oc_bn)
     # unrolling the (kh, kw) loops trims scalar-loop overhead; model it as a
     # small utilization bonus that decays for large kernels (paper: "in some
-    # scenarios unrolling may increase the performance").
-    if s.unroll_ker:
-        util = min(1.0, util * (1.0 + 0.05 / max(1, wl.kh * wl.kw / 9)))
+    # scenarios unrolling may increase the performance").  scan keeps the
+    # tap loop rolled, so it forfeits the bonus.
+    if s.unroll_ker and variant != "scan":
+        util = min(1.0, util * (1.0 + 0.05 / max(1, khkw / 9)))
     compute_s = wl.flops / (dtype_peak * max(util, 1e-3))
 
     b = wl.dtype_bytes
@@ -102,11 +128,36 @@ def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
     # extra input-channel pass for accumulation).
     oc_chunks = wl.out_channels // s.oc_bn
     ic_chunks = cin // s.ic_bn
-    input_bytes = wl.batch * cin * wl.height * wl.width * b * oc_chunks
+    input_once = wl.batch * cin * wl.height * wl.width * b
+    input_bytes = input_once * oc_chunks
     weight_bytes = (wl.out_channels * cin * wl.kh * wl.kw * b) * wl.batch
     output_bytes = wl.batch * wl.out_channels * oh * ow * b * (
         1 + max(0, ic_chunks - 1))
-    memory_s = (input_bytes + weight_bytes + output_bytes) / HBM_BW
+    # variant-specific traffic (fp32 accumulator is 4 bytes/elem); one tap's
+    # strided patch holds oh*ow spatial positions — input_once/stride^2 on
+    # downsample convs, not the full-resolution slab
+    acc_bytes = wl.batch * wl.out_channels * oh * ow * 4
+    tap_once = wl.batch * cin * oh * ow * b
+    if variant == "per_tap":
+        # the accumulator materializes between taps: one read + one write
+        # per extra tap
+        variant_bytes = 2 * max(0, khkw - 1) * acc_bytes
+    elif variant == "scan":
+        # accumulator is loop-carried (aliased in place); each tap copies a
+        # strided window of the input slab out of the padded tensor
+        variant_bytes = 2 * khkw * tap_once
+    elif variant == "tap_stack":
+        # the stacked tap tensor is written once and read once by the GEMM
+        variant_bytes = 2 * khkw * tap_once
+    else:  # patch_gemm
+        # stacked taps + the explicit panel transpose pass
+        variant_bytes = 3 * khkw * tap_once
+    epi_bytes = epilogue_bytes(
+        (wl.batch, wl.out_channels, oh, ow), bn=wl.fused_bn,
+        relu=wl.fused_relu, residual=wl.fused_residual, fused=True,
+        dtype_bytes=b)
+    memory_s = (input_bytes + weight_bytes + output_bytes + variant_bytes
+                + epi_bytes) / HBM_BW
 
     # schedules that spill VMEM pay a heavy penalty (they would thrash HBM)
     if conv_vmem_bytes(wl, s) > VMEM_BYTES:

@@ -32,23 +32,43 @@ def roofline_runner(wl: ConvWorkload, s: ConvSchedule) -> float:
 
 
 def measured_runner(wl: ConvWorkload, s: ConvSchedule, repeats: int = 3) -> float:
-    """Paper §3.3.1 step 4: run multiple times and average to cancel OS noise."""
+    """Paper §3.3.1 step 4: run multiple times and average to cancel OS noise.
+
+    Instantiates the schedule's lowering ``variant``, and — when the
+    workload carries fused-epilogue flags — the fused ``conv_block`` jnp
+    template, so the measurement ranks exactly what the engine will run."""
     import numpy as np
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.ops import conv2d_nchwc_jnp
+    from repro.kernels.ops import conv2d_block_jnp, conv2d_nchwc_jnp
     from repro.core.layout import kernel_to_kcrs_ck, to_nchwc
 
     rng = np.random.default_rng(0)
     cin = wl.in_channels // wl.groups
+    pad = wl.pad if wl.pad_w < 0 else (wl.pad, wl.pw)
     x = jnp.asarray(rng.normal(size=(wl.batch, cin, wl.height, wl.width))
                     .astype(np.float32))
     w = jnp.asarray(rng.normal(
         size=(wl.out_channels, cin, wl.kh, wl.kw)).astype(np.float32))
     xb = to_nchwc(x, s.ic_bn)
     wb = kernel_to_kcrs_ck(w, s.ic_bn, s.oc_bn)
-    f = lambda: conv2d_nchwc_jnp(xb, wb, stride=wl.stride, pad=wl.pad)
+    fused = wl.fused_bn or wl.fused_relu or wl.fused_residual
+    if fused:
+        oh, ow = wl.out_hw
+        ko = wl.out_channels // s.oc_bn
+        shift = jnp.asarray(rng.normal(size=(ko, s.oc_bn)).astype(np.float32))
+        residual = None
+        if wl.fused_residual:
+            residual = jnp.asarray(rng.normal(
+                size=(wl.batch, ko, oh, ow, s.oc_bn)).astype(np.float32))
+        f = lambda: conv2d_block_jnp(
+            xb, wb, None, shift if wl.fused_bn else None, residual,
+            stride=wl.stride, pad=pad, relu=wl.fused_relu,
+            variant=s.variant)
+    else:
+        f = lambda: conv2d_nchwc_jnp(xb, wb, stride=wl.stride, pad=pad,
+                                     variant=s.variant)
     f()  # compile
     jax.block_until_ready(f())
     t0 = time.perf_counter()
@@ -65,10 +85,19 @@ class RankedSchedule:
 
 @dataclasses.dataclass
 class LocalSearchResult:
-    """Ascending-cost list of schedules for one workload (§3.3.1 step 4)."""
+    """Ascending-cost list of schedules for one workload (§3.3.1 step 4).
+
+    ``measured`` distinguishes wall-clock rankings from analytical
+    (roofline) ones: costs live on different clocks (host seconds vs v5e
+    roofline seconds) and only measured entries may satisfy a
+    ``search_measured`` request.  ``search_budget`` records the
+    (top_k, per_variant) a measured ranking was produced with, so a
+    shallow (smoke) entry does not satisfy a deeper request."""
 
     workload: ConvWorkload
     ranked: List[RankedSchedule]
+    measured: bool = False
+    search_budget: Tuple[int, int] = (0, 0)
 
     @property
     def best(self) -> ConvSchedule:
@@ -93,7 +122,7 @@ class LocalSearchResult:
 
 
 def local_search(wl: ConvWorkload, runner: Runner = roofline_runner,
-                 max_candidates: int = 64) -> LocalSearchResult:
+                 max_candidates: int = 0) -> LocalSearchResult:
     cands = candidate_schedules(wl, max_candidates=max_candidates)
     scored = [RankedSchedule(s, runner(wl, s)) for s in cands]
     scored.sort(key=lambda r: (r.cost_s, r.schedule))
@@ -101,15 +130,51 @@ def local_search(wl: ConvWorkload, runner: Runner = roofline_runner,
 
 
 def guided_local_search(wl: ConvWorkload, top_k: int = 6,
-                        max_candidates: int = 64) -> LocalSearchResult:
+                        max_candidates: int = 0,
+                        per_variant: int = 2,
+                        repeats: int = 3) -> LocalSearchResult:
     """The paper's measure-on-target methodology, made affordable: the
     roofline model prunes the space, wall-clock measurement ranks the
-    survivors.  Used by the --measured benchmarks on this host CPU."""
+    survivors.  Used by the --measured benchmarks on this host CPU.
+
+    The shortlist is the roofline top-``top_k`` *plus* the best
+    ``per_variant`` candidates of every lowering variant, so a variant the
+    analytical model underrates still gets measured — the whole point of
+    the variant axis is that the measurement, not the model, picks it.
+    Candidates are deduped by ``(ic_bn, oc_bn, variant)``: the jnp template
+    the measurement runs ignores ow_bn/oh_bn/unroll_ker, so tuples that
+    differ only there are the same computation and would waste both a
+    measurement and a shortlist slot."""
+    from repro.core.schedule import VARIANTS
+
     pruned = local_search(wl, roofline_runner, max_candidates)
-    short = [r.schedule for r in pruned.ranked[:top_k]]
-    scored = [RankedSchedule(s, measured_runner(wl, s)) for s in short]
+    short: List[ConvSchedule] = []
+    seen = set()
+
+    def _add(s: ConvSchedule) -> bool:
+        key = (s.ic_bn, s.oc_bn, s.resolved_variant())
+        if key in seen:
+            return False
+        seen.add(key)
+        short.append(s)
+        return True
+
+    for r in pruned.ranked:
+        if len(short) >= top_k:
+            break
+        _add(r.schedule)
+    for variant in VARIANTS:
+        n_have = sum(1 for s in short if s.resolved_variant() == variant)
+        for r in pruned.ranked:
+            if n_have >= per_variant:
+                break
+            if r.schedule.resolved_variant() == variant and _add(r.schedule):
+                n_have += 1
+    scored = [RankedSchedule(s, measured_runner(wl, s, repeats=repeats))
+              for s in short]
     scored.sort(key=lambda r: (r.cost_s, r.schedule))
-    return LocalSearchResult(workload=wl, ranked=scored)
+    return LocalSearchResult(workload=wl, ranked=scored, measured=True,
+                             search_budget=(top_k, per_variant))
 
 
 # ---------------------------------------------------------------------------
@@ -118,12 +183,28 @@ def guided_local_search(wl: ConvWorkload, top_k: int = 6,
 # ---------------------------------------------------------------------------
 
 def _wl_key(wl: ConvWorkload) -> str:
-    return (f"n{wl.batch}_c{wl.in_channels}_k{wl.out_channels}"
-            f"_h{wl.height}_w{wl.width}_r{wl.kh}s{wl.kw}"
-            f"_st{wl.stride}_p{wl.pad}_g{wl.groups}")
+    key = (f"n{wl.batch}_c{wl.in_channels}_k{wl.out_channels}"
+           f"_h{wl.height}_w{wl.width}_r{wl.kh}s{wl.kw}"
+           f"_st{wl.stride}_p{wl.pad}_g{wl.groups}")
+    if wl.pad_w >= 0:
+        key += f"_pw{wl.pad_w}"
+    # fused conv_blocks search a different space than the plain conv of the
+    # same geometry (their cost includes the epilogue) — key them apart
+    epi = "".join(c for c, on in (("b", wl.fused_bn), ("r", wl.fused_relu),
+                                  ("a", wl.fused_residual)) if on)
+    return key + (f"_e{epi}" if epi else "")
 
 
 class ScheduleDatabase:
+    """Workload-keyed memo of search results, optionally JSON-persisted.
+
+    Persistence caveat: every insert rewrites the whole blob, and an
+    *analytical* entry carries the full candidate ranking (~2k tuples per
+    workload since the enumeration cap was lifted).  Path-backed databases
+    are meant for *measured* results (short shortlists); give purely
+    analytical searches an in-memory database (the default) unless you
+    want the multi-MB file."""
+
     def __init__(self, path: Optional[Path] = None) -> None:
         self.path = Path(path) if path else None
         self._mem: Dict[str, LocalSearchResult] = {}
@@ -131,7 +212,7 @@ class ScheduleDatabase:
             self._load()
 
     def search(self, wl: ConvWorkload, runner: Runner = roofline_runner,
-               max_candidates: int = 64) -> LocalSearchResult:
+               max_candidates: int = 0) -> LocalSearchResult:
         key = _wl_key(wl)
         if key not in self._mem:
             self._mem[key] = local_search(wl, runner, max_candidates)
@@ -139,12 +220,43 @@ class ScheduleDatabase:
                 self._save()
         return self._mem[key]
 
+    def search_measured(self, wl: ConvWorkload, top_k: int = 6,
+                        per_variant: int = 2,
+                        repeats: int = 3) -> LocalSearchResult:
+        """Memoized guided (roofline-pruned, wall-clock-ranked) search.  A
+        database pre-populated through this method hands the planner measured
+        ``(variant, blocking)`` winners — ``plan(db=...)`` reuses the entry
+        instead of re-searching with the analytical runner.  An existing
+        entry under the same key does not satisfy the request if it is
+        *analytical* (roofline costs masquerading as measured ms corrupted
+        winners otherwise) or was measured with a *shallower* budget (a
+        smoke-run database must not silently cap a full search)."""
+        key = _wl_key(wl)
+        have = self._mem.get(key)
+        if (have is None or not have.measured
+                or have.search_budget[0] < top_k
+                or have.search_budget[1] < per_variant):
+            self._mem[key] = guided_local_search(
+                wl, top_k=top_k, per_variant=per_variant, repeats=repeats)
+            if self.path:
+                self._save()
+        return self._mem[key]
+
+    def put(self, wl: ConvWorkload, result: LocalSearchResult) -> None:
+        """Install an externally produced ranking (e.g. a measured result
+        filtered to one variant) under the workload's key."""
+        self._mem[_wl_key(wl)] = result
+        if self.path:
+            self._save()
+
     # -- persistence ---------------------------------------------------------
     def _save(self) -> None:
         blob = {}
         for key, res in self._mem.items():
             blob[key] = {
                 "workload": dataclasses.asdict(res.workload),
+                "measured": res.measured,
+                "search_budget": list(res.search_budget),
                 "ranked": [
                     {"schedule": dataclasses.asdict(r.schedule),
                      "cost_s": r.cost_s} for r in res.ranked],
@@ -158,7 +270,10 @@ class ScheduleDatabase:
             wl = ConvWorkload(**rec["workload"])
             ranked = [RankedSchedule(ConvSchedule(**r["schedule"]), r["cost_s"])
                       for r in rec["ranked"]]
-            self._mem[key] = LocalSearchResult(workload=wl, ranked=ranked)
+            self._mem[key] = LocalSearchResult(
+                workload=wl, ranked=ranked,
+                measured=rec.get("measured", False),
+                search_budget=tuple(rec.get("search_budget", (0, 0))))
 
     def __len__(self) -> int:
         return len(self._mem)

@@ -43,11 +43,18 @@ MODES = ("nchw", "layout", "transform-elim", "global-search", "fusion")
 def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
     a = node.attrs
     n, c, h, w = in_shape
+    fused = node.op == "conv_block"
     return ConvWorkload(
         batch=n, in_channels=c, out_channels=a["out_channels"],
         height=h, width=w, kh=a["kh"], kw=a["kw"],
         stride=a.get("stride", 1), pad=a.get("pad", 0),
-        groups=a.get("groups", 1), pad_w=a.get("pad_w", -1))
+        groups=a.get("groups", 1), pad_w=a.get("pad_w", -1),
+        # fused conv_block: the epilogue is part of the schedule's cost
+        # (conv_schedule_cost charges it), so the local search ranks
+        # schedules with their epilogue included
+        fused_bn=fused and a.get("bn_from") is not None,
+        fused_relu=fused and bool(a.get("relu")),
+        fused_residual=fused and len(node.inputs) > 1)
 
 
 @dataclasses.dataclass
@@ -121,8 +128,9 @@ def conv_dependencies(graph: Graph):
 # ---------------------------------------------------------------------------
 
 def _scheme_problem(graph: Graph, locals_: Dict[str, LocalSearchResult],
-                    max_pairs: int) -> Tuple[global_search.SchemeProblem,
-                                             Dict[str, List[Tuple[int, int]]]]:
+                    max_pairs: int, transform_bw: Optional[float] = None,
+                    ) -> Tuple[global_search.SchemeProblem,
+                               Dict[str, List[Tuple[int, int]]]]:
     convs = [n.name for n in graph.conv_nodes()]
     pairs: Dict[str, List[Tuple[int, int]]] = {}
     node_costs: Dict[str, np.ndarray] = {}
@@ -135,6 +143,12 @@ def _scheme_problem(graph: Graph, locals_: Dict[str, LocalSearchResult],
     edge_costs: Dict[Tuple[str, str], np.ndarray] = {}
     edges, couplings = conv_dependencies(graph)
     pos = {n.name: i for i, n in enumerate(graph.topo_order())}
+    # transform costs scale to the machine the node costs came from: the v5e
+    # roofline by default, or a measured host copy bandwidth when the local
+    # search was measured (a CPU moves a relayout ~50x slower than HBM, and
+    # underweighting it lets the solver pick mismatched neighbor blockings)
+    from repro.core.cost import HBM_BW
+    bw_scale = 1.0 if transform_bw is None else HBM_BW / transform_bw
 
     def _accum(u, v, mat):
         key = (u, v)
@@ -148,8 +162,8 @@ def _scheme_problem(graph: Graph, locals_: Dict[str, LocalSearchResult],
         for j, (_, oc_u) in enumerate(pairs[u]):
             for k, (ic_v, _) in enumerate(pairs[v]):
                 if oc_u != ic_v:
-                    m[j, k] = transform_cost_s(shape, nchwc(oc_u),
-                                               nchwc(ic_v))
+                    m[j, k] = bw_scale * transform_cost_s(
+                        shape, nchwc(oc_u), nchwc(ic_v))
         _accum(u, v, m)
     for u, w, shape in couplings:
         a, b = (u, w) if pos[u] < pos[w] else (w, u)
@@ -157,8 +171,8 @@ def _scheme_problem(graph: Graph, locals_: Dict[str, LocalSearchResult],
         for j, (_, oc_a) in enumerate(pairs[a]):
             for k, (_, oc_b) in enumerate(pairs[b]):
                 if oc_a != oc_b:
-                    m[j, k] = transform_cost_s(shape, nchwc(oc_a),
-                                               nchwc(oc_b))
+                    m[j, k] = bw_scale * transform_cost_s(
+                        shape, nchwc(oc_a), nchwc(oc_b))
         _accum(a, b, m)
 
     topo = [n for n in (x.name for x in graph.topo_order()) if n in set(convs)]
@@ -187,7 +201,7 @@ def _uniform_schedules(graph: Graph, locals_: Dict[str, LocalSearchResult],
         else:  # pair pruned from candidates: synthesize a legal schedule
             ref = locals_[node.name].best
             out[node.name] = ConvSchedule(ic, oc, ref.ow_bn, ref.oh_bn,
-                                          ref.unroll_ker)
+                                          ref.unroll_ker, ref.variant)
     return out
 
 
@@ -201,7 +215,12 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
          runner: Runner = roofline_runner,
          uniform_block: int = 128,
          max_pairs: int = 8,
-         dp_state_budget: int = 200_000) -> Plan:
+         dp_state_budget: int = 200_000,
+         transform_bw: Optional[float] = None) -> Plan:
+    # transform_bw: bytes/s the *execution host* moves a layout transform at.
+    # None keeps the v5e HBM roofline (consistent with roofline node costs);
+    # pass a measured host bandwidth when the schedule database holds
+    # measured costs, so edge and node costs live on the same clock.
     # uniform_block is the paper's constant x (§3.2, x=16 = AVX-512's fp32
     # lane count); the TPU analogue is the 128-wide VREG/MXU lane.
     if mode not in MODES:
@@ -227,7 +246,7 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
     elif mode in ("layout", "transform-elim"):
         schedules = _uniform_schedules(graph, locals_, uniform_block)
     else:
-        prob, pairs = _scheme_problem(graph, locals_, max_pairs)
+        prob, pairs = _scheme_problem(graph, locals_, max_pairs, transform_bw)
         solution = global_search.solve(prob, dp_state_budget=dp_state_budget)
         schedules = {}
         for name, idx in solution.assignment.items():
@@ -255,7 +274,10 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
                                  wl.out_channels, 1, 1, False)
             conv_s += conv_schedule_cost(wl, naive).total_s
     from repro.core.cost import HBM_BW
-    tr_s = planned.transform_bytes_total / HBM_BW
+    # report transforms on the same clock the solver priced them with (the
+    # standalone-node epilogue term below stays on the roofline clock; in
+    # fusion mode there are essentially no standalone epilogue nodes left)
+    tr_s = planned.transform_bytes_total / (transform_bw or HBM_BW)
     epi_s = _predicted_epilogue_s(planned.graph)
     return Plan(planned=planned, mode=mode, solution=solution,
                 predicted_conv_s=conv_s, predicted_transform_s=tr_s,
@@ -263,19 +285,16 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
 
 
 def _predicted_epilogue_s(graph: Graph) -> float:
-    """Elementwise-epilogue traffic of the planned graph: standalone BN /
-    ReLU / add nodes each pay full read+write passes; fused conv_block
-    epilogues pay only the residual read (core.cost.epilogue_bytes)."""
+    """Elementwise-epilogue traffic of the planned graph's *standalone* BN /
+    ReLU / add nodes (full read+write passes each).  Fused conv_block
+    epilogues are not charged here — their (residual-read-only) traffic is
+    part of ``conv_schedule_cost`` via the workload's fused flags, so the
+    local search already ranked schedules with the epilogue included."""
     total = 0.0
     for node in graph.topo_order():
         if node.shape is None or len(node.shape) != 4:
             continue
-        if node.op == "conv_block":
-            total += epilogue_cost_s(
-                node.shape, bn=node.attrs.get("bn_from") is not None,
-                relu=bool(node.attrs.get("relu")),
-                residual=len(node.inputs) > 1, fused=True)
-        elif node.op == "batch_norm":
+        if node.op == "batch_norm":
             total += epilogue_cost_s(node.shape, bn=True)
         elif node.op == "relu":
             total += epilogue_cost_s(node.shape, relu=True)

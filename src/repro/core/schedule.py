@@ -36,6 +36,13 @@ class ConvWorkload:
     groups: int = 1
     dtype_bytes: int = 4
     pad_w: int = -1   # -1: same as pad (square padding, the common case)
+    # fused-epilogue shape of the workload (§3.1): a conv_block carries its
+    # absorbed BN / residual-add / ReLU into the schedule cost, so the local
+    # search ranks schedules *with* their epilogue traffic included and the
+    # database keys fused and plain instances separately.
+    fused_bn: bool = False
+    fused_relu: bool = False
+    fused_residual: bool = False
 
     @property
     def pw(self) -> int:
@@ -54,15 +61,40 @@ class ConvWorkload:
                 * (self.in_channels // self.groups) * self.kh * self.kw)
 
 
+# Conv lowering strategies — the template-variant axis of the schedule space.
+# Each one is a different loop nest over the same blocked tensors (see
+# kernels/ops.py for the instantiations):
+#
+#   per_tap    — unrolled loop over the kh*kw taps, one micro-GEMM each; the
+#                fp32 accumulator materializes between taps.
+#   tap_stack  — the kh*kw taps stacked into one tensor, the whole
+#                kh*kw*ic_bn reduction done as a single contraction
+#                (duplicates the input kh*kw times, but the micro-GEMM's K
+#                dim grows from ic_bn to kh*kw*ic_bn — decisive when ic_bn
+#                is sub-sublane, e.g. the RGB stem).
+#   scan       — lax.scan over the taps carrying the accumulator, so the
+#                partial sum stays loop-resident instead of round-tripping
+#                through memory between taps (Georganas et al. 1808.05567).
+#   patch_gemm — strided patch panels flattened to a single plain 2-D GEMM
+#                over the full kh*kw*ic reduction (the im2col lowering of
+#                Caffe con Troll, 1504.04343).
+#
+# "auto" defers the choice to the kernel's static heuristic (PR-1 behavior:
+# tap_stack below sublane ic_bn, per_tap otherwise).
+VARIANTS = ("per_tap", "tap_stack", "scan", "patch_gemm")
+
+
 @dataclasses.dataclass(frozen=True, order=True)
 class ConvSchedule:
-    """(ic_bn, oc_bn, reg_n→ow_bn, unroll_ker) + TPU's oh_bn block rows."""
+    """(ic_bn, oc_bn, reg_n→ow_bn, unroll_ker) + TPU's oh_bn block rows +
+    the lowering ``variant`` (the §3.2 template picked per workload)."""
 
     ic_bn: int
     oc_bn: int
     ow_bn: int
     oh_bn: int = 1
     unroll_ker: bool = False
+    variant: str = "auto"
 
     def validate(self, wl: ConvWorkload) -> None:
         cin = wl.in_channels // wl.groups
@@ -75,6 +107,14 @@ class ConvSchedule:
             raise ValueError(f"ow_bn {self.ow_bn} !| {ow}")
         if oh % self.oh_bn:
             raise ValueError(f"oh_bn {self.oh_bn} !| {oh}")
+        if self.variant != "auto" and self.variant not in VARIANTS:
+            raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
+
+    def resolved_variant(self) -> str:
+        """The concrete lowering ``auto`` defers to (PR-1's heuristic)."""
+        if self.variant != "auto":
+            return self.variant
+        return "tap_stack" if self.ic_bn < 8 else "per_tap"
 
 
 # paper §3.3.1 step 2: reg_n drawn from [32, 16, 8, 4, 2]; on TPU the
@@ -82,29 +122,48 @@ class ConvSchedule:
 _OW_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
 
 
-def candidate_schedules(wl: ConvWorkload, max_candidates: int = 64,
+def _channel_candidates(channels: int) -> List[int]:
+    """Factor candidates for one channel axis: the paper's splits up to the
+    128-lane block, plus the whole-channel "no split" point (ic_bn = C turns
+    NCHW[x]c into NHWC, where the jnp instantiation's GEMM sees the full
+    channel reduction — the measured winner for deep layers on CPU hosts)."""
+    out = candidate_blocks(channels)
+    if channels not in out:
+        out = [channels] + out
+    return out
+
+
+def candidate_schedules(wl: ConvWorkload, max_candidates: int = 0,
                         ) -> List[ConvSchedule]:
     """Enumerate the search space of §3.3.1: all channel-factor splits ×
-    ow blocking × unroll choice, deduped and capped."""
+    ow blocking × unroll choice × lowering variant, deduped.
+
+    ``max_candidates`` > 0 truncates the (ic-major) enumeration — only
+    useful for tests; the full space is bounded (≤ 6*6*4*2*2*4 tuples) and
+    a truncated one never reaches past the first couple of ic_bn
+    candidates, which starves the (ic_bn, oc_bn) pair axis the global
+    search needs."""
     oh, ow = wl.out_hw
     cin = wl.in_channels // wl.groups
-    ics = candidate_blocks(cin)
-    ocs = candidate_blocks(wl.out_channels)
+    ics = _channel_candidates(cin)
+    ocs = _channel_candidates(wl.out_channels)
     ows = [f for f in _OW_CANDIDATES if ow % f == 0] or [1]
     ohs = [f for f in (8, 4, 2, 1) if oh % f == 0] or [1]
     out: List[ConvSchedule] = []
     for ic_bn, oc_bn, ow_bn in itertools.product(ics[:6], ocs[:6], ows[:4]):
         for oh_bn in ohs[:2]:
             for unroll in (True, False):
-                out.append(ConvSchedule(ic_bn, oc_bn, ow_bn, oh_bn, unroll))
-    # stable unique, cap
+                for variant in VARIANTS:
+                    out.append(ConvSchedule(ic_bn, oc_bn, ow_bn, oh_bn,
+                                            unroll, variant))
+    # stable unique, optional cap
     seen = set()
     uniq = []
     for s in out:
         if s not in seen:
             seen.add(s)
             uniq.append(s)
-        if len(uniq) >= max_candidates:
+        if max_candidates and len(uniq) >= max_candidates:
             break
     return uniq
 

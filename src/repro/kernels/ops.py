@@ -34,10 +34,112 @@ def pad_blocked(x_blocked: jnp.ndarray, pad) -> jnp.ndarray:
     return jnp.pad(x_blocked, ((0, 0), (0, 0), (ph, ph), (pw, pw), (0, 0)))
 
 
+# ---------------------------------------------------------------------------
+# Template variants: four lowerings of the same blocked direct conv
+# (ConvSchedule.variant — see core/schedule.py).  Each accumulator function
+# maps padded-input + blocked-weight to the fp32 accumulator in the
+# dot-natural (n, oh, ow, ko, oc) order — the einsum's M dims (n, h, w) stay
+# adjacent to its N dims (k, o), so XLA emits the GEMM with no per-tap
+# transpose; one transpose back to the blocked NCHW[x]c order happens after
+# the last tap (1.3-2.3x on ResNet bodies).
+# ---------------------------------------------------------------------------
+
+def _acc_per_tap(xp, w_blocked, stride, oh, ow):
+    """Unrolled tap loop, one (M=hw, K=ic, N=oc) micro-GEMM per tap; the
+    accumulator materializes between the kh*kw partial sums."""
+    n, ci, hp, wp, ic_bn = xp.shape
+    ko, _, kh, kw, _, oc_bn = w_blocked.shape
+    acc = jnp.zeros((n, oh, ow, ko, oc_bn), dtype=jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = xp[:, :, dh:dh + oh * stride:stride,
+                       dw:dw + ow * stride:stride, :]
+            acc = acc + jnp.einsum(
+                "nchwi,kcio->nhwko", patch.astype(jnp.float32),
+                w_blocked[:, :, dh, dw].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return acc
+
+
+def _acc_tap_stack(xp, w_blocked, stride, oh, ow):
+    """All kh*kw taps stacked into one tensor, the full kh*kw*ic_bn
+    reduction done as a single contraction.  Duplicates the input kh*kw
+    times but grows the micro-GEMM's K dim from ic_bn to kh*kw*ic_bn —
+    decisive for sub-sublane contractions (e.g. the RGB stem, ic_bn=3,
+    ~40x over per_tap here)."""
+    n, ci, hp, wp, ic_bn = xp.shape
+    ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
+    taps = jnp.stack(
+        [xp[:, :, dh:dh + oh * stride:stride,
+            dw:dw + ow * stride:stride, :]
+         for dh in range(kh) for dw in range(kw)],
+        axis=2)                                      # (n, ci, t, oh, ow, ic)
+    wt = w_blocked.reshape(ko, ci_w, kh * kw, ic_w, oc_bn)
+    return jnp.einsum(
+        "ncthwi,kctio->nhwko", taps.astype(jnp.float32),
+        wt.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+
+def _acc_scan(xp, w_blocked, stride, oh, ow):
+    """lax.scan over the taps with the fp32 accumulator as the carry: the
+    partial sum stays loop-resident (XLA aliases the carry in place) instead
+    of round-tripping through memory between kh*kw unrolled taps."""
+    n, ci, hp, wp, ic_bn = xp.shape
+    ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
+    # (t, ko, ci, ic, oc) so the scan streams one tap's weights per step
+    wt = w_blocked.reshape(ko, ci_w, kh * kw, ic_w, oc_bn) \
+                  .transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    span_h = (oh - 1) * stride + 1
+    span_w = (ow - 1) * stride + 1
+    taps = jnp.arange(kh * kw, dtype=jnp.int32)
+
+    def body(acc, tap):
+        dh, dw = tap // kw, tap % kw
+        window = jax.lax.dynamic_slice(
+            xp, (0, 0, dh, dw, 0), (n, ci, span_h, span_w, ic_bn))
+        patch = window[:, :, ::stride, ::stride, :]
+        acc = acc + jnp.einsum(
+            "nchwi,kcio->nhwko", patch.astype(jnp.float32), wt[tap],
+            preferred_element_type=jnp.float32)
+        return acc, None
+
+    acc0 = jnp.zeros((n, oh, ow, ko, oc_bn), dtype=jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, taps)
+    return acc
+
+
+def _acc_patch_gemm(xp, w_blocked, stride, oh, ow):
+    """im2col lowering: strided patch panels flattened to a single plain
+    (n*oh*ow, kh*kw*cin) @ (kh*kw*cin, cout) GEMM.  Pays an explicit panel
+    transpose but hands the backend one contiguous full-reduction matmul —
+    the measured winner on small-spatial deep layers (e.g. 7x7x512)."""
+    n, ci, hp, wp, ic_bn = xp.shape
+    ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
+    taps = jnp.stack(
+        [xp[:, :, dh:dh + oh * stride:stride,
+            dw:dw + ow * stride:stride, :]
+         for dh in range(kh) for dw in range(kw)],
+        axis=-2)                                     # (n, ci, oh, ow, t, ic)
+    panel = taps.transpose(0, 2, 3, 1, 4, 5).reshape(
+        n * oh * ow, ci * kh * kw * ic_bn)
+    wmat = w_blocked.transpose(1, 2, 3, 4, 0, 5).reshape(
+        ci_w * kh * kw * ic_w, ko * oc_bn)
+    out = jnp.dot(panel.astype(jnp.float32), wmat.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.reshape(n, oh, ow, ko, oc_bn)
+
+
+_ACC_FNS = {"per_tap": _acc_per_tap, "tap_stack": _acc_tap_stack,
+            "scan": _acc_scan, "patch_gemm": _acc_patch_gemm}
+
+
 def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
-                       stride: int, pad, relu: bool) -> jnp.ndarray:
+                       stride: int, pad, relu: bool,
+                       variant: str = "auto") -> jnp.ndarray:
     """Blocked direct conv + optional fused epilogue as XLA ops — the
-    template's jnp instantiation.
+    template's jnp instantiation, dispatched over the lowering ``variant``
+    (one of ``core.schedule.VARIANTS``, or ``"auto"`` for the static
+    heuristic: tap_stack below sublane ic_bn, per_tap otherwise).
 
     out[n,ko,oh,ow,oc] = sum_{ci,kh,kw,ic} x[n,ci,oh*s+kh,ow*s+kw,ic]
                                            * w[ko,ci,kh,kw,ic,oc]
@@ -51,35 +153,9 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
     ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
     oh = (hp - kh) // stride + 1
     ow = (wp - kw) // stride + 1
-    # Accumulate in the dot-natural (n, oh, ow, ko, oc) order — the einsum's
-    # M dims (n, h, w) stay adjacent to its N dims (k, o), so XLA emits the
-    # GEMM with no per-tap transpose; one transpose back to the blocked
-    # NCHW[x]c order happens after the last tap (1.3-2.3x on ResNet bodies).
-    if ic_bn < 8:
-        # sub-sublane contraction (e.g. the RGB stem, ic_bn=3): per-tap
-        # micro-GEMMs with K=ic_bn degenerate on any backend, so stack the
-        # kh*kw taps into one contraction of size kh*kw*ic_bn instead —
-        # ~40x on the ResNet stem here.  For ic_bn >= 8 the per-tap loop
-        # wins because stacking materializes the input kh*kw times.
-        taps = jnp.stack(
-            [xp[:, :, dh:dh + oh * stride:stride,
-                dw:dw + ow * stride:stride, :]
-             for dh in range(kh) for dw in range(kw)],
-            axis=2)                                  # (n, ci, t, oh, ow, ic)
-        wt = w_blocked.reshape(ko, ci_w, kh * kw, ic_w, oc_bn)
-        acc = jnp.einsum(
-            "ncthwi,kctio->nhwko", taps.astype(jnp.float32),
-            wt.astype(jnp.float32), preferred_element_type=jnp.float32)
-    else:
-        acc = jnp.zeros((n, oh, ow, ko, oc_bn), dtype=jnp.float32)
-        for dh in range(kh):
-            for dw in range(kw):
-                patch = xp[:, :, dh:dh + oh * stride:stride,
-                           dw:dw + ow * stride:stride, :]
-                acc = acc + jnp.einsum(
-                    "nchwi,kcio->nhwko", patch.astype(jnp.float32),
-                    w_blocked[:, :, dh, dw].astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
+    if variant in ("auto", None):
+        variant = "tap_stack" if ic_bn < 8 else "per_tap"
+    acc = _ACC_FNS[variant](xp, w_blocked, stride, oh, ow)
     acc = acc.transpose(0, 3, 1, 2, 4)               # -> (n, ko, oh, ow, oc)
     if scale is not None:   # (Ko, oc_bn) per-channel affine
         acc = acc * scale.astype(jnp.float32)[None, :, None, None, :]
@@ -92,24 +168,30 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
     return acc.astype(x_blocked.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "variant"))
 def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
-                     stride: int = 1, pad=0) -> jnp.ndarray:
+                     stride: int = 1, pad=0,
+                     variant: str = "auto") -> jnp.ndarray:
     """Plain blocked conv (no epilogue) — see ``_conv2d_block_core``."""
     return _conv2d_block_core(x_blocked, w_blocked, None, None, None,
-                              stride, pad, False)
+                              stride, pad, False, variant)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad", "relu"))
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "pad", "relu", "variant"))
 def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      scale: jnp.ndarray | None = None,
                      shift: jnp.ndarray | None = None,
                      residual: jnp.ndarray | None = None,
                      stride: int = 1, pad=0,
-                     relu: bool = False) -> jnp.ndarray:
+                     relu: bool = False, variant: str = "auto") -> jnp.ndarray:
     """Fused CONV->affine(->add)->ReLU block — see ``_conv2d_block_core``."""
     return _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
-                              stride, pad, relu)
+                              stride, pad, relu, variant)
+
+
+def _schedule_variant(schedule: ConvSchedule | None) -> str:
+    return schedule.variant if schedule is not None else "auto"
 
 
 def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
@@ -117,13 +199,17 @@ def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
                    schedule: ConvSchedule | None = None,
                    use_pallas: bool = False,
                    interpret: bool = True) -> jnp.ndarray:
-    """Planner-facing entry point on blocked tensors."""
+    """Planner-facing entry point on blocked tensors.  On the jnp path the
+    schedule's ``variant`` picks the lowering; the Pallas kernel has one
+    loop nest (its accumulator is VMEM-resident by construction) and ignores
+    the variant axis."""
     if use_pallas:
         assert schedule is not None
         xp = pad_blocked(x_blocked, pad)
         return conv2d_nchwc_pallas(xp, w_blocked, stride=stride,
                                    schedule=schedule, interpret=interpret)
-    return conv2d_nchwc_jnp(x_blocked, w_blocked, stride=stride, pad=pad)
+    return conv2d_nchwc_jnp(x_blocked, w_blocked, stride=stride, pad=pad,
+                            variant=_schedule_variant(schedule))
 
 
 def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
@@ -144,7 +230,8 @@ def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                                    stride=stride, schedule=schedule,
                                    relu=relu, interpret=interpret)
     return conv2d_block_jnp(x_blocked, w_blocked, scale, shift, residual,
-                            stride=stride, pad=pad, relu=relu)
+                            stride=stride, pad=pad, relu=relu,
+                            variant=_schedule_variant(schedule))
 
 
 def conv2d(x_nchw: jnp.ndarray, w_kcrs: jnp.ndarray, *, stride: int = 1,

@@ -1,0 +1,114 @@
+"""Conv template-variant family vs the NCHW oracle.
+
+Every lowering variant (per_tap / tap_stack / scan / patch_gemm) must agree
+with ``conv2d_nchw_ref`` within fp32 tolerance across stride, asymmetric
+padding, sub-sublane/sublane/super-sublane ic_bn, and with or without the
+fused scale/shift/residual/ReLU epilogue — the acceptance matrix of the
+variant axis (ISSUE 2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:   # the deterministic acceptance grid must run even without hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.layout import from_nchwc, kernel_to_kcrs_ck, to_nchwc
+from repro.core.schedule import VARIANTS, ConvSchedule, ConvWorkload
+from repro.kernels.ops import conv2d_block_jnp, conv2d_nchwc_jnp
+from repro.kernels.ref import conv2d_nchw_ref
+
+
+def _epilogue_ref(out, scale, shift, residual_nchw, relu):
+    out = np.asarray(out, np.float32)
+    if scale is not None:
+        out = out * scale[None, :, None, None]
+    if shift is not None:
+        out = out + shift[None, :, None, None]
+    if residual_nchw is not None:
+        out = out + residual_nchw
+    if relu:
+        out = np.maximum(out, 0.0)
+    return out
+
+
+def _run_case(variant, ic_bn, stride, pad, epilogue, hw, seed, oc_bn=8):
+    cin = ic_bn * 2 if ic_bn >= 8 else ic_bn      # ic_bn=3 -> cin=3 (stem)
+    cout = oc_bn * 2
+    kh, kw = 3, 3
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, cin, hw, hw)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(cout, cin, kh, kw)).astype(np.float32))
+    xb = to_nchwc(x, ic_bn)
+    wb = kernel_to_kcrs_ck(w, ic_bn, oc_bn)
+    ref = conv2d_nchw_ref(x, w, stride=stride, pad=pad)
+
+    if not epilogue:
+        out = from_nchwc(conv2d_nchwc_jnp(xb, wb, stride=stride, pad=pad,
+                                          variant=variant))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        return
+
+    scale = rng.normal(size=cout).astype(np.float32)
+    shift = rng.normal(size=cout).astype(np.float32)
+    res_nchw = rng.normal(size=ref.shape).astype(np.float32)
+    out = conv2d_block_jnp(
+        xb, wb,
+        jnp.asarray(scale.reshape(cout // oc_bn, oc_bn)),
+        jnp.asarray(shift.reshape(cout // oc_bn, oc_bn)),
+        to_nchwc(jnp.asarray(res_nchw), oc_bn),
+        stride=stride, pad=pad, relu=True, variant=variant)
+    want = _epilogue_ref(ref, scale, shift, res_nchw, relu=True)
+    np.testing.assert_allclose(np.asarray(from_nchwc(out)), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("ic_bn", [3, 8, 16])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("epilogue", [False, True],
+                         ids=["plain", "fused-epilogue"])
+def test_variant_matrix(variant, ic_bn, stride, epilogue):
+    """The full acceptance grid with square padding."""
+    _run_case(variant, ic_bn, stride, pad=1, epilogue=epilogue, hw=9, seed=0)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("pad", [(0, 2), (2, 0)], ids=["pad-w", "pad-h"])
+def test_variant_asymmetric_pad(variant, pad):
+    _run_case(variant, 8, 1, pad=pad, epilogue=True, hw=8, seed=1)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        variant=st.sampled_from(VARIANTS),
+        ic_bn=st.sampled_from([3, 8, 16]),
+        stride=st.sampled_from([1, 2]),
+        epilogue=st.booleans(),
+        hw=st.integers(7, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_variant_hypothesis(variant, ic_bn, stride, epilogue, hw, seed):
+        """Property: every variant == oracle on random workloads/params."""
+        _run_case(variant, ic_bn, stride, pad=1, epilogue=epilogue, hw=hw,
+                  seed=seed)
+
+
+def test_auto_matches_explicit():
+    """'auto' must be exactly the static heuristic's variant."""
+    for ic_bn, expect in ((3, "tap_stack"), (8, "per_tap")):
+        s = ConvSchedule(ic_bn, 8, 1, 1, False)
+        assert s.resolved_variant() == expect
+        s.validate(ConvWorkload(batch=1, in_channels=ic_bn, out_channels=8,
+                                height=8, width=8, kh=3, kw=3, pad=1))
+
+
+def test_bad_variant_rejected():
+    wl = ConvWorkload(batch=1, in_channels=8, out_channels=8, height=8,
+                      width=8, kh=3, kw=3, pad=1)
+    with pytest.raises(ValueError):
+        ConvSchedule(8, 8, 1, 1, False, "im2col").validate(wl)
