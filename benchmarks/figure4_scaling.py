@@ -8,6 +8,12 @@ chip counts, derive throughput from the three roofline terms for a fixed
 per-chip workload (weak scaling, NeoCPU's images/sec framing), and report
 efficiency vs the ideal linear line.  The collective term is computed for
 ring reductions over the DP axis (gradient bytes = active params).
+
+``--measured`` adds the host-CPU analogue of the figure through
+``benchmarks/harness.py`` (warmup-phase detection + interleaved paired
+medians): batch weak scaling of a planned CNN — all batch sizes timed
+round-robin so the images/sec efficiency curve is phase-noise-robust, the
+same framing (throughput vs ideal linear) as the paper's thread sweep.
 """
 from __future__ import annotations
 
@@ -18,6 +24,47 @@ from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.configs import ARCHS
 
 CHIPS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+BATCHES = (1, 2, 4)
+
+
+def run_measured(model: str = "resnet-18", image: int = 112,
+                 repeats: int = 10):
+    """Batch weak scaling on the host: one planned executable per batch
+    size, all sampled in every harness round (paired medians)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import _DB
+    from benchmarks.harness import measure_paired
+    from repro.core.planner import plan
+    from repro.engine import compile_model
+    from repro.models.cnn import build
+    from repro.nn.init import init_params
+
+    setups = []
+    for b in BATCHES:
+        g, shapes = build(model, batch=b, image=image)
+        params = init_params(g, shapes, seed=0)
+        p = plan(g, shapes, mode="fusion", db=_DB)
+        m = compile_model(p, params)
+        x = jnp.asarray(np.random.default_rng(0)
+                        .normal(size=shapes["data"]).astype(np.float32))
+        setups.append((b, m, x))
+    timings = measure_paired(
+        [(lambda m=m, x=x: m.predict(x)) for _, m, x in setups],
+        repeats=repeats)
+    rows = []
+    base_ips = BATCHES[0] / (timings[0].median_ms * 1e-3)
+    for (b, _, _), t in zip(setups, timings):
+        ips = b / (t.median_ms * 1e-3)
+        eff = ips / (base_ips * b / BATCHES[0])
+        rows.append((f"figure4-measured/{model}/batch={b}",
+                     t.median_ms * 1e3,
+                     f"images_per_s={ips:.2f};efficiency={eff:.3f};"
+                     f"warmup={t.warmup_rounds}"))
+        print(f"# batch={b}: {t.median_ms:.1f} ms  {ips:.1f} img/s  "
+              f"efficiency={eff:.3f} (paired medians)", flush=True)
+    return rows
 
 
 def throughput(cfg, n_chips: int, per_chip_batch: int, seq: int):
@@ -42,7 +89,16 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--per-chip-batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--measured", action="store_true",
+                    help="host-CPU batch weak scaling via the paired-median "
+                         "harness instead of the analytical chip sweep")
+    ap.add_argument("--model", default="resnet-18")
+    ap.add_argument("--image", type=int, default=112)
     args = ap.parse_args(argv)
+    if args.measured:
+        rows = run_measured(args.model, args.image)
+        emit(rows)
+        return rows
     cfg = ARCHS[args.arch]
     rows = []
     base = throughput(cfg, 1, args.per_chip_batch, args.seq)

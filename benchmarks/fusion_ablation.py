@@ -16,6 +16,19 @@ Both plans are executed in both engine dispatch modes:
               BN/ReLU/add and a full round trip through memory;
 * ``whole`` — one jit over the model, XLA free to fuse across nodes.
 
+Two focused ablation rows isolate the PR-3 epilogue extensions:
+
+* ``pooled_stem``     — the ResNet stem ``conv7x7/2 -> bn -> relu ->
+                        max_pool3x3/2`` alone: the fused plan collapses it
+                        to ONE kernel (the pooling reduction runs over the
+                        fp32 accumulator before the store), the unfused
+                        plan is the PR-2 global-search plan dispatching
+                        conv + bn + relu + max_pool;
+* ``densenet_concat`` — a DenseNet dense-block: fused conv_blocks write
+                        channel-offset slices straight into the shared
+                        concat buffer, the unfused plan materializes every
+                        conv output and copies it in a standalone concat.
+
 Measurement rides on ``benchmarks/harness.py`` — warmup-phase detection +
 interleaved paired A/B medians — the same methodology as
 ``BENCH_variants.json``.  Emits ``BENCH_fusion.json``.
@@ -30,10 +43,69 @@ import numpy as np
 
 from common import _DB  # shared ScheduleDatabase
 from harness import measure_paired
+from repro.core.graph import Graph
 from repro.core.planner import plan
 from repro.engine import compile_model
 from repro.models.cnn import build
 from repro.nn.init import init_params
+
+
+def _stem_graph(image: int, batch: int = 1):
+    """The ResNet stem in isolation — the pooled-epilogue headline chain."""
+    g = Graph()
+    g.add("data", "input")
+    g.add("stem", "conv2d", ["data"], in_channels=3, out_channels=64,
+          kh=7, kw=7, stride=2, pad=3)
+    g.add("stem_bn", "batch_norm", ["stem"])
+    g.add("stem_relu", "relu", ["stem_bn"])
+    g.add("stem_pool", "max_pool", ["stem_relu"], k=3, stride=2, pad=1)
+    g.mark_output("stem_pool")
+    return g, {"data": (batch, 3, image, image)}
+
+
+def _dense_block_graph(image: int, batch: int = 1, layers: int = 4,
+                       feats: int = 64, growth: int = 32):
+    """One DenseNet dense block — the concat-write headline chain."""
+    g = Graph()
+    g.add("data", "input")
+    g.add("stem", "conv2d", ["data"], in_channels=3, out_channels=feats,
+          kh=3, kw=3, pad=1)
+    y, c = "stem", feats
+    for i in range(layers):
+        g.add(f"l{i}_bn", "batch_norm", [y])
+        g.add(f"l{i}_relu", "relu", [f"l{i}_bn"])
+        g.add(f"l{i}_conv", "conv2d", [f"l{i}_relu"], in_channels=c,
+              out_channels=growth, kh=3, kw=3, pad=1)
+        g.add(f"l{i}_cat", "concat", [y, f"l{i}_conv"])
+        y = f"l{i}_cat"
+        c += growth
+    g.mark_output(y)
+    return g, {"data": (batch, 3, image, image)}
+
+
+def run_chain(tag: str, g, shapes, repeats: int) -> dict:
+    """Fused vs unfused paired medians for one focused chain, op dispatch
+    (the paper's execution model, where the fused kernel replaces the
+    per-node round trips)."""
+    params = init_params(g, shapes, seed=0)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=shapes["data"]).astype(np.float32))
+    unfused = plan(g, shapes, mode="global-search", db=_DB)
+    fused = plan(g, shapes, mode="fusion", db=_DB)
+    mu = compile_model(unfused, params, dispatch="op")
+    mf = compile_model(fused, params, dispatch="op")
+    t_u, t_f = measure_paired(
+        [lambda: mu.predict(x), lambda: mf.predict(x)], repeats=repeats)
+    row = {"unfused": t_u.to_json(), "fused": t_f.to_json(),
+           "speedup": round(t_u.median_ms / t_f.median_ms, 3),
+           "n_blocks": fused.fusion.n_blocks,
+           "n_pool_fused": fused.fusion.n_pool_fused,
+           "n_concat_fused": fused.fusion.n_concat_fused}
+    print(f"{tag}: unfused {t_u.median_ms:.2f}ms fused {t_f.median_ms:.2f}ms "
+          f"speedup {row['speedup']:.3f}x "
+          f"(pool_fused={row['n_pool_fused']}, "
+          f"concat_fused={row['n_concat_fused']})")
+    return row
 
 
 def run(model: str, batch: int, image: int, repeats: int) -> dict:
@@ -78,16 +150,37 @@ def main() -> None:
     # real memory traffic (~90 MB of eliminated round trips per inference)
     ap.add_argument("--image", type=int, default=224)
     ap.add_argument("--repeats", type=int, default=40)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: only the pooled-stem + densenet-concat "
+                         "chains at small resolution, few repeats")
     ap.add_argument("--out", default="BENCH_fusion.json")
     args = ap.parse_args()
-    result = run(args.model, args.batch, args.image, args.repeats)
-    # headline metric: graph-runtime dispatch, where fusion is the only
-    # defense against per-node round trips (the paper's execution model)
-    result["speedup"] = result["op_dispatch"]["speedup"]
+    if args.smoke:
+        image, repeats = 56, 8
+        result = {"smoke": True, "image": image, "repeats": repeats}
+    else:
+        image, repeats = args.image, args.repeats
+        result = run(args.model, args.batch, args.image, args.repeats)
+        # headline metric: graph-runtime dispatch, where fusion is the only
+        # defense against per-node round trips (the paper's execution model)
+        result["speedup"] = result["op_dispatch"]["speedup"]
+    # PR-3 epilogue-extension rows: the pooled stem and the concat-write
+    # dense block, each fused-vs-unfused under paired medians
+    result["pooled_stem"] = run_chain(
+        "pooled_stem", *_stem_graph(image, args.batch), repeats)
+    result["densenet_concat"] = run_chain(
+        "densenet_concat", *_dense_block_graph(image, args.batch), repeats)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
-    print(f"wrote {args.out} (headline speedup "
-          f"{result['speedup']:.3f}x, op-dispatch)")
+    if args.smoke:
+        print(f"wrote {args.out} (smoke: pooled-stem "
+              f"{result['pooled_stem']['speedup']:.3f}x, concat "
+              f"{result['densenet_concat']['speedup']:.3f}x)")
+    else:
+        print(f"wrote {args.out} (headline speedup "
+              f"{result['speedup']:.3f}x op-dispatch; pooled-stem "
+              f"{result['pooled_stem']['speedup']:.3f}x, concat "
+              f"{result['densenet_concat']['speedup']:.3f}x)")
 
 
 if __name__ == "__main__":

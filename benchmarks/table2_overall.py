@@ -6,6 +6,11 @@ latency for both — the prediction is what carries the paper's ladder to the
 TPU target; the measured pair shows the planned graph is never semantically
 or pathologically worse end-to-end on the host.
 
+Measurement rides on ``benchmarks/harness.py`` (warmup-phase detection +
+interleaved paired medians): both graphs of a network are timed round-robin
+within each round, so a noisy phase on this shared host hits both equally
+and the reported medians stay comparable.
+
 Default: the paper's 5 ablation networks (one per family).  --full: all 15
 (slow on 1 CPU core).  batch=1, full image sizes, as in the paper.
 """
@@ -13,7 +18,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import emit, prepare, time_fn
+from benchmarks.common import emit, prepare
+from benchmarks.harness import measure_paired
 
 
 # measured subset for the default run (1 CPU core); --full = all 15
@@ -28,18 +34,21 @@ def run(models, repeats: int = 3):
     rows = []
     for name in models:
         m0, x, p0 = prepare(name, "nchw")
-        t0 = time_fn(lambda: m0.predict(x), repeats)
         m1, _, p1 = prepare(name, "global-search")
-        t1 = time_fn(lambda: m1.predict(x), repeats)
-        rows.append((f"table2/{name}/nchw-measured", t0 * 1e6,
-                     f"pred_v5e_us={p0.predicted_total_s * 1e6:.1f}"))
-        rows.append((f"table2/{name}/planned-measured", t1 * 1e6,
+        t0, t1 = measure_paired(
+            [lambda: m0.predict(x), lambda: m1.predict(x)], repeats=repeats)
+        rows.append((f"table2/{name}/nchw-measured", t0.median_ms * 1e3,
+                     f"pred_v5e_us={p0.predicted_total_s * 1e6:.1f};"
+                     f"min_ms={t0.min_ms:.2f};warmup={t0.warmup_rounds}"))
+        rows.append((f"table2/{name}/planned-measured", t1.median_ms * 1e3,
                      f"pred_v5e_us={p1.predicted_total_s * 1e6:.1f};"
                      f"pred_speedup="
                      f"{p0.predicted_total_s / p1.predicted_total_s:.2f}x;"
+                     f"measured_speedup={t0.median_ms / t1.median_ms:.2f}x;"
                      f"transforms={p1.planned.n_transforms};"
                      f"solver={p1.solution.method if p1.solution else '-'}"))
-        print(f"# {name}: measured {t0 * 1e3:.1f} -> {t1 * 1e3:.1f} ms | "
+        print(f"# {name}: measured {t0.median_ms:.1f} -> {t1.median_ms:.1f} "
+              f"ms (paired medians, {t0.warmup_rounds} warmup rounds) | "
               f"v5e predicted {p0.predicted_total_s * 1e3:.3f} -> "
               f"{p1.predicted_total_s * 1e3:.3f} ms", flush=True)
     return rows

@@ -7,13 +7,17 @@ Two modes:
 * --measured: wall-clock ladder on the host CPU with the paper's own
   methodology — the local search *measures candidates on the deployment
   target* (guided: roofline prunes to top-6, measurement ranks), so the
-  chosen schedules are CPU-optimal rather than TPU-optimal.
+  chosen schedules are CPU-optimal rather than TPU-optimal.  All five mode
+  executables are timed round-robin through ``benchmarks/harness.py``
+  (warmup-phase detection + interleaved paired medians), so one noisy
+  phase cannot skew a single rung of the ladder.
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import emit, prepare, time_fn
+from benchmarks.common import emit, prepare
+from benchmarks.harness import measure_paired
 from repro.core.local_search import (ScheduleDatabase, guided_local_search)
 from repro.core.planner import MODES
 
@@ -51,18 +55,24 @@ def run_measured(name: str, repeats: int = 3):
             return self._mem[key]
 
     gdb = GuidedDB()
-    base = None
+    models = []
     for mode in MODES:
         # measured-on-CPU target: the paper's x=16 (AVX-512 fp32 lanes) is
         # the right constant block here, not the TPU's 128
-        m, x, p = prepare(name, mode, db=gdb, uniform_block=16)
-        t = time_fn(lambda: m.predict(x), repeats)
-        if mode == "nchw":
-            base = t
-        rows.append((f"table3-measured/{name}/{mode}", t * 1e6,
-                     f"speedup_vs_nchw={base / t:.2f}x"))
-        print(f"# measured {name}/{mode}: {t * 1e3:.1f} ms "
-              f"({base / t:.2f}x)", flush=True)
+        m, x, _ = prepare(name, mode, db=gdb, uniform_block=16)
+        models.append((mode, m, x))
+    # one interleaved paired run across the whole ladder: every mode is
+    # sampled in every round, so medians are comparable rung to rung
+    timings = measure_paired(
+        [(lambda m=m, x=x: m.predict(x)) for _, m, x in models],
+        repeats=repeats)
+    base = timings[0].median_ms
+    for (mode, _, _), t in zip(models, timings):
+        rows.append((f"table3-measured/{name}/{mode}", t.median_ms * 1e3,
+                     f"speedup_vs_nchw={base / t.median_ms:.2f}x;"
+                     f"min_ms={t.min_ms:.2f};warmup={t.warmup_rounds}"))
+        print(f"# measured {name}/{mode}: {t.median_ms:.1f} ms "
+              f"({base / t.median_ms:.2f}x, paired medians)", flush=True)
     return rows
 
 

@@ -131,8 +131,13 @@ def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
     input_once = wl.batch * cin * wl.height * wl.width * b
     input_bytes = input_once * oc_chunks
     weight_bytes = (wl.out_channels * cin * wl.kh * wl.kw * b) * wl.batch
-    output_bytes = wl.batch * wl.out_channels * oh * ow * b * (
-        1 + max(0, ic_chunks - 1))
+    # stored output: the fused pooling reduction shrinks the final store to
+    # the pooled tiling (the conv-resolution tensor never reaches HBM); the
+    # extra input-channel accumulation passes still run at conv resolution
+    poh, pow_ = wl.pooled_out_hw
+    output_bytes = (wl.batch * wl.out_channels * poh * pow_ * b
+                    + wl.batch * wl.out_channels * oh * ow * b
+                    * max(0, ic_chunks - 1))
     # variant-specific traffic (fp32 accumulator is 4 bytes/elem); one tap's
     # strided patch holds oh*ow spatial positions — input_once/stride^2 on
     # downsample convs, not the full-resolution slab
@@ -171,14 +176,28 @@ def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
 
 def epilogue_bytes(nchw_shape: Tuple[int, ...], *, bn: bool = False,
                    relu: bool = False, residual: bool = False,
+                   pool_stride: int = 0, concat: bool = False,
                    fused: bool = False, dtype_bytes: int = 4) -> int:
-    """HBM traffic for a conv's elementwise epilogue.
+    """HBM traffic for a conv's elementwise/shallow epilogue.
 
     Unfused graphs dispatch BN / residual-add / ReLU as separate nodes, each
-    round-tripping the full conv output through memory (read + write; the add
-    also reads the residual operand).  A fused ``conv_block`` applies the
-    affine/ReLU while the output block is still register/VMEM-resident, so
-    the only epilogue traffic left is the single residual read.
+    round-tripping the full conv output through memory (read + write; the
+    add also reads the residual operand); a standalone pooling node reads
+    the conv output and writes the (stride²-smaller) pooled tensor, and a
+    standalone concat copies this conv's slice into the concat buffer (read
+    + write).  A fused ``conv_block`` applies the affine/ReLU while the
+    output block is still register/VMEM-resident, pools the fp32 tile
+    before the store, and writes straight into the concat buffer — the only
+    epilogue traffic left is the single residual read.  (The *smaller
+    pooled store itself* is credited in ``conv_schedule_cost``'s output
+    term, not here.)
+
+    Caveat on the fused concat credit: it models the in-place offset store
+    (what XLA emits for the jnp path under jit, and what a TPU backend gets
+    from ``input_output_aliases``).  The interpret-mode Pallas kernel
+    instead copies non-owned buffer chunks through its grid, so on that
+    path the realized win is smaller than predicted — compare measured
+    columns, not predicted ones, for concat-fusion claims.
     """
     elems = 1
     for d in nchw_shape:
@@ -193,13 +212,19 @@ def epilogue_bytes(nchw_shape: Tuple[int, ...], *, bn: bool = False,
         total += 3 * tensor
     if relu:
         total += 2 * tensor
+    if pool_stride:
+        total += tensor + tensor // (pool_stride * pool_stride)
+    if concat:
+        total += 2 * tensor
     return total
 
 
 def epilogue_cost_s(nchw_shape: Tuple[int, ...], *, bn: bool = False,
                     relu: bool = False, residual: bool = False,
+                    pool_stride: int = 0, concat: bool = False,
                     fused: bool = False, dtype_bytes: int = 4) -> float:
     return epilogue_bytes(nchw_shape, bn=bn, relu=relu, residual=residual,
+                          pool_stride=pool_stride, concat=concat,
                           fused=fused, dtype_bytes=dtype_bytes) / HBM_BW
 
 

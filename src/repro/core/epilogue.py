@@ -1,0 +1,145 @@
+"""Composable conv_block epilogue spec (NeoCPU §3.1, extended).
+
+PR 1 hardcoded the fused epilogue as ``scale/shift -> residual -> ReLU``.
+This module turns it into a small *spec* every template variant (and the
+Pallas kernel) accepts, so the epilogue is a planned, costed, searched axis
+rather than a fixed tail.  Two additions beyond the PR-1 sequence:
+
+* **fused pooling** — a ``conv_block -> max_pool/avg_pool`` chain collapses:
+  the pooling reduction runs over the fp32 accumulator tile *before* it is
+  stored, so the stem ``conv7x7 -> bn -> relu -> max_pool3x3s2`` becomes one
+  kernel and the conv-resolution tensor never round-trips through HBM
+  (the fused-downsampling-epilogue win of Georganas et al., 1808.05567).
+* **concat-aware output placement** — DenseNet's ``concat(conv outs)`` fuses
+  by giving each producing conv_block a channel-offset write into the shared
+  concat buffer, eliminating the copy the standalone concat would do.
+
+The spec is a frozen (hashable) dataclass so it can ride through ``jax.jit``
+as a static argument.  The *presence* of the affine/residual operands is
+conveyed by the tensors themselves (None or not); the spec carries only the
+structural knobs the kernels must specialize on.
+
+Epilogue application order is fixed:
+
+    acc = conv(x)                      # fp32 accumulator
+    acc = acc * scale + shift          # absorbed BN (folded at bind time)
+    acc = acc + residual               # ResNet tail, conv resolution
+    acc = relu(acc)                    # before pooling, as in the zoo graphs
+    acc = pool(acc)                    # spatial reduction on the fp32 tile
+    out[.., off:off+C, ..] = acc       # channel-offset store (concat fusion)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def _pool_out_hw(h: int, w: int, k: int, stride: int, pad: int,
+                 ceil_mode: bool) -> Tuple[int, int]:
+    """The one copy of the pooled output-size arithmetic (floor/ceil)."""
+    if ceil_mode:
+        oh = -(-(h + 2 * pad - k) // stride) + 1
+        ow = -(-(w + 2 * pad - k) // stride) + 1
+    else:
+        oh = (h + 2 * pad - k) // stride + 1
+        ow = (w + 2 * pad - k) // stride + 1
+    return oh, ow
+
+
+def pool2d(x: jnp.ndarray, k: int, stride: int, pad: int = 0,
+           ceil_mode: bool = False, reducer: str = "max") -> jnp.ndarray:
+    """Window pooling over axes (2, 3) of an arbitrary-rank tensor — THE
+    pooling implementation: logical NCHW, blocked NCHW[x]c, the 5-D fp32
+    accumulator of the fused jnp epilogue, and (via ``PoolSpec.apply``) the
+    VMEM plane inside the Pallas kernel all reduce through this one body,
+    so fused and standalone pooling cannot drift apart."""
+    h, w = x.shape[2], x.shape[3]
+    oh, ow = _pool_out_hw(h, w, k, stride, pad, ceil_mode)
+    if ceil_mode:
+        eh = (oh - 1) * stride + k - h - pad
+        ew = (ow - 1) * stride + k - w - pad
+    else:
+        eh, ew = pad, pad
+    fill = -jnp.inf if reducer == "max" else 0.0
+    widths = [(0, 0)] * x.ndim
+    widths[2] = (pad, max(eh, pad))
+    widths[3] = (pad, max(ew, pad))
+    xp = jnp.pad(x, widths, constant_values=fill)
+    acc = None
+    for dh in range(k):
+        for dw in range(k):
+            sl = [slice(None)] * x.ndim
+            sl[2] = slice(dh, dh + oh * stride, stride)
+            sl[3] = slice(dw, dw + ow * stride, stride)
+            patch = xp[tuple(sl)]
+            if acc is None:
+                acc = patch
+            elif reducer == "max":
+                acc = jnp.maximum(acc, patch)
+            else:
+                acc = acc + patch
+    if reducer == "avg":
+        acc = acc / (k * k)
+    return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """A pooling reduction fused into the conv epilogue."""
+
+    kind: str                 # "max" | "avg"
+    k: int
+    stride: int
+    pad: int = 0
+    ceil_mode: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("max", "avg"):
+            raise ValueError(f"pool kind {self.kind!r} not in ('max', 'avg')")
+
+    def out_hw(self, h: int, w: int) -> Tuple[int, int]:
+        """Pooled spatial dims (matches ``pool2d``'s output)."""
+        return _pool_out_hw(h, w, self.k, self.stride, self.pad,
+                            self.ceil_mode)
+
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Run this pooling reduction over axes (2, 3) of ``x``."""
+        return pool2d(x, self.k, self.stride, self.pad, self.ceil_mode,
+                      self.kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Static structure of a conv_block's fused epilogue.
+
+    ``concat_total`` > 0 means the block stores into a shared concat buffer
+    of that many channels, at channel offset ``concat_offset`` — the kernel
+    then receives the buffer and returns it with the block's slice written.
+    """
+
+    relu: bool = False
+    pool: Optional[PoolSpec] = None
+    concat_offset: int = 0
+    concat_total: int = 0
+
+    @property
+    def writes_concat(self) -> bool:
+        return self.concat_total > 0
+
+    def with_relu(self, relu: bool) -> "EpilogueSpec":
+        if relu and not self.relu:
+            return dataclasses.replace(self, relu=True)
+        return self
+
+    def out_hw(self, oh: int, ow: int) -> Tuple[int, int]:
+        """Stored spatial dims for a conv-resolution (oh, ow)."""
+        return self.pool.out_hw(oh, ow) if self.pool is not None else (oh, ow)
+
+    def out_channels(self, conv_channels: int) -> int:
+        """Stored channel count (the concat buffer's, if fused)."""
+        return self.concat_total if self.writes_concat else conv_channels
+
+
+IDENTITY = EpilogueSpec()

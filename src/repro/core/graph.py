@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core.epilogue import PoolSpec
 from repro.core.layout import LayoutCategory
 
 # op name -> layout category (paper §3.2's three classes)
@@ -27,6 +28,9 @@ OP_CATEGORY: Dict[str, LayoutCategory] = {
     "softmax": LayoutCategory.OBLIVIOUS,  # over channel axis; planner keeps axis
     "add": LayoutCategory.OBLIVIOUS,      # but requires *matching* input layouts
     "concat": LayoutCategory.OBLIVIOUS,   # channel concat requires matching blocks
+    # concat-fusion buffer seed (core.fusion.fuse_concat_writes): allocates
+    # the shared concat buffer and places the pass-through operands
+    "concat_alloc": LayoutCategory.OBLIVIOUS,
     "flatten": LayoutCategory.DEPENDENT,
     "reshape": LayoutCategory.DEPENDENT,
     "dense": LayoutCategory.DEPENDENT,
@@ -39,7 +43,7 @@ OP_CATEGORY: Dict[str, LayoutCategory] = {
 # ops whose multiple inputs must agree on one layout (§3.3.2: Elementwise_Add
 # "could not be omitted since it requires the layout of its two inputs to be
 # the same"); concat along channels likewise requires equal channel blocks.
-MULTI_INPUT_SAME_LAYOUT = {"add", "concat"}
+MULTI_INPUT_SAME_LAYOUT = {"add", "concat", "concat_alloc"}
 
 
 @dataclasses.dataclass
@@ -139,8 +143,9 @@ def _infer_one(g: Graph, node: Node, input_shapes) -> Tuple[int, ...]:
     if node.op == "input":
         return tuple(input_shapes[node.name])
     if node.op in ("conv2d", "conv_block"):
-        # conv_block: inputs[0] is data; an optional inputs[1] residual has
-        # the output shape and does not change shape inference
+        # conv_block: inputs[0] is data; an optional residual input has the
+        # conv's own output shape, and a concat-fused block's last input is
+        # the shared buffer — neither changes shape inference of the conv
         n, c, h, w = ins[0]
         oh, ow = _conv_out_hw(h, w, a["kh"], a["kw"], a.get("stride", 1),
                               a.get("pad", 0), a.get("dilation", 1),
@@ -148,7 +153,18 @@ def _infer_one(g: Graph, node: Node, input_shapes) -> Tuple[int, ...]:
         groups = a.get("groups", 1)
         assert c == a["in_channels"], (node.name, c, a["in_channels"])
         del groups
-        return (n, a["out_channels"], oh, ow)
+        if a.get("pool_kind"):          # fused pooling epilogue
+            oh, ow = PoolSpec(
+                a["pool_kind"], a["pool_k"], a["pool_stride"],
+                a.get("pool_pad", 0),
+                bool(a.get("pool_ceil", False))).out_hw(oh, ow)
+        channels = a["out_channels"]
+        if a.get("concat_into"):        # the block's tensor IS the buffer
+            channels = a["concat_total"]
+        return (n, channels, oh, ow)
+    if node.op == "concat_alloc":
+        n, _, h, w = ins[0]
+        return (n, a["total_channels"], h, w)
     if node.op in ("max_pool", "avg_pool"):
         n, c, h, w = ins[0]
         oh, ow = _conv_out_hw(h, w, a["k"], a["k"], a.get("stride", a["k"]),

@@ -53,7 +53,8 @@ def measured_runner(wl: ConvWorkload, s: ConvSchedule, repeats: int = 3) -> floa
         size=(wl.out_channels, cin, wl.kh, wl.kw)).astype(np.float32))
     xb = to_nchwc(x, s.ic_bn)
     wb = kernel_to_kcrs_ck(w, s.ic_bn, s.oc_bn)
-    fused = wl.fused_bn or wl.fused_relu or wl.fused_residual
+    fused = (wl.fused_bn or wl.fused_relu or wl.fused_residual
+             or bool(wl.fused_pool) or wl.concat_total > 0)
     if fused:
         oh, ow = wl.out_hw
         ko = wl.out_channels // s.oc_bn
@@ -62,9 +63,16 @@ def measured_runner(wl: ConvWorkload, s: ConvSchedule, repeats: int = 3) -> floa
         if wl.fused_residual:
             residual = jnp.asarray(rng.normal(
                 size=(wl.batch, ko, oh, ow, s.oc_bn)).astype(np.float32))
+        spec = wl.epilogue_spec()
+        out_buf = None
+        if spec.writes_concat:
+            poh, pow_ = wl.pooled_out_hw
+            out_buf = jnp.zeros(
+                (wl.batch, wl.concat_total // s.oc_bn, poh, pow_, s.oc_bn),
+                dtype=jnp.float32)
         f = lambda: conv2d_block_jnp(
             xb, wb, None, shift if wl.fused_bn else None, residual,
-            stride=wl.stride, pad=pad, relu=wl.fused_relu,
+            out_buf, stride=wl.stride, pad=pad, epilogue=spec,
             variant=s.variant)
     else:
         f = lambda: conv2d_nchwc_jnp(xb, wb, stride=wl.stride, pad=pad,
@@ -192,7 +200,15 @@ def _wl_key(wl: ConvWorkload) -> str:
     # same geometry (their cost includes the epilogue) — key them apart
     epi = "".join(c for c, on in (("b", wl.fused_bn), ("r", wl.fused_relu),
                                   ("a", wl.fused_residual)) if on)
-    return key + (f"_e{epi}" if epi else "")
+    key += f"_e{epi}" if epi else ""
+    if wl.fused_pool:   # fused pooling changes the stored tiling
+        key += (f"_pool{wl.fused_pool}{wl.pool_k}"
+                f"s{wl.pool_stride}p{wl.pool_pad}")
+        if wl.pool_ceil:
+            key += "c"
+    if wl.concat_total:  # concat-offset write constrains oc_bn candidates
+        key += f"_cat{wl.concat_offset}of{wl.concat_total}"
+    return key
 
 
 class ScheduleDatabase:
@@ -264,12 +280,23 @@ class ScheduleDatabase:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self.path.write_text(json.dumps(blob))
 
+    @staticmethod
+    def _known_fields(cls, d: Dict) -> Dict:
+        """Forward-compat: a database written by a newer version may carry
+        workload/schedule keys this version doesn't know — drop them instead
+        of crashing the load (their *known* fields still key correctly)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return {k: v for k, v in d.items() if k in names}
+
     def _load(self) -> None:
         blob = json.loads(self.path.read_text())
         for key, rec in blob.items():
-            wl = ConvWorkload(**rec["workload"])
-            ranked = [RankedSchedule(ConvSchedule(**r["schedule"]), r["cost_s"])
-                      for r in rec["ranked"]]
+            wl = ConvWorkload(**self._known_fields(ConvWorkload,
+                                                   rec["workload"]))
+            ranked = [RankedSchedule(
+                ConvSchedule(**self._known_fields(ConvSchedule,
+                                                  r["schedule"])),
+                r["cost_s"]) for r in rec["ranked"]]
             self._mem[key] = LocalSearchResult(
                 workload=wl, ranked=ranked,
                 measured=rec.get("measured", False),

@@ -44,6 +44,10 @@ def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
     a = node.attrs
     n, c, h, w = in_shape
     fused = node.op == "conv_block"
+    concat = fused and bool(a.get("concat_into"))
+    # conv_block inputs: [data, residual?, concat_buf?] — the buffer is
+    # always last when present, so a residual exists only past that slot
+    n_data = 1 + (1 if concat else 0)
     return ConvWorkload(
         batch=n, in_channels=c, out_channels=a["out_channels"],
         height=h, width=w, kh=a["kh"], kw=a["kw"],
@@ -54,7 +58,14 @@ def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
         # schedules with their epilogue included
         fused_bn=fused and a.get("bn_from") is not None,
         fused_relu=fused and bool(a.get("relu")),
-        fused_residual=fused and len(node.inputs) > 1)
+        fused_residual=fused and len(node.inputs) > n_data,
+        fused_pool=a.get("pool_kind", "") if fused else "",
+        pool_k=a.get("pool_k", 0) if fused else 0,
+        pool_stride=a.get("pool_stride", 0) if fused else 0,
+        pool_pad=a.get("pool_pad", 0) if fused else 0,
+        pool_ceil=bool(a.get("pool_ceil", False)) if fused else False,
+        concat_offset=a.get("concat_offset", 0) if concat else 0,
+        concat_total=a.get("concat_total", 0) if concat else 0)
 
 
 @dataclasses.dataclass
@@ -95,14 +106,16 @@ def conv_dependencies(graph: Graph):
             feeder = graph.nodes[node.inputs[0]]
             for a in ancestors[feeder.name]:
                 edges.append((a, node.name, feeder.shape))
-            if len(node.inputs) > 1:
-                # fused residual: consumed in this conv's *output* layout, so
-                # the producing conv's oc_bn must match ours — a coupling,
-                # not a normal ic/oc edge (§3.3.2 Elementwise_Add rule)
-                res = graph.nodes[node.inputs[1]]
-                for a in ancestors[res.name]:
+            # fused residual and concat buffer: both extra inputs are
+            # consumed in this conv's *output* layout, so each producing
+            # conv's oc_bn must match ours — couplings, not normal ic/oc
+            # edges (§3.3.2 Elementwise_Add rule; the concat buffer couples
+            # sibling writers and the alloc seed the same way)
+            for extra in node.inputs[1:]:
+                src = graph.nodes[extra]
+                for a in ancestors[src.name]:
                     if a != node.name:
-                        couplings.append((a, node.name, res.shape))
+                        couplings.append((a, node.name, src.shape))
             ancestors[node.name] = frozenset([node.name])
         elif node.op in MULTI_INPUT_SAME_LAYOUT:
             sets = [ancestors[i] for i in node.inputs]
@@ -194,7 +207,12 @@ def _uniform_schedules(graph: Graph, locals_: Dict[str, LocalSearchResult],
         wl = locals_[node.name].workload
         cin = wl.in_channels // wl.groups
         ic = max(f for f in candidate_blocks(cin) if f <= block)
-        oc = max(f for f in candidate_blocks(wl.out_channels) if f <= block)
+        ocs = [f for f in candidate_blocks(wl.out_channels) if f <= block]
+        if wl.concat_total:
+            # the blocked concat-offset store must land on block boundaries
+            ocs = [f for f in ocs if wl.concat_offset % f == 0
+                   and wl.concat_total % f == 0] or [1]
+        oc = max(ocs)
         best = locals_[node.name].best_for_layout(ic, oc)
         if best is not None:
             out[node.name] = best.schedule
@@ -285,11 +303,12 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
 
 
 def _predicted_epilogue_s(graph: Graph) -> float:
-    """Elementwise-epilogue traffic of the planned graph's *standalone* BN /
-    ReLU / add nodes (full read+write passes each).  Fused conv_block
-    epilogues are not charged here — their (residual-read-only) traffic is
-    part of ``conv_schedule_cost`` via the workload's fused flags, so the
-    local search already ranked schedules with the epilogue included."""
+    """Shallow-epilogue traffic of the planned graph's *standalone* BN /
+    ReLU / add / pooling / concat nodes (full read+write passes each).
+    Fused conv_block epilogues are not charged here — their
+    (residual-read-only) traffic is part of ``conv_schedule_cost`` via the
+    workload's fused flags, so the local search already ranked schedules
+    with the epilogue included."""
     total = 0.0
     for node in graph.topo_order():
         if node.shape is None or len(node.shape) != 4:
@@ -300,4 +319,19 @@ def _predicted_epilogue_s(graph: Graph) -> float:
             total += epilogue_cost_s(node.shape, relu=True)
         elif node.op == "add":
             total += epilogue_cost_s(node.shape, residual=True)
+        elif node.op in ("max_pool", "avg_pool"):
+            # charged on the *input* tensor (the read side dominates)
+            src = graph.nodes[node.inputs[0]].shape
+            if src is not None and len(src) == 4:
+                total += epilogue_cost_s(
+                    src, pool_stride=node.attrs.get("stride",
+                                                    node.attrs["k"]))
+        elif node.op == "concat":
+            total += epilogue_cost_s(node.shape, concat=True)
+        elif node.op == "concat_alloc":
+            # only the pass-through operands are still copied into the buffer
+            for i in node.inputs:
+                src = graph.nodes[i].shape
+                if src is not None and len(src) == 4:
+                    total += epilogue_cost_s(src, concat=True)
     return total

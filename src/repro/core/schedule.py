@@ -16,6 +16,7 @@ import dataclasses
 import itertools
 from typing import Iterator, List, Tuple
 
+from repro.core.epilogue import EpilogueSpec, PoolSpec
 from repro.core.layout import candidate_blocks
 
 
@@ -43,6 +44,19 @@ class ConvWorkload:
     fused_bn: bool = False
     fused_relu: bool = False
     fused_residual: bool = False
+    # fused pooling: "" = none, else "max"/"avg" with the pool geometry —
+    # the stored output shrinks to the pooled tiling and the schedule's
+    # output blocking must account for it (candidate_schedules).
+    fused_pool: str = ""
+    pool_k: int = 0
+    pool_stride: int = 0
+    pool_pad: int = 0
+    pool_ceil: bool = False
+    # concat-write: the block stores its channels at ``concat_offset`` into
+    # a shared ``concat_total``-channel buffer (0 = none); oc_bn candidates
+    # must divide both so the blocked offset store is legal.
+    concat_offset: int = 0
+    concat_total: int = 0
 
     @property
     def pw(self) -> int:
@@ -53,6 +67,25 @@ class ConvWorkload:
         oh = (self.height + 2 * self.pad - self.kh) // self.stride + 1
         ow = (self.width + 2 * self.pw - self.kw) // self.stride + 1
         return oh, ow
+
+    def epilogue_spec(self) -> EpilogueSpec:
+        """The structural epilogue the kernels specialize on (BN scale/shift
+        and residual presence travel as tensors, not in the spec)."""
+        pool = PoolSpec(self.fused_pool, self.pool_k, self.pool_stride,
+                        self.pool_pad, self.pool_ceil) \
+            if self.fused_pool else None
+        return EpilogueSpec(relu=self.fused_relu, pool=pool,
+                            concat_offset=self.concat_offset,
+                            concat_total=self.concat_total)
+
+    @property
+    def pooled_out_hw(self) -> Tuple[int, int]:
+        """Spatial dims of the *stored* output (post fused pooling)."""
+        oh, ow = self.out_hw
+        if not self.fused_pool:
+            return oh, ow
+        return PoolSpec(self.fused_pool, self.pool_k, self.pool_stride,
+                        self.pool_pad, self.pool_ceil).out_hw(oh, ow)
 
     @property
     def flops(self) -> int:
@@ -107,6 +140,11 @@ class ConvSchedule:
             raise ValueError(f"ow_bn {self.ow_bn} !| {ow}")
         if oh % self.oh_bn:
             raise ValueError(f"oh_bn {self.oh_bn} !| {oh}")
+        if wl.concat_total and (wl.concat_offset % self.oc_bn
+                                or wl.concat_total % self.oc_bn):
+            raise ValueError(
+                f"oc_bn {self.oc_bn} straddles the concat write "
+                f"(offset {wl.concat_offset}, total {wl.concat_total})")
         if self.variant != "auto" and self.variant not in VARIANTS:
             raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
 
@@ -147,8 +185,22 @@ def candidate_schedules(wl: ConvWorkload, max_candidates: int = 0,
     cin = wl.in_channels // wl.groups
     ics = _channel_candidates(cin)
     ocs = _channel_candidates(wl.out_channels)
+    if wl.concat_total:
+        # concat-write fusion: the blocked channel-offset store is legal only
+        # when oc_bn divides the offset and the buffer's channel count (the
+        # block boundary must not straddle the write).  oc_bn = 1 always
+        # qualifies, so the filter can never empty the list.
+        ocs = [f for f in ocs
+               if wl.concat_offset % f == 0 and wl.concat_total % f == 0]
     ows = [f for f in _OW_CANDIDATES if ow % f == 0] or [1]
-    ohs = [f for f in (8, 4, 2, 1) if oh % f == 0] or [1]
+    if wl.fused_pool:
+        # fused pooling reduces over the whole conv plane before the store,
+        # so the output blocking collapses to whole-plane rows — the pooled
+        # spatial tiling no longer matches the conv rows and partial-plane
+        # blocks would straddle pooling windows.
+        ohs = [oh]
+    else:
+        ohs = [f for f in (8, 4, 2, 1) if oh % f == 0] or [1]
     out: List[ConvSchedule] = []
     for ic_bn, oc_bn, ow_bn in itertools.product(ics[:6], ocs[:6], ows[:4]):
         for oh_bn in ohs[:2]:

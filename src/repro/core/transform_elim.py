@@ -106,9 +106,11 @@ class _Rewriter:
                             transform_bytes_total=self.bytes_moved)
 
     def _rewrite_conv(self, node: Node, ins: List[str]) -> None:
-        # handles conv2d and the fused conv_block; a conv_block's optional
-        # second input (the residual) is added in the conv's *output* layout,
-        # because the fused add happens after the channel contraction
+        # handles conv2d and the fused conv_block; a conv_block's extra
+        # inputs (the residual, and the shared concat buffer under
+        # concat-write fusion) are consumed in the conv's *output* layout,
+        # because the fused add / offset store happen after the channel
+        # contraction
         sched = self.schedules.get(node.name)
         if sched is None:  # NCHW-baseline mode: no blocking at all
             ins = [self._ensure(i, NCHW) for i in ins]
@@ -121,9 +123,7 @@ class _Rewriter:
             data = self._ensure(self._ensure(ins[0], NCHW), want_in)
         else:
             data = self._ensure(ins[0], want_in)
-        new_ins = [data]
-        if len(ins) > 1:
-            new_ins.append(self._ensure(ins[1], want_out))
+        new_ins = [data] + [self._ensure(i, want_out) for i in ins[1:]]
         new = self._emit(node, new_ins, want_out)
         if self.around:
             back = self._ensure(new, NCHW)
@@ -138,6 +138,16 @@ class _Rewriter:
             chans = [self.src.nodes[i].shape[1] for i in node.inputs]
             lays = [self.layout[i] for i in ins]
             ok = all(c % target.block == 0 for c in chans)
+            if not ok:
+                target = NCHW
+        if node.op == "concat_alloc" and target.is_blocked:
+            # the buffer seed additionally needs every pass-through offset
+            # and the buffer's own channel count on block boundaries
+            a = node.attrs
+            chans = [self.src.nodes[i].shape[1] for i in node.inputs]
+            ok = (a["total_channels"] % target.block == 0
+                  and all(c % target.block == 0 for c in chans)
+                  and all(o % target.block == 0 for o in a["offsets"]))
             if not ok:
                 target = NCHW
         ins = [self._ensure(i, target) for i in ins]

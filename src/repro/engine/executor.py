@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.epilogue import EpilogueSpec, PoolSpec
 from repro.core.layout import Layout, NCHW, kernel_to_kcrs_ck
 from repro.core.planner import Plan
 from repro.nn import ops
@@ -156,12 +157,26 @@ def _eval_node(node, lay: Layout, schedule, use_pallas: bool,
     if node.op == "conv_block":
         ph = a.get("pad", 0)
         pw = a.get("pad_w", -1)
+        # inputs: [data, residual?, concat_buf?] — buffer last when fused
+        concat_into = bool(a.get("concat_into"))
+        out_buf = ins[-1] if concat_into else None
+        n_extra = len(ins) - 1 - (1 if concat_into else 0)
+        residual = ins[1] if n_extra >= 1 else None
+        pool = None
+        if a.get("pool_kind"):
+            pool = PoolSpec(a["pool_kind"], a["pool_k"], a["pool_stride"],
+                            a.get("pool_pad", 0),
+                            bool(a.get("pool_ceil", False)))
+        spec = EpilogueSpec(
+            relu=bool(a.get("relu")), pool=pool,
+            concat_offset=a.get("concat_offset", 0) if concat_into else 0,
+            concat_total=a.get("concat_total", 0) if concat_into else 0)
         return ops.conv_block(
             ins[0], p["w"], p.get("scale"), p.get("shift"),
-            ins[1] if len(ins) > 1 else None, lay,
+            residual, lay,
             stride=a.get("stride", 1),
             pad=ph if pw < 0 else (ph, pw),
-            groups=a.get("groups", 1), relu=bool(a.get("relu")),
+            groups=a.get("groups", 1), epilogue=spec, out_buf=out_buf,
             schedule=schedule,
             use_pallas=use_pallas, interpret=interpret)
     if node.op == "batch_norm":
@@ -184,6 +199,9 @@ def _eval_node(node, lay: Layout, schedule, use_pallas: bool,
         return ops.add(*ins)
     if node.op == "concat":
         return ops.concat(list(ins), lay)
+    if node.op == "concat_alloc":
+        return ops.concat_alloc(list(ins), a["offsets"],
+                                a["total_channels"], lay)
     if node.op == "flatten":
         return ops.flatten(ins[0])
     if node.op == "reshape":

@@ -19,6 +19,23 @@ pattern.  BlockSpecs stage, per step:
 
 which is exactly the schedule's VMEM working set costed by
 ``core.cost.conv_vmem_bytes``.
+
+The composable epilogue (``core.epilogue.EpilogueSpec``) runs on the last
+reduction step, while the fp32 block is still VMEM-resident:
+
+* affine / residual / ReLU — as in PR 1;
+* **fused pooling** — the conv accumulates into a whole-plane VMEM scratch
+  (the pooled output tiling no longer matches the conv rows, so the output
+  BlockSpec carries the *pooled* block) and the pooling reduction runs over
+  that scratch before the store — the conv-resolution tensor never reaches
+  HBM;
+* **concat-offset store** — the grid's OC dimension runs over the *shared
+  concat buffer's* chunks; chunks inside this block's channel range
+  accumulate the conv, chunks outside copy the incoming buffer through, so
+  the kernel returns the buffer with the block's slice written in place of
+  a standalone concat copy.  (A production backend would alias the buffer
+  via ``input_output_aliases``; the copy-through keeps interpret-mode
+  semantics exact.)
 """
 from __future__ import annotations
 
@@ -27,144 +44,237 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.epilogue import EpilogueSpec, IDENTITY, PoolSpec
 from repro.core.schedule import ConvSchedule
 from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
+
+def _pool_plane(acc: jnp.ndarray, p: PoolSpec) -> jnp.ndarray:
+    """Pool one (H, W, oc_bn) fp32 plane — the shared ``pool2d`` body on
+    VMEM values (static loops), via two broadcast axes so the spatial dims
+    land on pool2d's (2, 3)."""
+    return p.apply(acc[None, None])[0, 0]
 
 
 def _conv_kernel(x_ref, w_ref, *rest, stride: int, kh: int, kw: int,
                  oh_bn: int, ow_bn: int, ow: int, unroll_ker: bool,
                  has_scale: bool, has_shift: bool, has_residual: bool,
-                 relu: bool):
+                 relu: bool, pool: PoolSpec | None, has_buf: bool,
+                 off_chunks: int, own_chunks: int):
     refs = list(rest)
+    acc_scr = refs.pop() if pool is not None else None  # whole-plane scratch
     o_ref = refs.pop()
     scale_ref = refs.pop(0) if has_scale else None
     shift_ref = refs.pop(0) if has_shift else None
     res_ref = refs.pop(0) if has_residual else None
+    buf_ref = refs.pop(0) if has_buf else None
     ci = pl.program_id(3)
     ohb = pl.program_id(2)
+    co = pl.program_id(1)
+    last_ci = ci == pl.num_programs(3) - 1
+    # concat fusion: the OC grid covers the whole shared buffer; only chunks
+    # in [off, off + own) belong to this conv — the rest copy through
+    inside = ((co >= off_chunks) & (co < off_chunks + own_chunks)) \
+        if has_buf else (ci >= 0)
 
-    @pl.when(ci == 0)
+    if has_buf:
+        @pl.when(~inside & (ci == 0))
+        def _copy_through():
+            o_ref[...] = buf_ref[...].astype(o_ref.dtype)
+
+    @pl.when(inside & (ci == 0))
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    w_block = w_ref[0, 0].astype(jnp.float32)  # (KH, KW, ic_bn, oc_bn)
-    n_owb = ow // ow_bn
-
-    for dh in range(oh_bn):  # static: rows of the output block
-        out_row = o_ref[0, 0, dh]  # (OW, oc_bn) fp32, running accumulator
-        in_row_base = (ohb * oh_bn + dh) * stride
-
-        def tap(dy, dx, acc):
-            # one kernel tap: strided input row x weight slice, all ow blocks
-            row = x_ref[0, 0, in_row_base + dy]  # (W_pad, ic_bn)
-            row = row.astype(jnp.float32)
-            wtap = jax.lax.dynamic_index_in_dim(
-                jax.lax.dynamic_index_in_dim(w_block, dy, 0, keepdims=False),
-                dx, 0, keepdims=False)  # (ic_bn, oc_bn)
-            for owb in range(n_owb):  # static: the reg_n loop of Alg. 1 l.15
-                start = owb * ow_bn * stride
-                span = (ow_bn - 1) * stride + 1
-                seg = jax.lax.dynamic_slice_in_dim(row, start + dx, span, 0)
-                patch = seg[::stride]  # (ow_bn, ic_bn)
-                acc = jax.lax.dynamic_update_slice_in_dim(
-                    acc,
-                    jax.lax.dynamic_slice_in_dim(acc, owb * ow_bn, ow_bn, 0)
-                    + jnp.dot(patch, wtap,
-                              preferred_element_type=jnp.float32),
-                    owb * ow_bn, 0)
-            return acc
-
-        if unroll_ker:  # Alg. 1 line 12: "(opt) unroll"
-            acc = out_row
-            for dy in range(kh):
-                for dx in range(kw):
-                    acc = tap(dy, dx, acc)
+        if pool is not None:
+            acc_scr[...] = jnp.zeros_like(acc_scr)
         else:
-            def body(t, acc):
-                return tap(t // kw, t % kw, acc)
-            acc = jax.lax.fori_loop(0, kh * kw, body, out_row)
-        o_ref[0, 0, dh] = acc
+            o_ref[...] = jnp.zeros_like(o_ref)
 
-    if has_scale or has_shift or has_residual or relu:
+    @pl.when(inside)
+    def _accumulate():
+        w_block = w_ref[0, 0].astype(jnp.float32)  # (KH, KW, ic_bn, oc_bn)
+        n_owb = ow // ow_bn
+
+        for dh in range(oh_bn):  # static: rows of the (conv-res) block
+            # running fp32 accumulator row: scratch plane when pooling
+            # (the output ref carries the *pooled* tiling), o_ref otherwise
+            out_row = acc_scr[dh] if pool is not None else o_ref[0, 0, dh]
+            in_row_base = (ohb * oh_bn + dh) * stride
+
+            def tap(dy, dx, acc):
+                # one kernel tap: strided input row x weight slice, all ow
+                # blocks
+                row = x_ref[0, 0, in_row_base + dy]  # (W_pad, ic_bn)
+                row = row.astype(jnp.float32)
+                wtap = jax.lax.dynamic_index_in_dim(
+                    jax.lax.dynamic_index_in_dim(w_block, dy, 0,
+                                                 keepdims=False),
+                    dx, 0, keepdims=False)  # (ic_bn, oc_bn)
+                for owb in range(n_owb):  # static: reg_n loop of Alg. 1 l.15
+                    start = owb * ow_bn * stride
+                    span = (ow_bn - 1) * stride + 1
+                    seg = jax.lax.dynamic_slice_in_dim(row, start + dx,
+                                                       span, 0)
+                    patch = seg[::stride]  # (ow_bn, ic_bn)
+                    acc = jax.lax.dynamic_update_slice_in_dim(
+                        acc,
+                        jax.lax.dynamic_slice_in_dim(acc, owb * ow_bn,
+                                                     ow_bn, 0)
+                        + jnp.dot(patch, wtap,
+                                  preferred_element_type=jnp.float32),
+                        owb * ow_bn, 0)
+                return acc
+
+            if unroll_ker:  # Alg. 1 line 12: "(opt) unroll"
+                acc = out_row
+                for dy in range(kh):
+                    for dx in range(kw):
+                        acc = tap(dy, dx, acc)
+            else:
+                def body(t, acc):
+                    return tap(t // kw, t % kw, acc)
+                acc = jax.lax.fori_loop(0, kh * kw, body, out_row)
+            if pool is not None:
+                acc_scr[dh] = acc
+            else:
+                o_ref[0, 0, dh] = acc
+
+    if has_scale or has_shift or has_residual or relu or pool is not None:
         # §3.1 fused epilogue: on the last reduction step — while the output
         # block is still VMEM-resident — apply the per-channel affine, the
-        # residual add, and ReLU before the block is ever stored to HBM
-        @pl.when(ci == pl.num_programs(3) - 1)
+        # residual add, ReLU, and the pooling reduction before the block is
+        # ever stored to HBM
+        @pl.when(inside & last_ci)
         def _epilogue():
-            acc = o_ref[...]                       # (1, 1, oh_bn, OW, oc_bn)
-            if has_scale:
-                acc = acc * scale_ref[...][None, None, None]   # (1, oc_bn)
-            if has_shift:
-                acc = acc + shift_ref[...][None, None, None]
-            if has_residual:
-                acc = acc + res_ref[...].astype(jnp.float32)
-            if relu:
-                acc = jnp.maximum(acc, 0.0)
-            o_ref[...] = acc
+            if pool is not None:
+                acc = acc_scr[...]                 # (oh, ow, oc_bn) fp32
+                if has_scale:
+                    acc = acc * scale_ref[...]     # (1, oc_bn) broadcasts
+                if has_shift:
+                    acc = acc + shift_ref[...]
+                if has_residual:
+                    acc = acc + res_ref[0, 0].astype(jnp.float32)
+                if relu:
+                    acc = jnp.maximum(acc, 0.0)
+                o_ref[0, 0] = _pool_plane(acc, pool)
+            else:
+                acc = o_ref[...]                   # (1, 1, oh_bn, OW, oc_bn)
+                if has_scale:
+                    acc = acc * scale_ref[...][None, None, None]  # (1, oc_bn)
+                if has_shift:
+                    acc = acc + shift_ref[...][None, None, None]
+                if has_residual:
+                    acc = acc + res_ref[...].astype(jnp.float32)
+                if relu:
+                    acc = jnp.maximum(acc, 0.0)
+                o_ref[...] = acc
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "schedule", "relu", "interpret"))
+    static_argnames=("stride", "schedule", "epilogue", "interpret"))
 def conv2d_nchwc_pallas(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                         scale: jnp.ndarray | None = None,
                         shift: jnp.ndarray | None = None,
                         residual: jnp.ndarray | None = None,
+                        out_buf: jnp.ndarray | None = None,
                         *, stride: int = 1,
                         schedule: ConvSchedule,
-                        relu: bool = False,
+                        epilogue: EpilogueSpec | None = None,
                         interpret: bool = True) -> jnp.ndarray:
     """Blocked conv via pallas_call.  ``x_blocked`` must already be padded:
     (N, C_in//ic_bn, H_pad, W_pad, ic_bn); weights (Ko, Ci, KH, KW, ic, oc).
 
-    The optional fused epilogue (core.fusion's conv_block) applies
+    The composable fused epilogue (``core.epilogue.EpilogueSpec``) applies
     ``out * scale + shift`` (per-channel vectors pre-blocked to
-    ``(Ko, oc_bn)``), adds a ``residual`` in the output's own blocked
-    layout, and clamps with ReLU — all on the last reduction step, before
-    the fp32 accumulator leaves VMEM.
+    ``(Ko, oc_bn)``), adds a ``residual`` in the conv's own blocked layout,
+    clamps with ReLU, runs the fused pooling reduction, and stores at the
+    spec's channel offset into ``out_buf`` (the shared concat buffer) — all
+    on the last reduction step, before the fp32 accumulator leaves VMEM.
     """
+    spec = epilogue or IDENTITY
+    pool = spec.pool
     n, ci_chunks, h_pad, w_pad, ic_bn = x_blocked.shape
     ko_chunks, ci_chunks_w, kh, kw, ic_bn_w, oc_bn = w_blocked.shape
     assert (ci_chunks, ic_bn) == (ci_chunks_w, ic_bn_w), "layout mismatch"
     assert ic_bn == schedule.ic_bn and oc_bn == schedule.oc_bn
     oh = (h_pad - kh) // stride + 1
     ow = (w_pad - kw) // stride + 1
-    oh_bn, ow_bn = schedule.oh_bn, schedule.ow_bn
+    ow_bn = schedule.ow_bn
+    if pool is not None:
+        # pooled output tiling: the conv plane accumulates in a whole-plane
+        # VMEM scratch, so the OH grid collapses and oh_bn covers the plane
+        oh_bn = oh
+        out_h, out_w = pool.out_hw(oh, ow)
+    else:
+        oh_bn = schedule.oh_bn
+        out_h, out_w = oh, ow
     assert oh % oh_bn == 0 and ow % ow_bn == 0, (oh, ow, schedule)
 
-    grid = (n, ko_chunks, oh // oh_bn, ci_chunks)
+    has_buf = spec.writes_concat
+    if has_buf:
+        assert out_buf is not None, "concat-write epilogue needs out_buf"
+        assert spec.concat_offset % oc_bn == 0, (spec.concat_offset, oc_bn)
+        assert spec.concat_total % oc_bn == 0, (spec.concat_total, oc_bn)
+        off_chunks = spec.concat_offset // oc_bn
+        grid_oc = spec.concat_total // oc_bn
+        assert out_buf.shape == (n, grid_oc, out_h, out_w, oc_bn), \
+            (out_buf.shape, (n, grid_oc, out_h, out_w, oc_bn))
+    else:
+        off_chunks = 0
+        grid_oc = ko_chunks
+
+    def _wi(k):
+        # map an output-buffer chunk index to this conv's weight chunk
+        # (clamped for the copy-through chunks, whose weights are unused)
+        return jnp.clip(k - off_chunks, 0, ko_chunks - 1) if has_buf else k
+
+    grid = (n, grid_oc, oh // oh_bn, ci_chunks)
     kernel = functools.partial(
         _conv_kernel, stride=stride, kh=kh, kw=kw, oh_bn=oh_bn,
         ow_bn=ow_bn, ow=ow, unroll_ker=schedule.unroll_ker,
         has_scale=scale is not None, has_shift=shift is not None,
-        has_residual=residual is not None, relu=relu)
+        has_residual=residual is not None, relu=spec.relu, pool=pool,
+        has_buf=has_buf, off_chunks=off_chunks, own_chunks=ko_chunks)
     in_specs = [
         pl.BlockSpec((1, 1, h_pad, w_pad, ic_bn),
                      lambda b, k, o, c: (b, c, 0, 0, 0)),
         pl.BlockSpec((1, 1, kh, kw, ic_bn, oc_bn),
-                     lambda b, k, o, c: (k, c, 0, 0, 0, 0)),
+                     lambda b, k, o, c: (_wi(k), c, 0, 0, 0, 0)),
     ]
     operands = [x_blocked, w_blocked]
     for vec in (scale, shift):
         if vec is not None:
-            assert vec.shape == (ko_chunks, oc_bn), (vec.shape, w_blocked.shape)
+            assert vec.shape == (ko_chunks, oc_bn), (vec.shape,
+                                                     w_blocked.shape)
             in_specs.append(pl.BlockSpec((1, oc_bn),
-                                         lambda b, k, o, c: (k, 0)))
+                                         lambda b, k, o, c: (_wi(k), 0)))
             operands.append(vec.astype(jnp.float32))
     if residual is not None:
+        # consumed at conv resolution, before the pooling reduction
         assert residual.shape == (n, ko_chunks, oh, ow, oc_bn), residual.shape
         in_specs.append(pl.BlockSpec((1, 1, oh_bn, ow, oc_bn),
-                                     lambda b, k, o, c: (b, k, o, 0, 0)))
+                                     lambda b, k, o, c: (b, _wi(k), o, 0, 0)))
         operands.append(residual)
+    if has_buf:
+        # the buffer is staged with exactly the output's block tiling (the
+        # copy-through chunks move one block per grid step)
+        in_specs.append(pl.BlockSpec(
+            (1, 1, out_h if pool is not None else oh_bn, out_w, oc_bn),
+            lambda b, k, o, c: (b, k, o, 0, 0)))
+        operands.append(out_buf)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, oh_bn, ow, oc_bn),
+        out_specs=pl.BlockSpec((1, 1, out_h if pool is not None else oh_bn,
+                                out_w, oc_bn),
                                lambda b, k, o, c: (b, k, o, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(
-            (n, ko_chunks, oh, ow, oc_bn), jnp.float32),
+            (n, grid_oc, out_h, out_w, oc_bn), jnp.float32),
+        scratch_shapes=([pltpu.VMEM((oh, ow, oc_bn), jnp.float32)]
+                        if pool is not None else []),
         compiler_params=_CompilerParams(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "arbitrary")),

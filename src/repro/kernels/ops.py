@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.epilogue import EpilogueSpec, IDENTITY
 from repro.core.layout import kernel_to_kcrs_ck, to_nchwc, from_nchwc
 from repro.core.schedule import ConvSchedule
 from repro.kernels.conv2d_nchwc import conv2d_nchwc_pallas
@@ -133,10 +134,29 @@ _ACC_FNS = {"per_tap": _acc_per_tap, "tap_stack": _acc_tap_stack,
             "scan": _acc_scan, "patch_gemm": _acc_patch_gemm}
 
 
-def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
-                       stride: int, pad, relu: bool,
+def apply_epilogue_fp32(acc: jnp.ndarray, scale, shift, residual,
+                        spec: EpilogueSpec) -> jnp.ndarray:
+    """The composable epilogue on the blocked fp32 accumulator
+    ``(n, Ko, oh, ow, oc_bn)`` — shared by all four template variants, so a
+    new epilogue stage is written once and every lowering gets it.  Order is
+    fixed (see ``core.epilogue``): affine -> residual -> ReLU -> pool."""
+    if scale is not None:   # (Ko, oc_bn) per-channel affine
+        acc = acc * scale.astype(jnp.float32)[None, :, None, None, :]
+    if shift is not None:
+        acc = acc + shift.astype(jnp.float32)[None, :, None, None, :]
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    if spec.relu:
+        acc = jnp.maximum(acc, 0.0)
+    if spec.pool is not None:
+        acc = spec.pool.apply(acc)
+    return acc
+
+
+def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
+                       stride: int, pad, spec: EpilogueSpec,
                        variant: str = "auto") -> jnp.ndarray:
-    """Blocked direct conv + optional fused epilogue as XLA ops — the
+    """Blocked direct conv + composable fused epilogue as XLA ops — the
     template's jnp instantiation, dispatched over the lowering ``variant``
     (one of ``core.schedule.VARIANTS``, or ``"auto"`` for the static
     heuristic: tap_stack below sublane ic_bn, per_tap otherwise).
@@ -146,7 +166,8 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
 
     then (fused, still in the fp32 accumulator — XLA folds these into the
     final accumulation pass instead of separate full-tensor round trips):
-    ``out = relu(out * scale + shift + residual)``.
+    ``out = pool(relu(out * scale + shift + residual))``, optionally stored
+    at a channel offset into the shared concat buffer ``out_buf``.
     """
     xp = pad_blocked(x_blocked, pad)
     n, ci, hp, wp, ic_bn = xp.shape
@@ -157,15 +178,17 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
         variant = "tap_stack" if ic_bn < 8 else "per_tap"
     acc = _ACC_FNS[variant](xp, w_blocked, stride, oh, ow)
     acc = acc.transpose(0, 3, 1, 2, 4)               # -> (n, ko, oh, ow, oc)
-    if scale is not None:   # (Ko, oc_bn) per-channel affine
-        acc = acc * scale.astype(jnp.float32)[None, :, None, None, :]
-    if shift is not None:
-        acc = acc + shift.astype(jnp.float32)[None, :, None, None, :]
-    if residual is not None:
-        acc = acc + residual.astype(jnp.float32)
-    if relu:
-        acc = jnp.maximum(acc, 0.0)
-    return acc.astype(x_blocked.dtype)
+    acc = apply_epilogue_fp32(acc, scale, shift, residual, spec)
+    out = acc.astype(x_blocked.dtype)
+    if spec.writes_concat:
+        # §3.1 concat-aware placement: store this block's channels at its
+        # offset in the shared buffer (under jit XLA updates in place)
+        assert out_buf is not None, "concat-write epilogue needs out_buf"
+        assert spec.concat_offset % oc_bn == 0, (spec.concat_offset, oc_bn)
+        out = jax.lax.dynamic_update_slice(
+            out_buf, out.astype(out_buf.dtype),
+            (0, spec.concat_offset // oc_bn, 0, 0, 0))
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "pad", "variant"))
@@ -173,21 +196,27 @@ def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      stride: int = 1, pad=0,
                      variant: str = "auto") -> jnp.ndarray:
     """Plain blocked conv (no epilogue) — see ``_conv2d_block_core``."""
-    return _conv2d_block_core(x_blocked, w_blocked, None, None, None,
-                              stride, pad, False, variant)
+    return _conv2d_block_core(x_blocked, w_blocked, None, None, None, None,
+                              stride, pad, IDENTITY, variant)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "pad", "relu", "variant"))
+                   static_argnames=("stride", "pad", "relu", "variant",
+                                    "epilogue"))
 def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      scale: jnp.ndarray | None = None,
                      shift: jnp.ndarray | None = None,
                      residual: jnp.ndarray | None = None,
+                     out_buf: jnp.ndarray | None = None,
                      stride: int = 1, pad=0,
-                     relu: bool = False, variant: str = "auto") -> jnp.ndarray:
-    """Fused CONV->affine(->add)->ReLU block — see ``_conv2d_block_core``."""
+                     relu: bool = False, variant: str = "auto",
+                     epilogue: EpilogueSpec | None = None) -> jnp.ndarray:
+    """Fused CONV + composable epilogue block — see ``_conv2d_block_core``.
+    ``relu`` is kept as a shorthand for the PR-1 call sites; it merges into
+    ``epilogue`` (the full spec: ReLU, fused pooling, concat-offset store)."""
+    spec = (epilogue or IDENTITY).with_relu(relu)
     return _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
-                              stride, pad, relu, variant)
+                              out_buf, stride, pad, spec, variant)
 
 
 def _schedule_variant(schedule: ConvSchedule | None) -> str:
@@ -215,22 +244,28 @@ def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
 def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                          scale: jnp.ndarray | None = None,
                          shift: jnp.ndarray | None = None,
-                         residual: jnp.ndarray | None = None, *,
+                         residual: jnp.ndarray | None = None,
+                         out_buf: jnp.ndarray | None = None, *,
                          stride: int = 1, pad=0, relu: bool = False,
+                         epilogue: EpilogueSpec | None = None,
                          schedule: ConvSchedule | None = None,
                          use_pallas: bool = False,
                          interpret: bool = True) -> jnp.ndarray:
     """Fused conv_block entry on blocked tensors (engine-facing).  ``scale``
     and ``shift`` are per-channel vectors pre-blocked to ``(Ko, oc_bn)``;
-    ``residual`` arrives in the output's own NCHW[oc_bn]c layout."""
+    ``residual`` arrives in the conv's own NCHW[oc_bn]c output layout, and
+    ``out_buf`` (concat fusion) is the shared blocked buffer the epilogue
+    spec's channel-offset store writes into."""
+    spec = (epilogue or IDENTITY).with_relu(relu)
     if use_pallas:
         assert schedule is not None
         xp = pad_blocked(x_blocked, pad)
         return conv2d_nchwc_pallas(xp, w_blocked, scale, shift, residual,
-                                   stride=stride, schedule=schedule,
-                                   relu=relu, interpret=interpret)
+                                   out_buf, stride=stride, schedule=schedule,
+                                   epilogue=spec, interpret=interpret)
     return conv2d_block_jnp(x_blocked, w_blocked, scale, shift, residual,
-                            stride=stride, pad=pad, relu=relu,
+                            out_buf, stride=stride, pad=pad,
+                            epilogue=spec,
                             variant=_schedule_variant(schedule))
 
 

@@ -14,6 +14,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.epilogue import EpilogueSpec, pool2d
 from repro.core.layout import Layout, relayout
 from repro.core.schedule import ConvSchedule
 from repro.kernels.ops import conv2d_block_blocked, conv2d_blocked
@@ -75,19 +76,26 @@ def conv_block(x: jnp.ndarray, w: jnp.ndarray,
                scale: Optional[jnp.ndarray], shift: Optional[jnp.ndarray],
                residual: Optional[jnp.ndarray], layout: Layout, *,
                stride: int = 1, pad=0, groups: int = 1, relu: bool = False,
+               epilogue: Optional[EpilogueSpec] = None,
+               out_buf: Optional[jnp.ndarray] = None,
                schedule: Optional[ConvSchedule] = None,
                use_pallas: bool = False,
                interpret: bool = True) -> jnp.ndarray:
-    """Fused CONV -> per-channel affine (-> residual add) -> ReLU (§3.1
-    operation fusion).  ``w`` arrives pre-transformed for ``layout`` with BN
-    scale usually pre-folded in (then ``scale`` is None); ``scale``/``shift``
-    are pre-blocked per-channel vectors — ``(Ko, oc_bn)`` blocked,
-    ``(C, 1, 1)`` in NCHW — and ``residual`` is in the output layout."""
+    """Fused CONV + composable epilogue (§3.1 operation fusion): per-channel
+    affine (-> residual add) -> ReLU -> fused pooling, optionally stored at a
+    channel offset into the shared concat buffer ``out_buf``.  ``w`` arrives
+    pre-transformed for ``layout`` with BN scale usually pre-folded in (then
+    ``scale`` is None); ``scale``/``shift`` are pre-blocked per-channel
+    vectors — ``(Ko, oc_bn)`` blocked, ``(C, 1, 1)`` in NCHW — and
+    ``residual`` is in the conv's own output layout (conv resolution,
+    pre-pool)."""
+    spec = (epilogue or EpilogueSpec()).with_relu(relu)
     if layout.is_blocked:
         assert groups == 1, "grouped convs run in NCHW"
         return conv2d_block_blocked(
-            x, w, scale, shift, residual, stride=stride, pad=pad, relu=relu,
-            schedule=schedule, use_pallas=use_pallas, interpret=interpret)
+            x, w, scale, shift, residual, out_buf, stride=stride, pad=pad,
+            epilogue=spec, schedule=schedule, use_pallas=use_pallas,
+            interpret=interpret)
     out = conv2d_nchw_direct(x, w, stride=stride, pad=pad,
                              groups=groups).astype(jnp.float32)
     if scale is not None:
@@ -96,9 +104,17 @@ def conv_block(x: jnp.ndarray, w: jnp.ndarray,
         out = out + shift[None]
     if residual is not None:
         out = out + residual.astype(jnp.float32)
-    if relu:
+    if spec.relu:
         out = jnp.maximum(out, 0.0)
-    return out.astype(x.dtype)
+    if spec.pool is not None:
+        out = spec.pool.apply(out)
+    out = out.astype(x.dtype)
+    if spec.writes_concat:
+        assert out_buf is not None, "concat-write epilogue needs out_buf"
+        out = jax.lax.dynamic_update_slice(
+            out_buf, out.astype(out_buf.dtype),
+            (0, spec.concat_offset, 0, 0))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -141,47 +157,12 @@ def l2_normalize(x: jnp.ndarray, layout: Layout, eps: float = 1e-12
 # Pooling — spatial axes are (2, 3) in both layouts
 # ---------------------------------------------------------------------------
 
-def _pool(x: jnp.ndarray, k: int, stride: int, pad: int, ceil_mode: bool,
-          reducer: str) -> jnp.ndarray:
-    h, w = x.shape[2], x.shape[3]
-    if ceil_mode:
-        oh = -(-(h + 2 * pad - k) // stride) + 1
-        ow = -(-(w + 2 * pad - k) // stride) + 1
-        eh = (oh - 1) * stride + k - h - pad
-        ew = (ow - 1) * stride + k - w - pad
-    else:
-        oh = (h + 2 * pad - k) // stride + 1
-        ow = (w + 2 * pad - k) // stride + 1
-        eh, ew = pad, pad
-    fill = -jnp.inf if reducer == "max" else 0.0
-    widths = [(0, 0)] * x.ndim
-    widths[2] = (pad, max(eh, pad))
-    widths[3] = (pad, max(ew, pad))
-    xp = jnp.pad(x, widths, constant_values=fill)
-    acc = None
-    for dh in range(k):
-        for dw in range(k):
-            sl = [slice(None)] * x.ndim
-            sl[2] = slice(dh, dh + oh * stride, stride)
-            sl[3] = slice(dw, dw + ow * stride, stride)
-            patch = xp[tuple(sl)]
-            if acc is None:
-                acc = patch
-            elif reducer == "max":
-                acc = jnp.maximum(acc, patch)
-            else:
-                acc = acc + patch
-    if reducer == "avg":
-        acc = acc / (k * k)
-    return acc
-
-
 def max_pool(x, k, stride=None, pad=0, ceil_mode=False):
-    return _pool(x, k, stride or k, pad, ceil_mode, "max")
+    return pool2d(x, k, stride or k, pad, ceil_mode, "max")
 
 
 def avg_pool(x, k, stride=None, pad=0, ceil_mode=False):
-    return _pool(x, k, stride or k, pad, ceil_mode, "avg")
+    return pool2d(x, k, stride or k, pad, ceil_mode, "avg")
 
 
 def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
@@ -202,6 +183,30 @@ def add(*xs: jnp.ndarray) -> jnp.ndarray:
 def concat(xs: Sequence[jnp.ndarray], layout: Layout) -> jnp.ndarray:
     # channel concat: super-channel axis is 1 in NCHW, blocked, and 2-D
     return jnp.concatenate(xs, axis=1)
+
+
+def concat_alloc(xs: Sequence[jnp.ndarray], offsets: Sequence[int],
+                 total_channels: int, layout: Layout) -> jnp.ndarray:
+    """Seed the shared concat buffer for concat-aware fusion: allocate the
+    full ``total_channels`` buffer and place the *pass-through* operands (the
+    ones whose producers could not take a fused channel-offset write) at
+    their channel offsets.  The fused conv_block producers then write their
+    own slices directly into this buffer."""
+    ref = xs[0]
+    if layout.is_blocked:
+        x = layout.block
+        assert total_channels % x == 0, (total_channels, layout)
+        shape = (ref.shape[0], total_channels // x) + ref.shape[2:]
+    else:
+        shape = (ref.shape[0], total_channels) + ref.shape[2:]
+    buf = jnp.zeros(shape, dtype=ref.dtype)
+    for arr, off in zip(xs, offsets):
+        if layout.is_blocked:
+            assert off % layout.block == 0, (off, layout)
+            off = off // layout.block
+        idx = (0, off) + (0,) * (buf.ndim - 2)
+        buf = jax.lax.dynamic_update_slice(buf, arr.astype(buf.dtype), idx)
+    return buf
 
 
 def flatten(x: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,360 @@
+"""Oracle-backed epilogue test matrix (ISSUE 3).
+
+Every template variant (per_tap / tap_stack / scan / patch_gemm) x every
+epilogue shape {none, bn, bn+relu, residual, max_pool, avg_pool, pool+relu,
+concat-write} x conv stride {1, 2} x asymmetric padding, checked against
+the NCHW reference path to 1e-5 — the correctness backbone of the
+composable ``EpilogueSpec``.
+
+The oracle is deliberately independent of the fused kernels: the conv comes
+from ``kernels.ref.conv2d_nchw_ref`` and every epilogue stage is re-applied
+in NCHW with the engine's own standalone ops (``nn.ops`` pooling, numpy
+affine/relu/slice-write), exactly what an unfused graph would execute.
+
+Graph-level sections cover the two new fusion patterns end to end: the stem
+``conv -> bn -> relu -> max_pool`` collapsing to one conv_block, and
+DenseNet-style concat-write placement (conv_blocks writing channel-offset
+slices into the shared buffer through a ``concat_alloc`` seed).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.epilogue import EpilogueSpec, PoolSpec
+from repro.core.fusion import fuse_graph
+from repro.core.graph import Graph
+from repro.core.layout import from_nchwc, kernel_to_kcrs_ck, to_nchwc
+from repro.core.planner import plan
+from repro.core.schedule import VARIANTS, ConvSchedule, ConvWorkload
+from repro.engine import compile_model
+from repro.kernels.ops import conv2d_block_jnp
+from repro.kernels.ref import conv2d_nchw_ref
+from repro.nn import ops as nn_ops
+from repro.nn.init import init_params
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+# epilogue mode -> (bn, relu, residual, pool kind, concat)
+EPILOGUES = {
+    "none":      (False, False, False, None, False),
+    "bn":        (True, False, False, None, False),
+    "bn_relu":   (True, True, False, None, False),
+    "residual":  (False, False, True, None, False),
+    "max_pool":  (False, False, False, "max", False),
+    "avg_pool":  (False, False, False, "avg", False),
+    "pool_relu": (False, True, False, "max", False),
+    "concat":    (False, False, False, None, True),
+}
+
+
+def _oracle(x, w, scale, shift, res_nchw, spec: EpilogueSpec, stride, pad,
+            buf_nchw):
+    """The NCHW reference path: independent conv oracle + the engine's own
+    standalone epilogue ops, in graph order."""
+    out = np.asarray(conv2d_nchw_ref(x, w, stride=stride, pad=pad),
+                     np.float32)
+    if scale is not None:
+        out = out * scale[None, :, None, None]
+    if shift is not None:
+        out = out + shift[None, :, None, None]
+    if res_nchw is not None:
+        out = out + res_nchw
+    if spec.relu:
+        out = np.maximum(out, 0.0)
+    if spec.pool is not None:
+        p = spec.pool
+        pool = nn_ops.max_pool if p.kind == "max" else nn_ops.avg_pool
+        out = np.asarray(pool(jnp.asarray(out), p.k, p.stride, p.pad,
+                              p.ceil_mode))
+    if spec.writes_concat:
+        full = buf_nchw.copy()
+        full[:, spec.concat_offset:spec.concat_offset + out.shape[1]] = out
+        out = full
+    return out
+
+
+def _run_case(variant, mode, stride, pad, *, ic_bn=8, oc_bn=8, hw=9, seed=0):
+    bn, relu, residual, pool_kind, concat = EPILOGUES[mode]
+    cin, cout, kh = ic_bn * 2, oc_bn * 2, 3
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, cin, hw, hw)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(cout, cin, kh, kh)).astype(np.float32))
+    xb = to_nchwc(x, ic_bn)
+    wb = kernel_to_kcrs_ck(w, ic_bn, oc_bn)
+    ph, pw = (pad, pad) if isinstance(pad, int) else pad
+    oh = (hw + 2 * ph - kh) // stride + 1
+    ow = (hw + 2 * pw - kh) // stride + 1
+
+    pool = PoolSpec(pool_kind, 3, 2, 1) if pool_kind else None
+    total = cout * 2
+    spec = EpilogueSpec(relu=relu, pool=pool,
+                        concat_offset=cout if concat else 0,
+                        concat_total=total if concat else 0)
+
+    scale = rng.normal(size=cout).astype(np.float32) if bn else None
+    shift = rng.normal(size=cout).astype(np.float32) if bn else None
+    res_nchw = rng.normal(size=(2, cout, oh, ow)).astype(np.float32) \
+        if residual else None
+    buf_nchw = None
+    out_buf = None
+    if concat:
+        sh, sw = spec.out_hw(oh, ow)
+        buf_nchw = rng.normal(size=(2, total, sh, sw)).astype(np.float32)
+        out_buf = to_nchwc(jnp.asarray(buf_nchw), oc_bn)
+
+    out = conv2d_block_jnp(
+        xb, wb,
+        jnp.asarray(scale.reshape(-1, oc_bn)) if bn else None,
+        jnp.asarray(shift.reshape(-1, oc_bn)) if bn else None,
+        to_nchwc(jnp.asarray(res_nchw), oc_bn) if residual else None,
+        out_buf, stride=stride, pad=pad, epilogue=spec, variant=variant)
+    want = _oracle(x, w, scale, shift, res_nchw, spec, stride, pad, buf_nchw)
+    np.testing.assert_allclose(np.asarray(from_nchwc(out)), want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# The matrix: every variant x epilogue x stride, plus asymmetric padding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("mode", sorted(EPILOGUES))
+@pytest.mark.parametrize("stride", [1, 2])
+def test_epilogue_matrix(variant, mode, stride):
+    _run_case(variant, mode, stride, pad=1)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("mode", ["bn_relu", "pool_relu", "concat"])
+@pytest.mark.parametrize("pad", [(0, 2), (2, 0)], ids=["pad-w", "pad-h"])
+def test_epilogue_matrix_asym_pad(variant, mode, pad):
+    _run_case(variant, mode, stride=1, pad=pad, hw=8, seed=1)
+
+
+def test_epilogue_matrix_stem_channels():
+    """The RGB-stem shape (sub-sublane ic_bn=3) through the pooled epilogue."""
+    for variant in VARIANTS:
+        _run_case(variant, "pool_relu", stride=2, pad=1, ic_bn=3, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# Spec semantics
+# ---------------------------------------------------------------------------
+
+def test_pool_spec_out_hw_matches_engine_pool():
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(1, 8, 11, 13)).astype(np.float32))
+    for kind in ("max", "avg"):
+        for ceil in (False, True):
+            p = PoolSpec(kind, 3, 2, 1, ceil)
+            pool = nn_ops.max_pool if kind == "max" else nn_ops.avg_pool
+            got = pool(x, 3, 2, 1, ceil)
+            assert p.out_hw(11, 13) == got.shape[2:]
+
+
+def test_bad_pool_kind_rejected():
+    with pytest.raises(ValueError):
+        PoolSpec("mean", 2, 2)
+
+
+def test_epilogue_spec_is_jit_static():
+    """Specs must be hashable (they ride through jax.jit as static args)."""
+    a = EpilogueSpec(relu=True, pool=PoolSpec("max", 3, 2, 1))
+    b = EpilogueSpec(relu=True, pool=PoolSpec("max", 3, 2, 1))
+    assert hash(a) == hash(b) and a == b
+
+
+# ---------------------------------------------------------------------------
+# Graph level: pooled-stem fusion
+# ---------------------------------------------------------------------------
+
+def _stem_graph(image=32, cout=16):
+    g = Graph()
+    g.add("in", "input")
+    g.add("stem", "conv2d", ["in"], in_channels=3, out_channels=cout,
+          kh=7, kw=7, stride=2, pad=3)
+    g.add("stem_bn", "batch_norm", ["stem"])
+    g.add("stem_relu", "relu", ["stem_bn"])
+    g.add("stem_pool", "max_pool", ["stem_relu"], k=3, stride=2, pad=1)
+    g.add("gap", "global_avg_pool", ["stem_pool"])
+    g.mark_output("gap")
+    return g, {"in": (1, 3, image, image)}
+
+
+def _densenet_graph(image=8, layers=3, growth=8):
+    g = Graph()
+    g.add("in", "input")
+    g.add("stem", "conv2d", ["in"], in_channels=3, out_channels=16,
+          kh=3, kw=3, pad=1)
+    g.add("stem_bn", "batch_norm", ["stem"])
+    g.add("stem_relu", "relu", ["stem_bn"])
+    y, c = "stem_relu", 16
+    for i in range(layers):
+        g.add(f"l{i}_bn", "batch_norm", [y])
+        g.add(f"l{i}_relu", "relu", [f"l{i}_bn"])
+        g.add(f"l{i}_conv", "conv2d", [f"l{i}_relu"], in_channels=c,
+              out_channels=growth, kh=3, kw=3, pad=1)
+        g.add(f"l{i}_cat", "concat", [y, f"l{i}_conv"])
+        y = f"l{i}_cat"
+        c += growth
+    g.add("gap", "global_avg_pool", [y])
+    g.mark_output("gap")
+    return g, {"in": (1, 3, image, image)}
+
+
+def test_stem_pool_absorbed_into_conv_block():
+    g, shapes = _stem_graph()
+    g.infer_shapes(shapes)
+    fused, report = fuse_graph(g)
+    assert report.n_pool_fused == 1
+    blk = fused.nodes["stem"]
+    assert blk.op == "conv_block"
+    assert blk.attrs["bn_from"] == "stem_bn" and blk.attrs["relu"] is True
+    assert blk.attrs["pool_kind"] == "max"
+    assert (blk.attrs["pool_k"], blk.attrs["pool_stride"],
+            blk.attrs["pool_pad"]) == (3, 2, 1)
+    assert "stem_pool" not in fused.nodes
+    # the block's shape is the *pooled* shape
+    fused.infer_shapes(shapes)
+    assert fused.nodes["stem"].shape == g.nodes["stem_pool"].shape
+
+
+def test_pool_with_fanout_does_not_fuse():
+    """A relu feeding the pool AND another consumer keeps the pool node."""
+    g, shapes = _stem_graph()
+    g.add("extra", "relu", ["stem_relu"])
+    g.mark_output("extra")
+    g.infer_shapes(shapes)
+    fused, report = fuse_graph(g)
+    assert report.n_pool_fused == 0
+    assert "stem_pool" in fused.nodes
+
+
+@pytest.mark.parametrize("dispatch", ["whole", "op"])
+def test_pooled_stem_fused_matches_unfused(dispatch, rng):
+    g, shapes = _stem_graph()
+    params = init_params(g, shapes, seed=7)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(plan(g, shapes, mode="global-search"),
+                        params).predict(x)
+    p = plan(g, shapes, mode="fusion")
+    assert p.fusion is not None and p.fusion.n_pool_fused == 1
+    out = compile_model(p, params, dispatch=dispatch).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pooled_workload_rides_into_schedule_search():
+    """The fused_pool flags reach the workload, constrain the output
+    blocking to whole-plane rows, and key the database separately."""
+    from repro.core.local_search import _wl_key
+    from repro.core.planner import make_workload
+    from repro.core.schedule import candidate_schedules
+    g, shapes = _stem_graph()
+    g.infer_shapes(shapes)
+    fused, _ = fuse_graph(g)
+    fused.infer_shapes(shapes)
+    wl = make_workload(fused.nodes["stem"], shapes["in"])
+    assert wl.fused_pool == "max" and wl.pool_stride == 2
+    assert wl.pooled_out_hw == g.nodes["stem_pool"].shape[2:]
+    oh, _ = wl.out_hw
+    assert all(s.oh_bn == oh for s in candidate_schedules(wl))
+    plain = ConvWorkload(**{**{f: getattr(wl, f) for f in (
+        "batch", "in_channels", "out_channels", "height", "width", "kh",
+        "kw", "stride", "pad")}})
+    assert _wl_key(wl) != _wl_key(plain)
+    assert "_poolmax" in _wl_key(wl)
+
+
+# ---------------------------------------------------------------------------
+# Graph level: concat-write fusion
+# ---------------------------------------------------------------------------
+
+def test_concat_rewritten_to_offset_writes():
+    g, shapes = _densenet_graph()
+    g.infer_shapes(shapes)
+    fused, report = fuse_graph(g)
+    assert report.n_concat_fused == 3
+    for i, off in ((0, 16), (1, 24), (2, 32)):
+        blk = fused.nodes[f"l{i}_conv"]
+        assert blk.op == "conv_block"
+        assert blk.attrs["concat_into"] is True
+        assert blk.attrs["concat_offset"] == off
+        assert blk.attrs["concat_total"] == off + 8
+        assert blk.inputs[-1] == f"l{i}_cat__alloc"   # threaded on the buffer
+        assert f"l{i}_cat" not in fused.nodes         # the copy is gone
+    # each alloc seeds the buffer with the pass-through operand
+    alloc = fused.nodes["l1_cat__alloc"]
+    assert alloc.op == "concat_alloc"
+    assert alloc.inputs == ["l0_conv"]             # previous buffer
+    assert alloc.attrs["offsets"] == (0,)
+    assert alloc.attrs["total_channels"] == 32
+    fused.infer_shapes(shapes)
+    assert fused.nodes["l2_conv"].shape == g.nodes["l2_cat"].shape
+
+
+def test_concat_with_fanout_keeps_copy():
+    """A conv consumed by the concat AND someone else must not fuse."""
+    g, shapes = _densenet_graph(layers=1)
+    g.add("spy", "relu", ["l0_conv"])
+    g.mark_output("spy")
+    g.infer_shapes(shapes)
+    fused, report = fuse_graph(g)
+    assert report.n_concat_fused == 0
+    assert "l0_cat" in fused.nodes
+
+
+@pytest.mark.parametrize("dispatch", ["whole", "op"])
+def test_concat_fused_matches_unfused(dispatch, rng):
+    g, shapes = _densenet_graph()
+    params = init_params(g, shapes, seed=9)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(plan(g, shapes, mode="global-search"),
+                        params).predict(x)
+    p = plan(g, shapes, mode="fusion")
+    assert p.fusion is not None and p.fusion.n_concat_fused == 3
+    out = compile_model(p, params, dispatch=dispatch).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_concat_workload_constrains_oc_candidates():
+    from repro.core.schedule import candidate_schedules
+    wl = ConvWorkload(batch=1, in_channels=32, out_channels=8, height=8,
+                      width=8, kh=3, kw=3, pad=1,
+                      concat_offset=12, concat_total=20)
+    for s in candidate_schedules(wl):
+        assert 12 % s.oc_bn == 0 and 20 % s.oc_bn == 0
+        s.validate(wl)
+    bad = ConvSchedule(8, 8, 1, 1, False)
+    with pytest.raises(ValueError):
+        bad.validate(wl)
+
+
+def test_concat_couples_writer_layouts():
+    """Buffer-mediated coupling: the alloc seed's producer and the writer
+    conv must agree on oc_bn, like the unfused concat rule."""
+    from repro.core.planner import conv_dependencies
+    g, shapes = _densenet_graph(layers=2)
+    g.infer_shapes(shapes)
+    fused, _ = fuse_graph(g)
+    fused.infer_shapes(shapes)
+    _, couplings = conv_dependencies(fused)
+    pairs = {frozenset((a, b)) for a, b, _ in couplings}
+    assert frozenset(("stem", "l0_conv")) in pairs
+    assert frozenset(("l0_conv", "l1_conv")) in pairs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("builder", [_stem_graph, _densenet_graph])
+def test_fused_epilogues_pallas_interpret(builder, rng):
+    """The Pallas path executes the same fused forms (pool via the
+    whole-plane VMEM scratch, concat via the copy-through grid)."""
+    g, shapes = builder()
+    params = init_params(g, shapes, seed=11)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(plan(g, shapes, mode="nchw"), params).predict(x)
+    p = plan(g, shapes, mode="fusion")
+    out = compile_model(p, params, use_pallas=True,
+                        interpret=True).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

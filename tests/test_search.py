@@ -1,4 +1,9 @@
-"""The two-stage scheme search: local (3.3.1), global DP/PBQP (3.3.2)."""
+"""The two-stage scheme search: local (3.3.1), global DP/PBQP (3.3.2).
+
+The deterministic (stub-measured) guided-search and database
+round-trip/forward-compat tests live in ``test_guided_search_db.py`` so
+they run even without hypothesis installed.
+"""
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")
