@@ -1,18 +1,22 @@
-"""Shared benchmark helpers: timing, CSV output, model prep."""
+"""Shared benchmark helpers: timing, CSV output, model prep.
+
+``prepare`` rides on the compile()/Pipeline API (``repro.engine.compile``
+with ``Pipeline.preset(mode)``), so every table/figure benchmark exercises
+the same code path a served session does.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.local_search import ScheduleDatabase
-from repro.core.planner import plan
-from repro.engine import compile_model
+from repro.core.pipeline import Pipeline
+from repro.engine import compile as compile_session
 from repro.models.cnn import build
-from repro.nn.init import init_params
 
 _DB = ScheduleDatabase()    # shared across benchmarks in one process
 
@@ -26,15 +30,20 @@ def time_fn(fn: Callable, repeats: int = 3) -> float:
     return (time.perf_counter() - t0) / repeats
 
 
-def prepare(name: str, mode: str, batch: int = 1, db=None, **plan_kw):
-    """(compiled model, input array, plan) for one zoo network."""
+def prepare(name: str, mode: str, batch: int = 1, db=None, **preset_kw):
+    """(session, input array, plan) for one zoo network under
+    ``Pipeline.preset(mode)``; the session predicts like the old compiled
+    model and the plan carries the predicted ladder terms."""
     g, shapes = build(name, batch=batch)
-    params = init_params(g, shapes, seed=0)
-    p = plan(g, shapes, mode=mode, db=db or _DB, **plan_kw)
-    m = compile_model(p, params)
+    # `db if ... else`, NOT `db or`: an empty caller database (e.g.
+    # table3's GuidedDB before its first search) is falsy but must be used
+    session = compile_session(g, shapes,
+                              pipeline=Pipeline.preset(mode, **preset_kw),
+                              db=db if db is not None else _DB)
+    p = session.plan_for(batch)
     x = jnp.asarray(np.random.default_rng(0)
                     .normal(size=shapes["data"]).astype(np.float32))
-    return m, x, p
+    return session, x, p
 
 
 def emit(rows: List[Tuple]) -> None:

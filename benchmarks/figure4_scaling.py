@@ -36,19 +36,19 @@ def run_measured(model: str = "resnet-18", image: int = 112,
 
     from benchmarks.common import _DB
     from benchmarks.harness import measure_paired
-    from repro.core.planner import plan
-    from repro.engine import compile_model
+    from repro.engine import compile as compile_session
     from repro.models.cnn import build
-    from repro.nn.init import init_params
 
+    # ONE session, specialized per batch size — the weak-scaling sweep is
+    # exactly the per-batch specialization the InferenceSession owns
+    g, shapes = build(model, batch=BATCHES[0], image=image)
+    session = compile_session(g, shapes, db=_DB, eager=False)
     setups = []
     for b in BATCHES:
-        g, shapes = build(model, batch=b, image=image)
-        params = init_params(g, shapes, seed=0)
-        p = plan(g, shapes, mode="fusion", db=_DB)
-        m = compile_model(p, params)
+        m = session.specialize(b)
         x = jnp.asarray(np.random.default_rng(0)
-                        .normal(size=shapes["data"]).astype(np.float32))
+                        .normal(size=(b,) + shapes["data"][1:])
+                        .astype(np.float32))
         setups.append((b, m, x))
     timings = measure_paired(
         [(lambda m=m, x=x: m.predict(x)) for _, m, x in setups],

@@ -1,11 +1,14 @@
 """Fusion ablation (§3.1): unfused vs fused CONV epilogues, end to end.
 
 Times the ResNet-18 workload set through the real engine on the jnp path,
-with the fusion pass as the only variable:
+with the fusion passes as the only variable (two ``engine.compile``
+sessions sharing one parameter set):
 
-    unfused  plan(mode="global-search")  — conv2d / batch_norm / relu / add
-                                           dispatched as separate graph nodes
-    fused    plan(mode="fusion")         — conv_block epilogues
+    unfused  Pipeline.preset("global-search")  — conv2d / batch_norm / relu
+                                                 / add as separate nodes
+    fused    Pipeline.preset("fusion")         — the FuseEpilogues +
+                                                 FuseConcatWrites passes in
+                                                 front of the same planning
 
 Both plans are executed in both engine dispatch modes:
 
@@ -44,8 +47,8 @@ import numpy as np
 from common import _DB  # shared ScheduleDatabase
 from harness import measure_paired
 from repro.core.graph import Graph
-from repro.core.planner import plan
-from repro.engine import compile_model
+from repro.core.pipeline import Pipeline
+from repro.engine import compile as compile_session
 from repro.models.cnn import build
 from repro.nn.init import init_params
 
@@ -90,10 +93,12 @@ def run_chain(tag: str, g, shapes, repeats: int) -> dict:
     params = init_params(g, shapes, seed=0)
     x = jnp.asarray(np.random.default_rng(0)
                     .normal(size=shapes["data"]).astype(np.float32))
-    unfused = plan(g, shapes, mode="global-search", db=_DB)
-    fused = plan(g, shapes, mode="fusion", db=_DB)
-    mu = compile_model(unfused, params, dispatch="op")
-    mf = compile_model(fused, params, dispatch="op")
+    batch = shapes["data"][0]
+    mu = compile_session(g, shapes, params=params, db=_DB, dispatch="op",
+                         pipeline=Pipeline.preset("global-search"))
+    mf = compile_session(g, shapes, params=params, db=_DB, dispatch="op",
+                         pipeline=Pipeline.preset("fusion"))
+    fused = mf.plan_for(batch)
     t_u, t_f = measure_paired(
         [lambda: mu.predict(x), lambda: mf.predict(x)], repeats=repeats)
     row = {"unfused": t_u.to_json(), "fused": t_f.to_json(),
@@ -114,8 +119,8 @@ def run(model: str, batch: int, image: int, repeats: int) -> dict:
     x = jnp.asarray(np.random.default_rng(0)
                     .normal(size=shapes["data"]).astype(np.float32))
 
-    unfused = plan(g, shapes, mode="global-search", db=_DB)
-    fused = plan(g, shapes, mode="fusion", db=_DB)
+    unfused = Pipeline.preset("global-search").run(g, shapes, db=_DB)
+    fused = Pipeline.preset("fusion").run(g, shapes, db=_DB)
     result = {
         "model": model, "batch": batch, "image": image, "repeats": repeats,
         "path": "jnp",
@@ -123,7 +128,10 @@ def run(model: str, batch: int, image: int, repeats: int) -> dict:
                    "n_absorbed": fused.fusion.n_absorbed},
         "predicted_epilogue_s": {"unfused": unfused.predicted_epilogue_s,
                                  "fused": fused.predicted_epilogue_s},
+        "pipeline_report": {"unfused": unfused.report.to_json(),
+                            "fused": fused.report.to_json()},
     }
+    from repro.engine import compile_model
     for dispatch in ("op", "whole"):
         mu = compile_model(unfused, params, dispatch=dispatch)
         mf = compile_model(fused, params, dispatch=dispatch)

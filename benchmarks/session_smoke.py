@@ -1,0 +1,92 @@
+"""CI smoke for the InferenceSession artifact path.
+
+Builds a session with ``tuning="cached"``, saves the versioned artifact,
+then **reloads it in a separate process** (a real ``subprocess`` — fresh
+interpreter, cold caches) and runs one predict there, asserting
+
+* the loaded output is bit-identical to the in-process session's, and
+* the load->predict path ran **zero** schedule searches
+  (``core.local_search.search_calls()`` spy — trivially exact in a fresh
+  process, where any search would move the counter off zero).
+
+The artifact directory is left on disk so CI uploads it alongside the
+BENCH_*.json files.
+
+    PYTHONPATH=../src python session_smoke.py --out ../ARTIFACT_session
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+
+_CHILD = r"""
+import sys
+import numpy as np
+import jax.numpy as jnp
+
+artifact = sys.argv[1]
+from repro.core.local_search import search_calls
+from repro.engine import InferenceSession
+
+sess = InferenceSession.load(artifact)
+x = np.load(artifact + "/smoke_input.npy")
+want = np.load(artifact + "/smoke_output.npy")
+got = np.asarray(sess.predict(jnp.asarray(x)))
+assert search_calls() == 0, \
+    f"load->predict ran {search_calls()} schedule searches (want 0)"
+assert got.shape == want.shape and got.tobytes() == want.tobytes(), \
+    f"cross-process drift: max|delta|={np.abs(got - want).max()}"
+print(f"child process: predict bit-identical, zero search "
+      f"(batches={sess.batch_sizes}, frozen={sess.frozen})")
+"""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="resnet-18")
+    ap.add_argument("--image", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--db", default=None,
+                    help="schedule database to serve cached winners from "
+                         "(e.g. BENCH_variants_db.json); omitted = "
+                         "roofline-filled cache")
+    ap.add_argument("--out", default="ARTIFACT_session")
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+    from repro.engine import compile as compile_session
+
+    if args.db and not Path(args.db).exists():
+        # fail loudly: CI passes the smoke variants db so the cached path
+        # exercises measured winners — a typo'd/reordered path must not
+        # silently degrade this step to an empty cache
+        raise SystemExit(f"--db {args.db} does not exist")
+    sess = compile_session(args.model,
+                           (args.batch, 3, args.image, args.image),
+                           tuning="cached", db=args.db)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(args.batch, 3, args.image, args.image)) \
+        .astype(np.float32)
+    y = np.asarray(sess.predict(jnp.asarray(x)))
+    out = Path(args.out)
+    sess.save(out)
+    np.save(out / "smoke_input.npy", x)
+    np.save(out / "smoke_output.npy", y)
+    print(f"saved artifact to {out} (model={args.model}, "
+          f"image={args.image}, batch={args.batch})")
+
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    subprocess.run([sys.executable, "-c", _CHILD, str(out)],
+                   check=True, env=env)
+    print("session artifact cross-process round-trip OK")
+
+
+if __name__ == "__main__":
+    main()

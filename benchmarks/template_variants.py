@@ -36,13 +36,13 @@ import numpy as np
 
 from harness import measure_paired
 from repro.core.cost import conv_schedule_cost
-from repro.core.layout import nchwc, relayout
 from repro.core.fusion import fuse_graph
 from repro.core.local_search import (LocalSearchResult, ScheduleDatabase,
                                      _wl_key)
-from repro.core.planner import make_workload, plan
+from repro.core.pipeline import Pipeline, make_workload
 from repro.core.schedule import VARIANTS, ConvSchedule, ConvWorkload
 from repro.engine import compile_model
+from repro.engine.calibrate import measure_host_copy_bw
 from repro.models.cnn import build
 from repro.nn.init import init_params
 
@@ -68,22 +68,6 @@ def _as_auto(planned_schedules: Dict[str, ConvSchedule]) -> None:
         planned_schedules[name] = dataclasses.replace(s, variant="auto")
 
 
-def host_transform_bw(image: int = 56, channels: int = 128) -> float:
-    """Measured bytes/s of one representative NCHW[x]c relayout on this
-    host.  Passed to ``plan(transform_bw=...)`` so the global search prices
-    blocking mismatches between neighbors on the same clock as the measured
-    node costs (the v5e HBM figure underweights a CPU copy ~50x, which lets
-    the solver scatter blockings and pay real relayouts)."""
-    import jax
-
-    x = jnp.asarray(np.random.default_rng(0).normal(
-        size=(1, channels // 16, image, image, 16)).astype(np.float32))
-    f = jax.jit(lambda t: relayout(t, nchwc(16), nchwc(channels)))
-    t = measure_paired([lambda: f(x)], repeats=15)[0]
-    bytes_moved = 2 * x.size * 4          # read + write
-    return bytes_moved / (t.median_ms * 1e-3)
-
-
 def fused_workloads(model: str, batch: int, image: int):
     """(graph, shapes, [(node_name, workload)]) for the §3.1-fused model."""
     g, shapes = build(model, batch=batch, image=image)
@@ -107,8 +91,7 @@ def per_variant_best(res: LocalSearchResult) -> Dict[str, dict]:
 
 def run_model(model: str, batch: int, image: int, repeats: int,
               db: ScheduleDatabase, top_k: int, per_variant: int,
-              search_repeats: int, forced: bool, op_dispatch: bool,
-              transform_bw: float) -> dict:
+              search_repeats: int, forced: bool, op_dispatch: bool) -> dict:
     g, shapes, wls = fused_workloads(model, batch, image)
     params = init_params(g, shapes, seed=0)
     x = jnp.asarray(np.random.default_rng(0)
@@ -134,11 +117,14 @@ def run_model(model: str, batch: int, image: int, repeats: int,
           f"{n_non_per_tap} non-per_tap winners", flush=True)
 
     # -- plans ---------------------------------------------------------------
-    base_plan = plan(g, shapes, mode="fusion", db=ScheduleDatabase(),
-                     runner=pr1_runner)
+    # the "searched"/"forced" runs hold measured db entries, so the fusion
+    # pipeline auto-calibrates the host transform bandwidth itself (no more
+    # hand-measured transform_bw threaded through every call)
+    fusion = Pipeline.preset("fusion")
+    base_plan = fusion.run(g, shapes, db=ScheduleDatabase(),
+                           runner=pr1_runner)
     _as_auto(base_plan.planned.schedules)
-    searched_plan = plan(g, shapes, mode="fusion", db=db,
-                         transform_bw=transform_bw)
+    searched_plan = fusion.run(g, shapes, db=db, tuning="cached")
 
     plans = {"pr1": base_plan, "searched": searched_plan}
     if forced:
@@ -150,8 +136,8 @@ def run_model(model: str, batch: int, image: int, repeats: int,
                             if r.schedule.resolved_variant() == v]
                 db_v.put(wl, LocalSearchResult(wl, ranked_v or res.ranked,
                                                measured=True))
-            plans[f"forced:{v}"] = plan(g, shapes, mode="fusion", db=db_v,
-                                        transform_bw=transform_bw)
+            plans[f"forced:{v}"] = fusion.run(g, shapes, db=db_v,
+                                              tuning="cached")
 
     # -- end-to-end, whole-graph jit (headline) ------------------------------
     result = {"model": model, "batch": batch, "image": image,
@@ -216,8 +202,10 @@ def main() -> None:
 
     db = ScheduleDatabase(args.db)
     forced = set(filter(None, args.forced_models.split(",")))
-    bw = host_transform_bw()
-    print(f"host relayout bandwidth: {bw / 1e9:.2f} GB/s", flush=True)
+    # the same process-cached probe the pipeline's GlobalLayoutPlan uses
+    bw = measure_host_copy_bw()
+    print(f"host relayout bandwidth: {bw / 1e9:.2f} GB/s "
+          f"(auto-calibrated, reused by every plan below)", flush=True)
     out = {"harness": "paired-interleaved medians + warmup-phase detection",
            "host_transform_bw_gbps": round(bw / 1e9, 3),
            "models": {}}
@@ -225,8 +213,7 @@ def main() -> None:
         out["models"][model] = run_model(
             model, args.batch, args.image, args.repeats, db,
             args.top_k, args.per_variant, args.search_repeats,
-            forced=model in forced, op_dispatch=not args.no_op_dispatch,
-            transform_bw=bw)
+            forced=model in forced, op_dispatch=not args.no_op_dispatch)
     first = next(iter(out["models"]))
     out["speedup"] = out["models"][first]["speedup"]
     out["non_per_tap_winners"] = sum(

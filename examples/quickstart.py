@@ -4,9 +4,15 @@
 
 Builds ResNet-18 (default) as a graph, runs NeoCPU's optimization ladder
 (NCHW baseline -> blocked layout -> transform elimination -> global
-search -> operation fusion), verifies every level produces identical
-outputs, and prints the planner's predicted v5e latency ladder plus host
-wall-clock.
+search -> operation fusion) as composable pass pipelines
+(``Pipeline.preset(mode)`` — see docs/api.md for the pass/preset/session
+API), verifies every level produces identical outputs, and prints the
+planner's predicted v5e latency ladder plus host wall-clock and the
+per-pass timing report.
+
+For the full compile -> predict -> save -> load lifecycle (persistent
+artifacts, per-batch specialization) see ``examples/serve_planned_cnn.py``
+and ``repro.engine.compile``.
 """
 import sys
 import time
@@ -17,10 +23,10 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core.planner import MODES, plan           # noqa: E402
-from repro.engine import compile_model               # noqa: E402
-from repro.models.cnn import build                   # noqa: E402
-from repro.nn.init import init_params                # noqa: E402
+from repro.core.pipeline import MODES, Pipeline     # noqa: E402
+from repro.engine import compile_model              # noqa: E402
+from repro.models.cnn import build                  # noqa: E402
+from repro.nn.init import init_params               # noqa: E402
 
 
 def main():
@@ -35,7 +41,7 @@ def main():
 
     ref = None
     for mode in MODES:
-        p = plan(graph, shapes, mode=mode)
+        p = Pipeline.preset(mode).run(graph, shapes)
         m = compile_model(p, params)
         out = jax.block_until_ready(m.predict(x))     # compile + run
         t0 = time.perf_counter()
@@ -46,10 +52,13 @@ def main():
             ref = out
         err = float(jnp.abs(out - ref).max())
         solver = p.solution.method if p.solution else "-"
+        passes = " ".join(f"{pr.name}={pr.seconds * 1e3:.0f}ms"
+                          for pr in p.report.passes)
         print(f"{mode:15s} pred_v5e={p.predicted_total_s * 1e3:7.3f} ms  "
               f"wall_cpu={wall * 1e3:8.1f} ms  "
               f"transforms={p.planned.n_transforms:3d}  solver={solver:10s} "
               f"max|Δ|={err:.1e}")
+        print(f"{'':15s} passes: {passes}")
         assert err < 1e-4, "planned graph must be semantics-preserving"
     print("all modes numerically identical — planning is free of "
           "semantic drift")

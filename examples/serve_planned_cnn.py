@@ -1,25 +1,27 @@
 """End-to-end serving driver (the paper's workload: latency-focused CNN
-inference, batch size 1, many requests).
+inference, batch size 1, many requests) — now through the persistent
+``InferenceSession`` lifecycle.
 
     PYTHONPATH=src python examples/serve_planned_cnn.py [model] [n_requests]
 
-Plans the model once (global search), binds weights (compile-time layout
-transformation), then serves a stream of single-image requests and reports
-the latency distribution — the experiment behind the paper's Table 2.
+Compiles the model once (``engine.compile`` runs the full fusion+layout
+pipeline and binds weights into their physical layouts), saves the
+versioned artifact, then — as a cold-start server would — **loads the
+artifact back** and serves a stream of single-image requests from the
+loaded session, reporting the latency distribution.  The load path runs
+zero schedule search and zero weight transformation: the Table-2
+experiment, minus the per-process planning cost.  See docs/api.md.
 """
 import sys
+import tempfile
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core.planner import plan                  # noqa: E402
-from repro.engine import compile_model               # noqa: E402
-from repro.models.cnn import build                   # noqa: E402
-from repro.nn.init import init_params                # noqa: E402
+from repro.engine import compile as compile_session  # noqa: E402
+from repro.launch.serve import serve_artifact        # noqa: E402
 
 
 def main():
@@ -27,26 +29,17 @@ def main():
     n_req = int(sys.argv[2]) if len(sys.argv) > 2 else 20
     image = 128
 
-    graph, shapes = build(name, batch=1, image=image)
-    params = init_params(graph, shapes, seed=0)
     t0 = time.perf_counter()
-    p = plan(graph, shapes, mode="global-search")
-    t_plan = time.perf_counter() - t0
-    model = compile_model(p, params)
+    session = compile_session(name, (1, 3, image, image))
+    t_compile = time.perf_counter() - t0
 
-    rng = np.random.default_rng(0)
-    lat = []
-    for i in range(n_req):
-        x = jnp.asarray(rng.normal(size=shapes["data"]).astype(np.float32))
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(model.predict(x))
-        lat.append(time.perf_counter() - t0)
-    lat_ms = np.asarray(lat[1:]) * 1e3    # drop compile-carrying first call
-    print(f"model={name} plan_time={t_plan:.1f}s "
-          f"(one-time; schedule DB caches workloads)")
-    print(f"served {n_req} requests: p50={np.percentile(lat_ms, 50):.1f} "
-          f"p90={np.percentile(lat_ms, 90):.1f} "
-          f"p99={np.percentile(lat_ms, 99):.1f} ms")
+    with tempfile.TemporaryDirectory(prefix="neocpu_session_") as artifact:
+        session.save(artifact)
+        print(f"model={name} compile_time={t_compile:.1f}s -> artifact "
+              f"{artifact}")
+        # cold-start server: load the artifact (zero search, zero
+        # re-binding — serve_artifact asserts it) and serve the stream
+        out = serve_artifact(artifact, n_req)
     print(f"top-1 of last request: {int(jnp.argmax(out))}")
 
 

@@ -108,24 +108,32 @@ class CheckpointStore:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, template: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Tuple[Any, int, Dict]:
-        """Load into the structure of ``template``.  ``shardings`` (same
-        structure) re-lays leaves onto the current mesh — the elastic
-        restart path after a topology change."""
+    def restore_flat(self, step: Optional[int] = None
+                     ) -> Tuple[Dict[str, np.ndarray], int, Dict]:
+        """Load one step's leaves as a flat ``{path: array}`` dict, without
+        needing a structural template — the inference-artifact path
+        (``engine/session.py``), where the tree structure is recorded in the
+        artifact manifest rather than rebuilt from live objects."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self.dir / f"step_{step:06d}"
         manifest = json.loads((d / "manifest.json").read_text())
-        leaves = {}
-        for path, rec in manifest["leaves"].items():
-            leaves[path] = np.load(d / rec["file"])
+        leaves = {path: np.load(d / rec["file"])
+                  for path, rec in manifest["leaves"].items()}
+        return leaves, step, manifest["meta"]
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, int, Dict]:
+        """Load into the structure of ``template``.  ``shardings`` (same
+        structure) re-lays leaves onto the current mesh — the elastic
+        restart path after a topology change."""
+        leaves, step, meta = self.restore_flat(step)
         tree = _unflatten_like(template, leaves)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda arr, s: jax.device_put(arr, s), tree, shardings)
-        return tree, step, manifest["meta"]
+        return tree, step, meta
 
     def prune(self, keep_last: int = 3) -> None:
         for s in self.steps()[:-keep_last]:

@@ -2,12 +2,16 @@
 
 graph / layout / schedule — the IR; cost — the v5e roofline model;
 local_search / global_search / pbqp — the two-stage scheme search (§3.3);
-transform_elim — the §3.2 pass; planner — the assembled pipeline.
+transform_elim — the §3.2 pass; pipeline — the composable pass pipeline
+(``Pipeline.preset(mode)`` is the Table-3 ladder); planner — the
+deprecated ``plan(mode=...)`` shim over it.
 """
 from repro.core.graph import Graph
 from repro.core.layout import Layout, LayoutCategory, NCHW, NHWC, nchwc
-from repro.core.planner import Plan, plan
+from repro.core.pipeline import Pipeline, PipelineReport, Plan
+from repro.core.planner import plan
 from repro.core.schedule import ConvSchedule, ConvWorkload
 
 __all__ = ["Graph", "Layout", "LayoutCategory", "NCHW", "NHWC", "nchwc",
-           "Plan", "plan", "ConvSchedule", "ConvWorkload"]
+           "Pipeline", "PipelineReport", "Plan", "plan", "ConvSchedule",
+           "ConvWorkload"]

@@ -1,0 +1,48 @@
+"""Host calibration probes for the planner's measured mode.
+
+The global layout search prices scheme mismatches between neighboring
+CONVs as layout-transform traffic.  When the schedule database holds
+*measured* node costs, those edge costs must live on the same clock — and
+the v5e HBM roofline underweights a host-CPU relayout ~50x, which lets the
+solver scatter neighbor blockings and pay real relayouts.  The probe here
+measures the host's actual relayout bandwidth once per process
+(``GlobalLayoutPlan`` auto-invokes it for measured/cached tuning; the
+``InferenceSession`` caches the figure in its saved artifact so a reloaded
+session never re-probes).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Optional
+
+_CACHED_BW: Optional[float] = None
+
+
+def measure_host_copy_bw(image: int = 56, channels: int = 128,
+                         repeats: int = 15, force: bool = False) -> float:
+    """Measured bytes/s of one representative NCHW[x]c relayout on this
+    host (read + write).  Process-cached: the one-shot probe is reused by
+    every subsequent plan in the process unless ``force``."""
+    global _CACHED_BW
+    if _CACHED_BW is not None and not force:
+        return _CACHED_BW
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.layout import nchwc, relayout
+
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, channels // 16, image, image, 16)).astype(np.float32))
+    f = jax.jit(lambda t: relayout(t, nchwc(16), nchwc(channels)))
+    jax.block_until_ready(f(x))          # compile + first touch
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        samples.append(time.perf_counter() - t0)
+    bytes_moved = 2 * x.size * 4         # read + write
+    _CACHED_BW = bytes_moved / max(statistics.median(samples), 1e-9)
+    return _CACHED_BW

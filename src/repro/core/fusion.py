@@ -122,9 +122,20 @@ def _match_chain(graph: Graph, succ: Dict[str, List[str]], outputs: Set[str],
 
 
 def fuse_graph(graph: Graph) -> Tuple[Graph, FusionReport]:
-    """Rewrite ``graph`` with every matched epilogue chain collapsed into a
-    ``conv_block`` node named after its conv (so conv parameters bind under
-    the same key; the absorbed BN's name is kept in ``bn_from``)."""
+    """Both fusion phases composed: epilogue chains, then concat writes.
+    Kept as the one-call form; the pass pipeline (``core.pipeline``) runs
+    ``fuse_epilogues`` and ``fuse_concat_writes`` as separate passes."""
+    fused, report = fuse_epilogues(graph)
+    fused, n_concat = fuse_concat_writes(fused)
+    report.n_concat_fused = n_concat
+    return fused, report
+
+
+def fuse_epilogues(graph: Graph) -> Tuple[Graph, FusionReport]:
+    """Phase 1 only: rewrite ``graph`` with every matched epilogue chain
+    collapsed into a ``conv_block`` node named after its conv (so conv
+    parameters bind under the same key; the absorbed BN's name is kept in
+    ``bn_from``)."""
     succ = graph.successors()
     outputs = set(graph.outputs)
     taken: Set[str] = set()             # absorbed epilogue nodes
@@ -174,12 +185,10 @@ def fuse_graph(graph: Graph) -> Tuple[Graph, FusionReport]:
             mapped[node.name] = node.name
     for o in graph.outputs:
         fused.mark_output(mapped[o])
-    fused, n_concat = fuse_concat_writes(fused)
     report = FusionReport(
         n_blocks=len(chains),
         n_absorbed=sum(len(c.absorbed) for c in chains.values()),
         chains=chains,
-        n_concat_fused=n_concat,
         n_pool_fused=sum(1 for c in chains.values() if c.pool is not None))
     return fused, report
 

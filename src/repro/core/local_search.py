@@ -26,6 +26,16 @@ from repro.core.schedule import ConvSchedule, ConvWorkload, candidate_schedules
 
 Runner = Callable[[ConvWorkload, ConvSchedule], float]
 
+# Process-wide spy: how many actual searches (not memo hits) have run.  A
+# session loaded from a saved artifact must go load -> predict without any
+# schedule search; tests and the CI cross-process smoke assert on these.
+SEARCH_COUNTERS = {"local_search": 0, "guided_local_search": 0}
+
+
+def search_calls() -> int:
+    """Total schedule searches executed in this process (memo hits excluded)."""
+    return sum(SEARCH_COUNTERS.values())
+
 
 def roofline_runner(wl: ConvWorkload, s: ConvSchedule) -> float:
     return conv_schedule_cost(wl, s).total_s
@@ -131,6 +141,7 @@ class LocalSearchResult:
 
 def local_search(wl: ConvWorkload, runner: Runner = roofline_runner,
                  max_candidates: int = 0) -> LocalSearchResult:
+    SEARCH_COUNTERS["local_search"] += 1
     cands = candidate_schedules(wl, max_candidates=max_candidates)
     scored = [RankedSchedule(s, runner(wl, s)) for s in cands]
     scored.sort(key=lambda r: (r.cost_s, r.schedule))
@@ -154,6 +165,8 @@ def guided_local_search(wl: ConvWorkload, top_k: int = 6,
     differ only there are the same computation and would waste both a
     measurement and a shortlist slot."""
     from repro.core.schedule import VARIANTS
+
+    SEARCH_COUNTERS["guided_local_search"] += 1
 
     pruned = local_search(wl, roofline_runner, max_candidates)
     short: List[ConvSchedule] = []
@@ -266,9 +279,19 @@ class ScheduleDatabase:
             self._save()
 
     # -- persistence ---------------------------------------------------------
-    def _save(self) -> None:
+    def to_blob(self, measured_only: bool = False) -> Dict:
+        """JSON-serializable form of the entries — the unit the path-backed
+        file and the ``InferenceSession`` artifact both persist.
+
+        ``measured_only`` keeps just the wall-clock-ranked entries (short
+        shortlists): the artifact path uses it, because an *analytical*
+        entry carries the full ~2k-tuple candidate ranking per workload and
+        would put megabytes of rankings in a manifest that a frozen session
+        never searches again."""
         blob = {}
         for key, res in self._mem.items():
+            if measured_only and not res.measured:
+                continue
             blob[key] = {
                 "workload": dataclasses.asdict(res.workload),
                 "measured": res.measured,
@@ -277,19 +300,11 @@ class ScheduleDatabase:
                     {"schedule": dataclasses.asdict(r.schedule),
                      "cost_s": r.cost_s} for r in res.ranked],
             }
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        self.path.write_text(json.dumps(blob))
+        return blob
 
-    @staticmethod
-    def _known_fields(cls, d: Dict) -> Dict:
-        """Forward-compat: a database written by a newer version may carry
-        workload/schedule keys this version doesn't know — drop them instead
-        of crashing the load (their *known* fields still key correctly)."""
-        names = {f.name for f in dataclasses.fields(cls)}
-        return {k: v for k, v in d.items() if k in names}
-
-    def _load(self) -> None:
-        blob = json.loads(self.path.read_text())
+    def load_blob(self, blob: Dict) -> None:
+        """Install entries from ``to_blob`` output (unknown fields dropped —
+        see ``_known_fields``)."""
         for key, rec in blob.items():
             wl = ConvWorkload(**self._known_fields(ConvWorkload,
                                                    rec["workload"]))
@@ -301,6 +316,21 @@ class ScheduleDatabase:
                 workload=wl, ranked=ranked,
                 measured=rec.get("measured", False),
                 search_budget=tuple(rec.get("search_budget", (0, 0))))
+
+    def _save(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.path.write_text(json.dumps(self.to_blob()))
+
+    @staticmethod
+    def _known_fields(cls, d: Dict) -> Dict:
+        """Forward-compat: a database written by a newer version may carry
+        workload/schedule keys this version doesn't know — drop them instead
+        of crashing the load (their *known* fields still key correctly)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return {k: v for k, v in d.items() if k in names}
+
+    def _load(self) -> None:
+        self.load_blob(json.loads(self.path.read_text()))
 
     def __len__(self) -> int:
         return len(self._mem)

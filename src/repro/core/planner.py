@@ -1,231 +1,32 @@
-"""End-to-end layout planner: local search -> global search -> rewrite.
+"""Deprecated planner entry — a thin shim over ``core.pipeline``.
 
-This is NeoCPU's pipeline assembled: given a model graph, (1) run the
-§3.3.1 local search per CONV workload (memoized in a ScheduleDatabase),
-(2) build the §3.3.2 scheme problem — one node per CONV with its
-(ic_bn, oc_bn) candidates, edges carrying layout-transform costs along
-data-dependency paths that cross only oblivious/tolerant ops — and solve it
-by DP or PBQP, (3) rewrite the graph with ``eliminate_transforms``.
+The end-to-end pipeline (local search -> global search -> rewrite, with the
+§3.1 fusion rewrites in front for mode "fusion") now lives in
+``core/pipeline.py`` as composable ``Pass`` objects; ``Pipeline.preset(m)``
+reproduces the Table-3 ``MODES`` ladder exactly.  ``plan(mode=...)`` is
+kept for existing call sites and delegates 1:1:
 
-Five modes extend Table 3's ablation ladder (rows 1-4 are the paper's; the
-fifth stacks §3.1 operation fusion on top of the full pipeline):
+    plan(g, shapes, mode=m, db=db, transform_bw=bw)
+    == Pipeline.preset(m).run(g, shapes, db=db, transform_bw=bw)
 
-    "nchw"           row 1 — no blocking (baseline = 1x)
-    "layout"         row 2 — blocked CONVs, transforms around each CONV
-    "transform-elim" row 3 — one uniform block x, transforms eliminated
-    "global-search"  row 4 — per-CONV schemes from the global search
-    "fusion"         row 5 — CONV->BN->ReLU(->add) chains fused into
-                     conv_block epilogues *before* layout planning, then
-                     per-CONV schemes as in row 4; fused blocks are
-                     layout-tolerant as a unit and their residual input
-                     couples to the block's output layout
+New code should use ``Pipeline`` directly, or — for the whole
+build/tune/bind/predict lifecycle including persistent artifacts —
+``repro.engine.compile`` (see docs/api.md).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, Optional, Tuple
 
-import numpy as np
+from repro.core.graph import Graph
+from repro.core.local_search import Runner, ScheduleDatabase, roofline_runner
+# Re-exports: long-standing import surface of this module (tests,
+# benchmarks, and the engine import these names from here).
+from repro.core.pipeline import (MODES, Pipeline, PipelineReport, Plan,  # noqa: F401
+                                 conv_dependencies, make_workload)
 
-from repro.core import global_search
-from repro.core.cost import epilogue_cost_s, transform_cost_s
-from repro.core.fusion import FusionReport, fuse_graph
-from repro.core.graph import Graph, MULTI_INPUT_SAME_LAYOUT, Node
-from repro.core.layout import LayoutCategory, candidate_blocks, nchwc
-from repro.core.local_search import (LocalSearchResult, Runner,
-                                     ScheduleDatabase, roofline_runner)
-from repro.core.schedule import ConvSchedule, ConvWorkload
-from repro.core.transform_elim import PlannedGraph, eliminate_transforms
+_warned = False
 
-MODES = ("nchw", "layout", "transform-elim", "global-search", "fusion")
-
-
-def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
-    a = node.attrs
-    n, c, h, w = in_shape
-    fused = node.op == "conv_block"
-    concat = fused and bool(a.get("concat_into"))
-    # conv_block inputs: [data, residual?, concat_buf?] — the buffer is
-    # always last when present, so a residual exists only past that slot
-    n_data = 1 + (1 if concat else 0)
-    return ConvWorkload(
-        batch=n, in_channels=c, out_channels=a["out_channels"],
-        height=h, width=w, kh=a["kh"], kw=a["kw"],
-        stride=a.get("stride", 1), pad=a.get("pad", 0),
-        groups=a.get("groups", 1), pad_w=a.get("pad_w", -1),
-        # fused conv_block: the epilogue is part of the schedule's cost
-        # (conv_schedule_cost charges it), so the local search ranks
-        # schedules with their epilogue included
-        fused_bn=fused and a.get("bn_from") is not None,
-        fused_relu=fused and bool(a.get("relu")),
-        fused_residual=fused and len(node.inputs) > n_data,
-        fused_pool=a.get("pool_kind", "") if fused else "",
-        pool_k=a.get("pool_k", 0) if fused else 0,
-        pool_stride=a.get("pool_stride", 0) if fused else 0,
-        pool_pad=a.get("pool_pad", 0) if fused else 0,
-        pool_ceil=bool(a.get("pool_ceil", False)) if fused else False,
-        concat_offset=a.get("concat_offset", 0) if concat else 0,
-        concat_total=a.get("concat_total", 0) if concat else 0)
-
-
-@dataclasses.dataclass
-class Plan:
-    planned: PlannedGraph
-    mode: str
-    solution: Optional[global_search.SchemeSolution]
-    predicted_conv_s: float
-    predicted_transform_s: float
-    predicted_epilogue_s: float = 0.0
-    fusion: Optional[FusionReport] = None
-
-    @property
-    def predicted_total_s(self) -> float:
-        return (self.predicted_conv_s + self.predicted_transform_s
-                + self.predicted_epilogue_s)
-
-
-# ---------------------------------------------------------------------------
-# Conv-DAG extraction: which CONVs constrain each other's layouts
-# ---------------------------------------------------------------------------
-
-def conv_dependencies(graph: Graph):
-    """Returns (edges, couplings):
-    edges      — list of (conv_u, conv_v, tensor_shape): u's output layout
-                 flows into v through oblivious/tolerant ops only;
-    couplings  — list of (conv_u, conv_w, tensor_shape): u and w feed the
-                 same multi-input node, so their *output* layouts must agree.
-    """
-    # ancestors[t] = set of conv names whose blocked layout reaches tensor t
-    ancestors: Dict[str, frozenset] = {}
-    edges: List[Tuple[str, str, Tuple[int, ...]]] = []
-    couplings: List[Tuple[str, str, Tuple[int, ...]]] = []
-    for node in graph.topo_order():
-        if node.op == "input":
-            ancestors[node.name] = frozenset()
-        elif node.op in ("conv2d", "conv_block"):
-            feeder = graph.nodes[node.inputs[0]]
-            for a in ancestors[feeder.name]:
-                edges.append((a, node.name, feeder.shape))
-            # fused residual and concat buffer: both extra inputs are
-            # consumed in this conv's *output* layout, so each producing
-            # conv's oc_bn must match ours — couplings, not normal ic/oc
-            # edges (§3.3.2 Elementwise_Add rule; the concat buffer couples
-            # sibling writers and the alloc seed the same way)
-            for extra in node.inputs[1:]:
-                src = graph.nodes[extra]
-                for a in ancestors[src.name]:
-                    if a != node.name:
-                        couplings.append((a, node.name, src.shape))
-            ancestors[node.name] = frozenset([node.name])
-        elif node.op in MULTI_INPUT_SAME_LAYOUT:
-            sets = [ancestors[i] for i in node.inputs]
-            merged = frozenset().union(*sets)
-            # pairwise coupling across distinct branches
-            for i in range(len(sets)):
-                for j in range(i + 1, len(sets)):
-                    for a in sets[i]:
-                        for b in sets[j]:
-                            if a != b:
-                                couplings.append((a, b, node.shape))
-            ancestors[node.name] = merged
-        elif node.category is LayoutCategory.DEPENDENT:
-            ancestors[node.name] = frozenset()   # layout resets to NCHW
-        else:
-            ancestors[node.name] = ancestors[node.inputs[0]] if node.inputs \
-                else frozenset()
-    return edges, couplings
-
-
-# ---------------------------------------------------------------------------
-# Scheme problem assembly
-# ---------------------------------------------------------------------------
-
-def _scheme_problem(graph: Graph, locals_: Dict[str, LocalSearchResult],
-                    max_pairs: int, transform_bw: Optional[float] = None,
-                    ) -> Tuple[global_search.SchemeProblem,
-                               Dict[str, List[Tuple[int, int]]]]:
-    convs = [n.name for n in graph.conv_nodes()]
-    pairs: Dict[str, List[Tuple[int, int]]] = {}
-    node_costs: Dict[str, np.ndarray] = {}
-    for name in convs:
-        lc = locals_[name].layout_costs()
-        top = sorted(lc.items(), key=lambda kv: kv[1])[:max_pairs]
-        pairs[name] = [p for p, _ in top]
-        node_costs[name] = np.array([c for _, c in top])
-
-    edge_costs: Dict[Tuple[str, str], np.ndarray] = {}
-    edges, couplings = conv_dependencies(graph)
-    pos = {n.name: i for i, n in enumerate(graph.topo_order())}
-    # transform costs scale to the machine the node costs came from: the v5e
-    # roofline by default, or a measured host copy bandwidth when the local
-    # search was measured (a CPU moves a relayout ~50x slower than HBM, and
-    # underweighting it lets the solver pick mismatched neighbor blockings)
-    from repro.core.cost import HBM_BW
-    bw_scale = 1.0 if transform_bw is None else HBM_BW / transform_bw
-
-    def _accum(u, v, mat):
-        key = (u, v)
-        if key in edge_costs:
-            edge_costs[key] = np.minimum(edge_costs[key], mat)  # same edge
-        else:
-            edge_costs[key] = mat
-
-    for u, v, shape in edges:
-        m = np.zeros((len(pairs[u]), len(pairs[v])))
-        for j, (_, oc_u) in enumerate(pairs[u]):
-            for k, (ic_v, _) in enumerate(pairs[v]):
-                if oc_u != ic_v:
-                    m[j, k] = bw_scale * transform_cost_s(
-                        shape, nchwc(oc_u), nchwc(ic_v))
-        _accum(u, v, m)
-    for u, w, shape in couplings:
-        a, b = (u, w) if pos[u] < pos[w] else (w, u)
-        m = np.zeros((len(pairs[a]), len(pairs[b])))
-        for j, (_, oc_a) in enumerate(pairs[a]):
-            for k, (_, oc_b) in enumerate(pairs[b]):
-                if oc_a != oc_b:
-                    m[j, k] = bw_scale * transform_cost_s(
-                        shape, nchwc(oc_a), nchwc(oc_b))
-        _accum(a, b, m)
-
-    topo = [n for n in (x.name for x in graph.topo_order()) if n in set(convs)]
-    prob = global_search.SchemeProblem(node_costs=node_costs,
-                                       edge_costs=edge_costs, topo=topo)
-    return prob, pairs
-
-
-# ---------------------------------------------------------------------------
-# Uniform-x schedule assignment (modes "layout" and "transform-elim")
-# ---------------------------------------------------------------------------
-
-def _uniform_schedules(graph: Graph, locals_: Dict[str, LocalSearchResult],
-                       block: int) -> Dict[str, ConvSchedule]:
-    """ic_bn = oc_bn = the largest factor of the channel count ≤ block —
-    §3.2's constant-x scheme (x=16 in the paper, 128-lane preferred here)."""
-    out: Dict[str, ConvSchedule] = {}
-    for node in graph.conv_nodes():
-        wl = locals_[node.name].workload
-        cin = wl.in_channels // wl.groups
-        ic = max(f for f in candidate_blocks(cin) if f <= block)
-        ocs = [f for f in candidate_blocks(wl.out_channels) if f <= block]
-        if wl.concat_total:
-            # the blocked concat-offset store must land on block boundaries
-            ocs = [f for f in ocs if wl.concat_offset % f == 0
-                   and wl.concat_total % f == 0] or [1]
-        oc = max(ocs)
-        best = locals_[node.name].best_for_layout(ic, oc)
-        if best is not None:
-            out[node.name] = best.schedule
-        else:  # pair pruned from candidates: synthesize a legal schedule
-            ref = locals_[node.name].best
-            out[node.name] = ConvSchedule(ic, oc, ref.ow_bn, ref.oh_bn,
-                                          ref.unroll_ker, ref.variant)
-    return out
-
-
-# ---------------------------------------------------------------------------
-# plan(): the public entry
-# ---------------------------------------------------------------------------
 
 def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
          mode: str = "global-search",
@@ -235,103 +36,18 @@ def plan(graph: Graph, input_shapes: Dict[str, Tuple[int, ...]],
          max_pairs: int = 8,
          dp_state_budget: int = 200_000,
          transform_bw: Optional[float] = None) -> Plan:
-    # transform_bw: bytes/s the *execution host* moves a layout transform at.
-    # None keeps the v5e HBM roofline (consistent with roofline node costs);
-    # pass a measured host bandwidth when the schedule database holds
-    # measured costs, so edge and node costs live on the same clock.
-    # uniform_block is the paper's constant x (§3.2, x=16 = AVX-512's fp32
-    # lane count); the TPU analogue is the 128-wide VREG/MXU lane.
-    if mode not in MODES:
-        raise ValueError(f"mode {mode!r} not in {MODES}")
-    graph.infer_shapes(input_shapes)
-    fusion_report: Optional[FusionReport] = None
-    if mode == "fusion":
-        # §3.1: fuse epilogues first so each fused block is layout-tolerant
-        # as a unit, then plan layouts exactly as in "global-search"
-        graph, fusion_report = fuse_graph(graph)
-        graph.infer_shapes(input_shapes)
-    db = db or ScheduleDatabase()
-
-    locals_: Dict[str, LocalSearchResult] = {}
-    for node in graph.conv_nodes():
-        in_shape = graph.nodes[node.inputs[0]].shape
-        locals_[node.name] = db.search(make_workload(node, in_shape),
-                                       runner=runner)
-
-    solution = None
-    if mode == "nchw":
-        schedules: Dict[str, ConvSchedule] = {}
-    elif mode in ("layout", "transform-elim"):
-        schedules = _uniform_schedules(graph, locals_, uniform_block)
-    else:
-        prob, pairs = _scheme_problem(graph, locals_, max_pairs, transform_bw)
-        solution = global_search.solve(prob, dp_state_budget=dp_state_budget)
-        schedules = {}
-        for name, idx in solution.assignment.items():
-            ic, oc = pairs[name][idx]
-            best = locals_[name].best_for_layout(ic, oc)
-            assert best is not None
-            schedules[name] = best.schedule
-
-    planned = eliminate_transforms(graph, schedules,
-                                   around_each_conv=(mode == "layout"))
-    conv_s = 0.0
-    for name, sched in schedules.items():
-        r = locals_[name].best_for_layout(sched.ic_bn, sched.oc_bn)
-        conv_s += r.cost_s if r else locals_[name].ranked[-1].cost_s
-    if mode == "nchw":
-        # unblocked direct conv: whole-channel "blocks", no output-width
-        # register blocking — the MXU sees an (1 x C x K) micro-GEMM with
-        # unaligned lanes, the same structural penalty the paper's row-1
-        # baseline pays on AVX-512
-        from repro.core.cost import conv_schedule_cost
-        conv_s = 0.0
-        for l in locals_.values():
-            wl = l.workload
-            naive = ConvSchedule(wl.in_channels // wl.groups,
-                                 wl.out_channels, 1, 1, False)
-            conv_s += conv_schedule_cost(wl, naive).total_s
-    from repro.core.cost import HBM_BW
-    # report transforms on the same clock the solver priced them with (the
-    # standalone-node epilogue term below stays on the roofline clock; in
-    # fusion mode there are essentially no standalone epilogue nodes left)
-    tr_s = planned.transform_bytes_total / (transform_bw or HBM_BW)
-    epi_s = _predicted_epilogue_s(planned.graph)
-    return Plan(planned=planned, mode=mode, solution=solution,
-                predicted_conv_s=conv_s, predicted_transform_s=tr_s,
-                predicted_epilogue_s=epi_s, fusion=fusion_report)
-
-
-def _predicted_epilogue_s(graph: Graph) -> float:
-    """Shallow-epilogue traffic of the planned graph's *standalone* BN /
-    ReLU / add / pooling / concat nodes (full read+write passes each).
-    Fused conv_block epilogues are not charged here — their
-    (residual-read-only) traffic is part of ``conv_schedule_cost`` via the
-    workload's fused flags, so the local search already ranked schedules
-    with the epilogue included."""
-    total = 0.0
-    for node in graph.topo_order():
-        if node.shape is None or len(node.shape) != 4:
-            continue
-        if node.op == "batch_norm":
-            total += epilogue_cost_s(node.shape, bn=True)
-        elif node.op == "relu":
-            total += epilogue_cost_s(node.shape, relu=True)
-        elif node.op == "add":
-            total += epilogue_cost_s(node.shape, residual=True)
-        elif node.op in ("max_pool", "avg_pool"):
-            # charged on the *input* tensor (the read side dominates)
-            src = graph.nodes[node.inputs[0]].shape
-            if src is not None and len(src) == 4:
-                total += epilogue_cost_s(
-                    src, pool_stride=node.attrs.get("stride",
-                                                    node.attrs["k"]))
-        elif node.op == "concat":
-            total += epilogue_cost_s(node.shape, concat=True)
-        elif node.op == "concat_alloc":
-            # only the pass-through operands are still copied into the buffer
-            for i in node.inputs:
-                src = graph.nodes[i].shape
-                if src is not None and len(src) == 4:
-                    total += epilogue_cost_s(src, concat=True)
-    return total
+    """Deprecated: use ``Pipeline.preset(mode).run(...)`` or
+    ``repro.engine.compile(...)``."""
+    global _warned
+    if not _warned:
+        warnings.warn(
+            "core.planner.plan(mode=...) is deprecated; use "
+            "core.pipeline.Pipeline.preset(mode).run(graph, shapes, ...) "
+            "or engine.compile(...) (see docs/api.md)",
+            DeprecationWarning, stacklevel=2)
+        _warned = True
+    pipeline = Pipeline.preset(mode, uniform_block=uniform_block,
+                               max_pairs=max_pairs,
+                               dp_state_budget=dp_state_budget)
+    return pipeline.run(graph, input_shapes, db=db, runner=runner,
+                        transform_bw=transform_bw)

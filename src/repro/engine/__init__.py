@@ -1,4 +1,11 @@
-"""Inference engine: bind params to a Plan and execute the planned graph."""
-from repro.engine.executor import CompiledModel, bind_params, compile_model
+"""Inference engine: bind params to a Plan and execute the planned graph.
 
-__all__ = ["CompiledModel", "bind_params", "compile_model"]
+``compile``/``InferenceSession`` (engine/session.py) is the front door —
+plan, tune, bind, specialize per batch size, and persist artifacts;
+``compile_model`` is the lower-level bind-one-plan entry it rides on.
+"""
+from repro.engine.executor import CompiledModel, bind_params, compile_model
+from repro.engine.session import InferenceSession, Session, compile
+
+__all__ = ["CompiledModel", "InferenceSession", "Session", "bind_params",
+           "compile", "compile_model"]

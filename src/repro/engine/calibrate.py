@@ -1,0 +1,9 @@
+"""Engine-facing alias for the host calibration probe.
+
+The implementation lives in ``repro.core.calibrate`` (the pipeline's
+``GlobalLayoutPlan`` pass invokes it, and core must not depend on the
+engine package); sessions and benchmarks import it from here.
+"""
+from repro.core.calibrate import measure_host_copy_bw
+
+__all__ = ["measure_host_copy_bw"]

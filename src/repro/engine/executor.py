@@ -40,9 +40,20 @@ import jax.numpy as jnp
 
 from repro.core.epilogue import EpilogueSpec, PoolSpec
 from repro.core.layout import Layout, NCHW, kernel_to_kcrs_ck
-from repro.core.planner import Plan
+from repro.core.pipeline import Plan
+from repro.kernels.ops import prelay_patch_gemm_weight
 from repro.nn import ops
 from repro.nn.init import Params
+
+
+def _patch_gemm_prelaid(schedule, layout: Layout, use_pallas: bool) -> bool:
+    """Whether this conv's weight is stored panel-major at bind time: the
+    jnp patch_gemm lowering is the only consumer of the pre-laid form (the
+    Pallas kernel keeps KCRS[x]c[y]k).  Used identically by ``bind_params``
+    (to transform once) and the dispatchers (to tell the kernel what
+    arrived)."""
+    return (not use_pallas and schedule is not None and layout.is_blocked
+            and schedule.resolved_variant() == "patch_gemm")
 
 
 def _block_channel_vec(v: jnp.ndarray, layout: Layout) -> jnp.ndarray:
@@ -54,7 +65,7 @@ def _block_channel_vec(v: jnp.ndarray, layout: Layout) -> jnp.ndarray:
 
 
 def _bind_conv_block(plan: Plan, node, params: Params,
-                     fold_bn: bool) -> Dict[str, jnp.ndarray]:
+                     fold_bn: bool, use_pallas: bool) -> Dict[str, jnp.ndarray]:
     """Fused-block binding: conv weight/bias under the block's own name,
     the absorbed BN's scale/shift under ``attrs["bn_from"]``.  With
     ``fold_bn`` (the default — conv weights are static at bind time) the
@@ -84,6 +95,8 @@ def _bind_conv_block(plan: Plan, node, params: Params,
     q: Dict[str, jnp.ndarray] = {}
     if sched is not None and lay.is_blocked:
         q["w"] = kernel_to_kcrs_ck(w, sched.ic_bn, sched.oc_bn)
+        if _patch_gemm_prelaid(sched, lay, use_pallas):
+            q["w"] = prelay_patch_gemm_weight(q["w"])
 
         def blk(v):
             return v.reshape(v.shape[0] // sched.oc_bn, sched.oc_bn)
@@ -99,15 +112,20 @@ def _bind_conv_block(plan: Plan, node, params: Params,
     return q
 
 
-def bind_params(plan: Plan, params: Params, fold_bn: bool = True) -> Params:
-    """Pre-transform logical parameters to the plan's physical layouts."""
+def bind_params(plan: Plan, params: Params, fold_bn: bool = True,
+                use_pallas: bool = False) -> Params:
+    """Pre-transform logical parameters to the plan's physical layouts.
+    Weights of convs scheduled on the jnp ``patch_gemm`` lowering are
+    additionally pre-laid to panel-major order (``w_prelaid``), so the
+    kernel's runtime weight transpose disappears."""
     g = plan.planned.graph
     out: Params = {}
     consumed = set()
     for node in g.topo_order():
         if node.op != "conv_block":
             continue
-        out[node.name] = _bind_conv_block(plan, node, params, fold_bn)
+        out[node.name] = _bind_conv_block(plan, node, params, fold_bn,
+                                          use_pallas)
         consumed.add(node.name)
         if node.attrs.get("bn_from") is not None:
             consumed.add(node.attrs["bn_from"])
@@ -122,6 +140,8 @@ def bind_params(plan: Plan, params: Params, fold_bn: bool = True) -> Params:
         if node.op == "conv2d" and name in plan.planned.schedules:
             s = plan.planned.schedules[name]
             q = {"w": kernel_to_kcrs_ck(p["w"], s.ic_bn, s.oc_bn)}
+            if _patch_gemm_prelaid(s, lay, use_pallas):
+                q["w"] = prelay_patch_gemm_weight(q["w"])
             if "b" in p:
                 q["b"] = _block_channel_vec(p["b"], lay)
             out[name] = q
@@ -153,7 +173,8 @@ def _eval_node(node, lay: Layout, schedule, use_pallas: bool,
             pad=ph if pw < 0 else (ph, pw),
             groups=a.get("groups", 1),
             schedule=schedule,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret,
+            w_prelaid=_patch_gemm_prelaid(schedule, lay, use_pallas))
     if node.op == "conv_block":
         ph = a.get("pad", 0)
         pw = a.get("pad_w", -1)
@@ -178,7 +199,8 @@ def _eval_node(node, lay: Layout, schedule, use_pallas: bool,
             pad=ph if pw < 0 else (ph, pw),
             groups=a.get("groups", 1), epilogue=spec, out_buf=out_buf,
             schedule=schedule,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret,
+            w_prelaid=_patch_gemm_prelaid(schedule, lay, use_pallas))
     if node.op == "batch_norm":
         return ops.batch_norm(ins[0], p["scale"], p["shift"], lay)
     if node.op == "relu":
@@ -267,6 +289,6 @@ class CompiledModel:
 def compile_model(plan: Plan, params: Params, use_pallas: bool = False,
                   interpret: bool = True, fold_bn: bool = True,
                   dispatch: str = "whole") -> CompiledModel:
-    bound = bind_params(plan, params, fold_bn=fold_bn)
+    bound = bind_params(plan, params, fold_bn=fold_bn, use_pallas=use_pallas)
     return CompiledModel(plan=plan, params=bound, use_pallas=use_pallas,
                          interpret=interpret, dispatch=dispatch)

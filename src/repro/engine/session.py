@@ -1,0 +1,414 @@
+"""Persistent inference sessions: compile once, predict anywhere.
+
+``compile(model, input_spec, ...)`` owns the whole NeoCPU lifecycle the
+paper argues belongs to one system (§3): it runs a pass ``Pipeline`` over
+the graph, keeps the schedule database, auto-calibrates the host transform
+bandwidth when tuning is measured, binds parameters once (including the
+bind-time panel pre-layout for ``patch_gemm`` weights), and specializes the
+executable per batch size on demand.
+
+The session is also the persistence boundary: ``session.save(path)``
+writes a versioned artifact — the planned graphs, schedules, layouts, the
+schedule database, and the *pre-transformed* weights (via
+``checkpoint.store.CheckpointStore``) — and ``InferenceSession.load(path)``
+in a fresh process goes load -> predict with **zero schedule search** and
+zero weight re-transformation (the main lever for the ROADMAP's
+"fast cold start" item; ``core.local_search.search_calls()`` is the spy
+that proves it).
+
+    session = compile("resnet-18", (1, 3, 224, 224), tuning="cached")
+    y = session.predict(x)
+    session.save("artifact/")
+    # ... fresh process ...
+    y2 = InferenceSession.load("artifact/").predict(x)   # bit-identical
+
+Artifact layout (version 1):
+
+    <path>/manifest.json   format, version, input spec, tuning,
+                           transform_bw, per-batch plan JSON, schedule-db
+                           blob, pipeline/report metadata
+    <path>/weights/        CheckpointStore; step_<batch>/ holds the bound
+                           (physical-layout) params of one specialization
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core.graph import Graph
+from repro.core.layout import Layout, LayoutKind
+from repro.core.local_search import ScheduleDatabase
+from repro.core.pipeline import Pipeline, Plan
+from repro.core.schedule import ConvSchedule
+from repro.core.transform_elim import PlannedGraph
+from repro.engine.executor import CompiledModel, compile_model
+from repro.nn.init import Params, init_params
+
+ARTIFACT_FORMAT = "neocpu-inference-session"
+ARTIFACT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Plan / graph (de)serialization
+# ---------------------------------------------------------------------------
+
+def _enc_attr(v: Any) -> Any:
+    if isinstance(v, Layout):
+        return {"__layout__": v.kind.value, "block": v.block}
+    if isinstance(v, tuple):
+        return {"__tuple__": [_enc_attr(x) for x in v]}
+    return v
+
+
+def _dec_attr(v: Any) -> Any:
+    if isinstance(v, dict) and "__layout__" in v:
+        kind = LayoutKind(v["__layout__"])
+        return Layout(kind, v["block"]) if kind is LayoutKind.NCHWc \
+            else Layout(kind)
+    if isinstance(v, dict) and "__tuple__" in v:
+        return tuple(_dec_attr(x) for x in v["__tuple__"])
+    return v
+
+
+def _graph_to_json(g: Graph) -> Dict[str, Any]:
+    return {"nodes": [{"name": n.name, "op": n.op, "inputs": list(n.inputs),
+                       "attrs": {k: _enc_attr(v) for k, v in n.attrs.items()},
+                       "shape": list(n.shape) if n.shape else None}
+                      for n in g.topo_order()],
+            "outputs": list(g.outputs)}
+
+
+def _graph_from_json(js: Dict[str, Any]) -> Graph:
+    g = Graph()
+    for rec in js["nodes"]:           # serialized in topo order
+        g.add(rec["name"], rec["op"], rec["inputs"],
+              **{k: _dec_attr(v) for k, v in rec["attrs"].items()})
+        if rec["shape"] is not None:
+            g.nodes[rec["name"]].shape = tuple(rec["shape"])
+    for o in js["outputs"]:
+        g.mark_output(o)
+    return g
+
+
+def _plan_to_json(plan: Plan) -> Dict[str, Any]:
+    p = plan.planned
+    return {
+        "mode": plan.mode,
+        "graph": _graph_to_json(p.graph),
+        "layouts": {name: _enc_attr(lay) for name, lay in p.layouts.items()},
+        "schedules": {name: dataclasses.asdict(s)
+                      for name, s in p.schedules.items()},
+        "n_transforms": p.n_transforms,
+        "transform_bytes_total": p.transform_bytes_total,
+        "predicted": {"conv_s": plan.predicted_conv_s,
+                      "transform_s": plan.predicted_transform_s,
+                      "epilogue_s": plan.predicted_epilogue_s},
+        "report": plan.report.to_json() if plan.report else None,
+    }
+
+
+def _plan_from_json(js: Dict[str, Any]) -> Plan:
+    planned = PlannedGraph(
+        graph=_graph_from_json(js["graph"]),
+        layouts={name: _dec_attr(v) for name, v in js["layouts"].items()},
+        schedules={name: ConvSchedule(**s)
+                   for name, s in js["schedules"].items()},
+        n_transforms=js["n_transforms"],
+        transform_bytes_total=js["transform_bytes_total"])
+    pred = js["predicted"]
+    # solution/fusion/report are plan-time provenance, not needed to
+    # execute; the report's JSON form is kept in the manifest only
+    return Plan(planned=planned, mode=js["mode"], solution=None,
+                predicted_conv_s=pred["conv_s"],
+                predicted_transform_s=pred["transform_s"],
+                predicted_epilogue_s=pred["epilogue_s"])
+
+
+def _params_to_flat_ok(params: Params) -> Params:
+    """Param leaf names ('w', 'b', 'scale', ...) never contain dots, so the
+    CheckpointStore's dotted flat paths split back unambiguously."""
+    for p in params.values():
+        for leaf in p:
+            assert "." not in leaf, f"param leaf {leaf!r} would not round-trip"
+    return params
+
+
+def _params_from_flat(leaves: Dict[str, Any]) -> Params:
+    out: Params = {}
+    for path, arr in leaves.items():
+        node, leaf = path.rsplit(".", 1)
+        out.setdefault(node, {})[leaf] = jnp.asarray(arr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+class InferenceSession:
+    """One compiled model: plans + bound weights, specialized per batch
+    size.  Create with :func:`compile`; persist with :meth:`save` /
+    :meth:`load`.  Sessions loaded from an artifact are *frozen*: they
+    execute their saved specializations but cannot re-plan new batch sizes
+    (the logical graph and raw weights are not part of the artifact)."""
+
+    def __init__(self, *, graph: Optional[Graph],
+                 base_shapes: Dict[str, Tuple[int, ...]],
+                 params: Optional[Params],
+                 pipeline: Optional[Pipeline],
+                 db: Optional[ScheduleDatabase] = None,
+                 tuning: str = "roofline",
+                 transform_bw: Optional[float] = None,
+                 search_budget: Tuple[int, int, int] = (6, 2, 3),
+                 use_pallas: bool = False, interpret: bool = True,
+                 dispatch: str = "whole",
+                 model_name: Optional[str] = None) -> None:
+        self._graph = graph
+        self._base_shapes = {k: tuple(v) for k, v in base_shapes.items()}
+        self._params = params
+        self.pipeline = pipeline
+        self.db = db if db is not None else ScheduleDatabase()
+        self.tuning = tuning
+        self.transform_bw = transform_bw
+        self.search_budget = search_budget
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.dispatch = dispatch
+        self.model_name = model_name
+        self._specialized: Dict[int, CompiledModel] = {}
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def input_spec(self) -> Dict[str, Tuple[int, ...]]:
+        return dict(self._base_shapes)
+
+    @property
+    def batch_sizes(self):
+        return sorted(self._specialized)
+
+    @property
+    def frozen(self) -> bool:
+        """True for artifact-loaded sessions (no source graph to re-plan)."""
+        return self._graph is None
+
+    def plan_for(self, batch: int) -> Plan:
+        return self.specialize(batch).plan
+
+    # -- compilation ---------------------------------------------------------
+    def _shapes_for(self, batch: int) -> Dict[str, Tuple[int, ...]]:
+        return {k: (batch,) + v[1:] for k, v in self._base_shapes.items()}
+
+    def specialize(self, batch: int) -> CompiledModel:
+        """The executable for one batch size, planning+binding on first
+        use (per-batch-size shape specialization)."""
+        m = self._specialized.get(batch)
+        if m is not None:
+            return m
+        if self.frozen:
+            raise RuntimeError(
+                f"session loaded from an artifact has no batch-{batch} "
+                f"specialization (saved: {self.batch_sizes}) and no source "
+                "graph to re-plan; save the session with this batch size")
+        plan = self.pipeline.run(
+            self._graph, self._shapes_for(batch), db=self.db,
+            tuning=self.tuning, transform_bw=self.transform_bw,
+            search_budget=self.search_budget)
+        if plan.report is not None and plan.report.transform_bw is not None:
+            # calibrated once (measured tuning); reused by later
+            # specializations and cached in the saved artifact
+            self.transform_bw = plan.report.transform_bw
+        m = compile_model(plan, self._params, use_pallas=self.use_pallas,
+                          interpret=self.interpret, dispatch=self.dispatch)
+        self._specialized[batch] = m
+        return m
+
+    # -- execution -----------------------------------------------------------
+    def __call__(self, inputs: Dict[str, jnp.ndarray]):
+        batch = int(next(iter(inputs.values())).shape[0])
+        return self.specialize(batch)(inputs)
+
+    def predict(self, x: jnp.ndarray):
+        """Single-input convenience (the common CNN case); dispatches to
+        the batch-size specialization of ``x``."""
+        return self.specialize(int(x.shape[0])).predict(x)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: Union[str, Path]) -> Path:
+        """Write the versioned artifact: every current specialization's
+        plan + pre-transformed weights, the schedule database, and the
+        calibrated transform bandwidth."""
+        if not self._specialized:
+            raise RuntimeError("nothing to save: session has no "
+                               "specializations (call predict/specialize)")
+        path = Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        store = CheckpointStore(path / "weights")
+        for batch, m in self._specialized.items():
+            store.save(step=batch, tree=_params_to_flat_ok(m.params),
+                       meta={"batch": batch})
+        for stale in set(store.steps()) - set(self._specialized):
+            # re-saving into an existing artifact must not ship dead
+            # weight copies for batch sizes the manifest no longer lists
+            shutil.rmtree(store.dir / f"step_{stale:06d}")
+        manifest = {
+            "format": ARTIFACT_FORMAT,
+            "version": ARTIFACT_VERSION,
+            "model": self.model_name,
+            "tuning": self.tuning,
+            "transform_bw": self.transform_bw,
+            "pipeline": self.pipeline.name if self.pipeline else None,
+            "input_spec": {k: list(v) for k, v in self._base_shapes.items()},
+            "use_pallas": self.use_pallas,
+            "interpret": self.interpret,
+            "dispatch": self.dispatch,
+            "batches": {str(b): _plan_to_json(m.plan)
+                        for b, m in self._specialized.items()},
+            # measured winners only: analytical rankings are re-derivable
+            # and would bloat the manifest by megabytes per workload set
+            "db": self.db.to_blob(measured_only=True),
+        }
+        # atomic manifest install (same crash-safety stance as the
+        # CheckpointStore next to it): a killed save never leaves a
+        # truncated manifest behind complete weights
+        tmp = path / ".manifest.json.tmp"
+        tmp.write_text(json.dumps(manifest))
+        tmp.replace(path / "manifest.json")
+        return path
+
+    @classmethod
+    def load(cls, path: Union[str, Path], *,
+             dispatch: Optional[str] = None) -> "InferenceSession":
+        """Reconstruct a frozen session from :meth:`save` output.  No
+        planning, no schedule search, no weight transformation happens —
+        the plans and physical-layout weights come straight off disk."""
+        path = Path(path)
+        manifest = json.loads((path / "manifest.json").read_text())
+        if manifest.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(f"{path} is not a {ARTIFACT_FORMAT} artifact")
+        version = manifest.get("version")
+        if version != ARTIFACT_VERSION:
+            raise ValueError(
+                f"artifact version {version} is not supported by this "
+                f"build (expected {ARTIFACT_VERSION}); re-save the session "
+                "with a matching version")
+        db = ScheduleDatabase()
+        db.load_blob(manifest.get("db", {}))
+        sess = cls(graph=None,
+                   base_shapes={k: tuple(v) for k, v in
+                                manifest["input_spec"].items()},
+                   params=None, pipeline=None, db=db,
+                   tuning=manifest["tuning"],
+                   transform_bw=manifest.get("transform_bw"),
+                   use_pallas=manifest.get("use_pallas", False),
+                   interpret=manifest.get("interpret", True),
+                   dispatch=dispatch or manifest.get("dispatch", "whole"),
+                   model_name=manifest.get("model"))
+        store = CheckpointStore(path / "weights")
+        for bstr, plan_js in manifest["batches"].items():
+            batch = int(bstr)
+            leaves, _, _ = store.restore_flat(step=batch)
+            sess._specialized[batch] = CompiledModel(
+                plan=_plan_from_json(plan_js),
+                params=_params_from_flat(leaves),
+                use_pallas=sess.use_pallas, interpret=sess.interpret,
+                dispatch=sess.dispatch)
+        return sess
+
+
+# Short alias used throughout the docs: Session.load(path).predict(x)
+Session = InferenceSession
+
+
+# ---------------------------------------------------------------------------
+# compile(): the public front door
+# ---------------------------------------------------------------------------
+
+def compile(model: Union[str, Graph],                     # noqa: A001
+            input_spec: Union[Dict[str, Tuple[int, ...]],
+                              Tuple[int, ...], None] = None, *,
+            params: Optional[Params] = None,
+            tuning: str = "roofline",
+            pipeline: Optional[Pipeline] = None,
+            db: Union[ScheduleDatabase, str, Path, None] = None,
+            transform_bw: Optional[float] = None,
+            search_budget: Tuple[int, int, int] = (6, 2, 3),
+            seed: int = 0,
+            use_pallas: bool = False, interpret: bool = True,
+            dispatch: str = "whole",
+            eager: bool = True) -> InferenceSession:
+    """Build an :class:`InferenceSession` for a model.
+
+    model       zoo name (``"resnet-18"``) or a ``core.graph.Graph``
+    input_spec  ``{input_name: NCHW shape}``, or a single NCHW tuple for
+                one-input models (zoo names may omit it for the builder's
+                default resolution)
+    tuning      "roofline" — analytical schedule ranking (default);
+                "cached"   — reuse whatever the schedule database already
+                             holds (e.g. measured winners from a benchmark
+                             run or a loaded artifact), analytical for
+                             misses, never measures;
+                "measured" — the guided wall-clock search on this host,
+                             with ``transform_bw`` auto-calibrated from a
+                             one-shot host-copy probe
+    pipeline    a ``core.pipeline.Pipeline``; default is the full ladder
+                (``Pipeline.preset("fusion")``)
+    db          schedule database instance or path to a persisted one
+    eager       plan + bind the input_spec's batch size now (default); the
+                session still specializes other batch sizes on demand
+    """
+    from repro.models.cnn import build as build_zoo
+
+    if isinstance(model, Graph):
+        if not isinstance(input_spec, dict):
+            raise ValueError("compile(Graph, ...) needs input_spec as a "
+                             "{input_name: shape} dict")
+        graph, shapes = model, {k: tuple(v) for k, v in input_spec.items()}
+        model_name = None
+    else:
+        model_name = model
+        if input_spec is None:
+            graph, shapes = build_zoo(model_name)
+        else:
+            if isinstance(input_spec, dict):
+                if len(input_spec) != 1:
+                    raise ValueError(
+                        f"zoo models take exactly one input; got spec keys "
+                        f"{sorted(input_spec)} — pass a Graph for "
+                        "multi-input models")
+                (shape,) = (tuple(v) for v in input_spec.values())
+            else:
+                shape = tuple(input_spec)
+            if len(shape) != 4:
+                raise ValueError(f"expected an NCHW shape, got {shape}")
+            # the zoo builders are parameterized by (batch, image) only —
+            # reject specs they cannot honor instead of silently building
+            # a model the caller's input will not fit
+            if shape[1] != 3 or shape[2] != shape[3]:
+                raise ValueError(
+                    f"zoo models take square RGB inputs (N, 3, S, S); got "
+                    f"{shape} — build the graph yourself for other shapes")
+            graph, shapes = build_zoo(model_name, batch=shape[0],
+                                      image=shape[2])
+    if isinstance(db, (str, Path)):
+        db = ScheduleDatabase(db)
+        # read-only snapshot: the session persists its database inside the
+        # artifact; cache misses must not rewrite the source file (a
+        # roofline fallback would bloat a measured-winners db)
+        db.path = None
+    if params is None:
+        params = init_params(graph, shapes, seed=seed)
+    sess = InferenceSession(
+        graph=graph, base_shapes=shapes, params=params,
+        pipeline=pipeline or Pipeline.preset("fusion"), db=db,
+        tuning=tuning, transform_bw=transform_bw,
+        search_budget=search_budget, use_pallas=use_pallas,
+        interpret=interpret, dispatch=dispatch, model_name=model_name)
+    if eager:
+        sess.specialize(next(iter(shapes.values()))[0])
+    return sess

@@ -109,13 +109,21 @@ def _acc_scan(xp, w_blocked, stride, oh, ow):
     return acc
 
 
-def _acc_patch_gemm(xp, w_blocked, stride, oh, ow):
-    """im2col lowering: strided patch panels flattened to a single plain
-    (n*oh*ow, kh*kw*cin) @ (kh*kw*cin, cout) GEMM.  Pays an explicit panel
-    transpose but hands the backend one contiguous full-reduction matmul —
-    the measured winner on small-spatial deep layers (e.g. 7x7x512)."""
+def prelay_patch_gemm_weight(w_blocked: jnp.ndarray) -> jnp.ndarray:
+    """Bind-time pre-layout for the patch_gemm lowering: materialize the
+    KCRS[x]c[y]k weight in panel-major ``(Ci, kh, kw, ic_bn, Ko, oc_bn)``
+    order — the transpose ``_acc_patch_gemm`` otherwise pays at run time.
+    The kernel's remaining reshape to the ``(kh*kw*cin, cout)`` GEMM operand
+    is a free bitcast on the contiguous pre-laid array (§3.2: parameter
+    layout is invariant, so transform it during compilation)."""
+    return jnp.asarray(w_blocked).transpose(1, 2, 3, 4, 0, 5)
+
+
+def _patch_gemm(xp, w_panel_major, stride, oh, ow):
+    """Shared tail of both patch_gemm entries: ``w_panel_major`` is the
+    weight already in (Ci, kh, kw, ic_bn, Ko, oc_bn) order."""
     n, ci, hp, wp, ic_bn = xp.shape
-    ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
+    ci_w, kh, kw, ic_w, ko, oc_bn = w_panel_major.shape
     taps = jnp.stack(
         [xp[:, :, dh:dh + oh * stride:stride,
             dw:dw + ow * stride:stride, :]
@@ -123,11 +131,21 @@ def _acc_patch_gemm(xp, w_blocked, stride, oh, ow):
         axis=-2)                                     # (n, ci, oh, ow, t, ic)
     panel = taps.transpose(0, 2, 3, 1, 4, 5).reshape(
         n * oh * ow, ci * kh * kw * ic_bn)
-    wmat = w_blocked.transpose(1, 2, 3, 4, 0, 5).reshape(
-        ci_w * kh * kw * ic_w, ko * oc_bn)
+    wmat = w_panel_major.reshape(ci_w * kh * kw * ic_w, ko * oc_bn)
     out = jnp.dot(panel.astype(jnp.float32), wmat.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
     return out.reshape(n, oh, ow, ko, oc_bn)
+
+
+def _acc_patch_gemm(xp, w_blocked, stride, oh, ow):
+    """im2col lowering: strided patch panels flattened to a single plain
+    (n*oh*ow, kh*kw*cin) @ (kh*kw*cin, cout) GEMM.  Pays an explicit panel
+    transpose but hands the backend one contiguous full-reduction matmul —
+    the measured winner on small-spatial deep layers (e.g. 7x7x512).  The
+    weight-side transpose disappears when the engine pre-lays the panels at
+    bind time (``prelay_patch_gemm_weight``)."""
+    return _patch_gemm(xp, w_blocked.transpose(1, 2, 3, 4, 0, 5),
+                       stride, oh, ow)
 
 
 _ACC_FNS = {"per_tap": _acc_per_tap, "tap_stack": _acc_tap_stack,
@@ -155,7 +173,8 @@ def apply_epilogue_fp32(acc: jnp.ndarray, scale, shift, residual,
 
 def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
                        stride: int, pad, spec: EpilogueSpec,
-                       variant: str = "auto") -> jnp.ndarray:
+                       variant: str = "auto",
+                       w_prelaid: bool = False) -> jnp.ndarray:
     """Blocked direct conv + composable fused epilogue as XLA ops — the
     template's jnp instantiation, dispatched over the lowering ``variant``
     (one of ``core.schedule.VARIANTS``, or ``"auto"`` for the static
@@ -168,15 +187,26 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
     final accumulation pass instead of separate full-tensor round trips):
     ``out = pool(relu(out * scale + shift + residual))``, optionally stored
     at a channel offset into the shared concat buffer ``out_buf``.
+
+    ``w_prelaid`` marks a weight that arrived panel-major from
+    ``prelay_patch_gemm_weight`` (legal only for variant ``patch_gemm``).
     """
     xp = pad_blocked(x_blocked, pad)
     n, ci, hp, wp, ic_bn = xp.shape
-    ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
+    if w_prelaid:
+        assert variant == "patch_gemm", \
+            f"pre-laid panel weight requires patch_gemm, got {variant!r}"
+        ci_w, kh, kw, ic_w, ko, oc_bn = w_blocked.shape
+    else:
+        ko, ci_w, kh, kw, ic_w, oc_bn = w_blocked.shape
     oh = (hp - kh) // stride + 1
     ow = (wp - kw) // stride + 1
     if variant in ("auto", None):
         variant = "tap_stack" if ic_bn < 8 else "per_tap"
-    acc = _ACC_FNS[variant](xp, w_blocked, stride, oh, ow)
+    if w_prelaid:
+        acc = _patch_gemm(xp, w_blocked, stride, oh, ow)
+    else:
+        acc = _ACC_FNS[variant](xp, w_blocked, stride, oh, ow)
     acc = acc.transpose(0, 3, 1, 2, 4)               # -> (n, ko, oh, ow, oc)
     acc = apply_epilogue_fp32(acc, scale, shift, residual, spec)
     out = acc.astype(x_blocked.dtype)
@@ -191,18 +221,20 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad", "variant"))
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "pad", "variant", "w_prelaid"))
 def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      stride: int = 1, pad=0,
-                     variant: str = "auto") -> jnp.ndarray:
+                     variant: str = "auto",
+                     w_prelaid: bool = False) -> jnp.ndarray:
     """Plain blocked conv (no epilogue) — see ``_conv2d_block_core``."""
     return _conv2d_block_core(x_blocked, w_blocked, None, None, None, None,
-                              stride, pad, IDENTITY, variant)
+                              stride, pad, IDENTITY, variant, w_prelaid)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("stride", "pad", "relu", "variant",
-                                    "epilogue"))
+                                    "epilogue", "w_prelaid"))
 def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      scale: jnp.ndarray | None = None,
                      shift: jnp.ndarray | None = None,
@@ -210,13 +242,14 @@ def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      out_buf: jnp.ndarray | None = None,
                      stride: int = 1, pad=0,
                      relu: bool = False, variant: str = "auto",
-                     epilogue: EpilogueSpec | None = None) -> jnp.ndarray:
+                     epilogue: EpilogueSpec | None = None,
+                     w_prelaid: bool = False) -> jnp.ndarray:
     """Fused CONV + composable epilogue block — see ``_conv2d_block_core``.
     ``relu`` is kept as a shorthand for the PR-1 call sites; it merges into
     ``epilogue`` (the full spec: ReLU, fused pooling, concat-offset store)."""
     spec = (epilogue or IDENTITY).with_relu(relu)
     return _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
-                              out_buf, stride, pad, spec, variant)
+                              out_buf, stride, pad, spec, variant, w_prelaid)
 
 
 def _schedule_variant(schedule: ConvSchedule | None) -> str:
@@ -227,18 +260,21 @@ def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
                    stride: int = 1, pad=0,
                    schedule: ConvSchedule | None = None,
                    use_pallas: bool = False,
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: bool = True,
+                   w_prelaid: bool = False) -> jnp.ndarray:
     """Planner-facing entry point on blocked tensors.  On the jnp path the
     schedule's ``variant`` picks the lowering; the Pallas kernel has one
     loop nest (its accumulator is VMEM-resident by construction) and ignores
     the variant axis."""
     if use_pallas:
         assert schedule is not None
+        assert not w_prelaid, "Pallas kernel consumes KCRS[x]c[y]k weights"
         xp = pad_blocked(x_blocked, pad)
         return conv2d_nchwc_pallas(xp, w_blocked, stride=stride,
                                    schedule=schedule, interpret=interpret)
     return conv2d_nchwc_jnp(x_blocked, w_blocked, stride=stride, pad=pad,
-                            variant=_schedule_variant(schedule))
+                            variant=_schedule_variant(schedule),
+                            w_prelaid=w_prelaid)
 
 
 def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
@@ -250,7 +286,8 @@ def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                          epilogue: EpilogueSpec | None = None,
                          schedule: ConvSchedule | None = None,
                          use_pallas: bool = False,
-                         interpret: bool = True) -> jnp.ndarray:
+                         interpret: bool = True,
+                         w_prelaid: bool = False) -> jnp.ndarray:
     """Fused conv_block entry on blocked tensors (engine-facing).  ``scale``
     and ``shift`` are per-channel vectors pre-blocked to ``(Ko, oc_bn)``;
     ``residual`` arrives in the conv's own NCHW[oc_bn]c output layout, and
@@ -259,6 +296,7 @@ def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
     spec = (epilogue or IDENTITY).with_relu(relu)
     if use_pallas:
         assert schedule is not None
+        assert not w_prelaid, "Pallas kernel consumes KCRS[x]c[y]k weights"
         xp = pad_blocked(x_blocked, pad)
         return conv2d_nchwc_pallas(xp, w_blocked, scale, shift, residual,
                                    out_buf, stride=stride, schedule=schedule,
@@ -266,7 +304,8 @@ def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
     return conv2d_block_jnp(x_blocked, w_blocked, scale, shift, residual,
                             out_buf, stride=stride, pad=pad,
                             epilogue=spec,
-                            variant=_schedule_variant(schedule))
+                            variant=_schedule_variant(schedule),
+                            w_prelaid=w_prelaid)
 
 
 def conv2d(x_nchw: jnp.ndarray, w_kcrs: jnp.ndarray, *, stride: int = 1,

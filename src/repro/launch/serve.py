@@ -5,9 +5,17 @@ Greedy-decodes a batch of synthetic prompts with a reduced config on CPU;
 at production scale the same prefill/decode_step functions are what the
 dry-run lowers onto the 256/512-chip meshes.
 
-Example:
+``--artifact <dir>`` instead serves a CNN from a saved
+``InferenceSession`` artifact: the fresh process goes load -> predict with
+zero schedule search and zero weight transformation — the fast-cold-start
+path (build the artifact with ``examples/serve_planned_cnn.py`` or
+``engine.compile(...).save(dir)``).
+
+Examples:
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
         --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --artifact artifact/ \
+        --requests 50
 """
 from __future__ import annotations
 
@@ -22,13 +30,56 @@ from repro.configs import ARCHS, reduced as make_reduced
 from repro.models.lm import model
 
 
+def serve_artifact(path: str, n_requests: int):
+    """Cold-start CNN serving: load the compiled session artifact and serve
+    a stream of single-image requests, reporting load time and latency."""
+    from repro.core.local_search import search_calls
+    from repro.engine import InferenceSession
+
+    if n_requests < 1:
+        raise ValueError(f"--requests must be >= 1, got {n_requests}")
+    n_searches = search_calls()
+    t0 = time.perf_counter()
+    sess = InferenceSession.load(path)
+    t_load = time.perf_counter() - t0
+    batch = sess.batch_sizes[0]
+    (name,) = sess.input_spec
+    shape = (batch,) + sess.input_spec[name][1:]
+    rng = np.random.default_rng(0)
+    lat = []
+    out = None
+    for _ in range(n_requests):
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(sess.predict(x))
+        lat.append(time.perf_counter() - t0)
+    assert search_calls() == n_searches, \
+        "artifact serving must not re-run any schedule search"
+    lat_ms = np.asarray(lat[1:] or lat) * 1e3   # drop compile-carrying call
+    print(f"artifact={path} model={sess.model_name or '?'} "
+          f"load={t_load * 1e3:.0f} ms (zero search, zero re-binding)")
+    print(f"served {n_requests} requests: "
+          f"p50={np.percentile(lat_ms, 50):.1f} "
+          f"p90={np.percentile(lat_ms, 90):.1f} "
+          f"p99={np.percentile(lat_ms, 99):.1f} ms")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=sorted(ARCHS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--artifact", default=None,
+                    help="serve a saved CNN InferenceSession artifact "
+                         "(load->predict, no search) instead of the LM loop")
+    ap.add_argument("--requests", type=int, default=20,
+                    help="request count for --artifact serving")
     args = ap.parse_args(argv)
+
+    if args.artifact:
+        return serve_artifact(args.artifact, args.requests)
 
     cfg = make_reduced(ARCHS[args.arch])
     params = model.init_params(cfg, jax.random.PRNGKey(0))

@@ -56,13 +56,16 @@ def conv2d_nchw_direct(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
            layout: Layout, *, stride: int = 1, pad=0,
            groups: int = 1, schedule: Optional[ConvSchedule] = None,
-           use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
+           use_pallas: bool = False, interpret: bool = True,
+           w_prelaid: bool = False) -> jnp.ndarray:
     """``w`` (and ``b``) arrive pre-transformed for ``layout``:
-    KCRS for NCHW, KCRS[x]c[y]k for blocked."""
+    KCRS for NCHW, KCRS[x]c[y]k for blocked (panel-major when the engine
+    pre-laid a patch_gemm weight — ``w_prelaid``)."""
     if layout.is_blocked:
         assert groups == 1, "grouped convs run in NCHW"
         out = conv2d_blocked(x, w, stride=stride, pad=pad, schedule=schedule,
-                             use_pallas=use_pallas, interpret=interpret)
+                             use_pallas=use_pallas, interpret=interpret,
+                             w_prelaid=w_prelaid)
         if b is not None:   # b pre-shaped (Ko, 1, 1, oc_bn)
             out = out + b[None]
     else:
@@ -80,7 +83,8 @@ def conv_block(x: jnp.ndarray, w: jnp.ndarray,
                out_buf: Optional[jnp.ndarray] = None,
                schedule: Optional[ConvSchedule] = None,
                use_pallas: bool = False,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool = True,
+               w_prelaid: bool = False) -> jnp.ndarray:
     """Fused CONV + composable epilogue (§3.1 operation fusion): per-channel
     affine (-> residual add) -> ReLU -> fused pooling, optionally stored at a
     channel offset into the shared concat buffer ``out_buf``.  ``w`` arrives
@@ -95,7 +99,7 @@ def conv_block(x: jnp.ndarray, w: jnp.ndarray,
         return conv2d_block_blocked(
             x, w, scale, shift, residual, out_buf, stride=stride, pad=pad,
             epilogue=spec, schedule=schedule, use_pallas=use_pallas,
-            interpret=interpret)
+            interpret=interpret, w_prelaid=w_prelaid)
     out = conv2d_nchw_direct(x, w, stride=stride, pad=pad,
                              groups=groups).astype(jnp.float32)
     if scale is not None:

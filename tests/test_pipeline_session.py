@@ -1,0 +1,270 @@
+"""Pipeline-preset equivalence, session artifact round-trips, and the
+bind-time patch_gemm weight pre-layout (PR 4 API redesign)."""
+import json
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import local_search
+from repro.core.graph import Graph
+from repro.core.local_search import (LocalSearchResult, RankedSchedule,
+                                     ScheduleDatabase)
+from repro.core.pipeline import (MODES, FuseEpilogues, GlobalLayoutPlan,
+                                 LocalTune, Pipeline, TransformElim)
+from repro.core.planner import plan
+from repro.core.schedule import ConvSchedule
+from repro.engine import InferenceSession, compile_model
+from repro.engine import compile as compile_session
+from repro.models.cnn import build
+from repro.nn.init import init_params
+
+
+def _mini_net():
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=16, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("bn1", "batch_norm", ["c1"])
+    g.add("r1", "relu", ["bn1"])
+    g.add("c2", "conv2d", ["r1"], in_channels=16, out_channels=32, kh=3,
+          kw=3, pad=1)
+    g.add("c3", "conv2d", ["r1"], in_channels=16, out_channels=32, kh=1,
+          kw=1)
+    g.add("add", "add", ["c2", "c3"])
+    g.add("r2", "relu", ["add"])
+    g.add("gap", "global_avg_pool", ["r2"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=10)
+    g.mark_output("fc")
+    return g, {"in": (1, 3, 32, 32)}
+
+
+# ---------------------------------------------------------------------------
+# Pipeline presets vs the legacy plan() ladder
+# ---------------------------------------------------------------------------
+
+def test_preset_reproduces_legacy_plan_all_modes_resnet18():
+    """Acceptance: Pipeline.preset(m) == legacy plan(mode=m) schedules for
+    every mode in MODES, on a real zoo network."""
+    g, shapes = build("resnet-18", batch=1, image=64)
+    db = ScheduleDatabase()
+    for mode in MODES:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy = plan(g, shapes, mode=mode, db=db)
+        new = Pipeline.preset(mode).run(g, shapes, db=db)
+        assert new.mode == legacy.mode == mode
+        assert new.planned.schedules == legacy.planned.schedules, mode
+        assert new.planned.layouts == legacy.planned.layouts, mode
+        assert new.planned.n_transforms == legacy.planned.n_transforms
+        assert new.predicted_total_s == pytest.approx(
+            legacy.predicted_total_s, rel=1e-12), mode
+        # the redesign's report: per-pass timings + fusion/solver stats
+        assert new.report is not None
+        assert [p.name for p in new.report.passes][-1] == "transform-elim"
+        assert all(p.seconds >= 0 for p in new.report.passes)
+        if mode == "fusion":
+            assert new.report.n_fused_blocks > 0
+        if mode in ("global-search", "fusion"):
+            assert new.report.solver is not None
+            assert new.report.solver["solver"] in ("dp", "pbqp", "brute")
+
+
+def test_plan_shim_warns_deprecation_once():
+    import repro.core.planner as planner_mod
+    g, shapes = _mini_net()
+    planner_mod._warned = False
+    with pytest.warns(DeprecationWarning):
+        plan(g, shapes, mode="nchw")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # second: silent
+        plan(g, shapes, mode="nchw")
+
+
+def test_custom_pipeline_composition():
+    """Passes compose outside the presets: epilogue fusion (without the
+    concat pass) + uniform layout still runs and preserves semantics."""
+    g, shapes = _mini_net()
+    params = init_params(g, shapes, seed=1)
+    x = jnp.asarray(np.random.default_rng(1)
+                    .normal(size=shapes["in"]).astype(np.float32))
+    ref = compile_model(Pipeline.preset("nchw").run(g, shapes),
+                        params).predict(x)
+    pipe = Pipeline([FuseEpilogues(), LocalTune(),
+                     GlobalLayoutPlan("uniform", uniform_block=16),
+                     TransformElim()], name="fused-uniform")
+    p = pipe.run(g, shapes)
+    assert p.mode == "fused-uniform"
+    assert p.fusion is not None and p.fusion.n_blocks > 0
+    out = compile_model(p, params).predict(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_transform_bw_calibration(monkeypatch):
+    """Measured db entries + cached/measured tuning + no transform_bw ->
+    the pipeline calibrates the host copy bandwidth (stubbed here) and
+    records it in the report; roofline tuning never probes."""
+    from repro.core import calibrate
+
+    monkeypatch.setattr(calibrate, "measure_host_copy_bw",
+                        lambda *a, **k: 3.0e9)
+    g, shapes = _mini_net()
+    db = ScheduleDatabase()
+    # mark every workload's roofline result as measured
+    pipe = Pipeline.preset("global-search")
+    roofline = pipe.run(g, shapes, db=db)
+    for key, res in list(db._mem.items()):
+        db._mem[key] = LocalSearchResult(res.workload, res.ranked,
+                                         measured=True,
+                                         search_budget=(99, 99))
+    p = pipe.run(g, shapes, db=db, tuning="cached")
+    assert p.report.transform_bw == pytest.approx(3.0e9)
+    # unmeasured plan stayed on the roofline clock
+    assert roofline.report.transform_bw is None
+    # roofline tuning never probes, even over a measured shared db
+    p2 = pipe.run(g, shapes, db=db)
+    assert p2.report.transform_bw is None
+
+
+# ---------------------------------------------------------------------------
+# Session artifact round-trip
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_bit_exact_and_searchless(tmp_path, rng):
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes, tuning="roofline")
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    y0 = np.asarray(sess.predict(x))
+    sess.save(tmp_path / "art")
+
+    n_before = local_search.search_calls()
+    loaded = InferenceSession.load(tmp_path / "art")
+    y1 = np.asarray(loaded.predict(x))
+    assert local_search.search_calls() == n_before, \
+        "load->predict must not run any schedule search"
+    assert loaded.frozen
+    assert y0.shape == y1.shape and y0.tobytes() == y1.tobytes(), \
+        f"artifact round-trip drift: {np.abs(y0 - y1).max()}"
+    # plans round-tripped structurally, not just numerically
+    assert (loaded.plan_for(1).planned.schedules
+            == sess.plan_for(1).planned.schedules)
+
+
+def test_session_batch_specialization(rng):
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    assert sess.batch_sizes == [1]
+    x2 = jnp.asarray(rng.normal(size=(2,) + shapes["in"][1:])
+                     .astype(np.float32))
+    out = sess.predict(x2)
+    assert np.asarray(out).shape[0] == 2
+    assert sess.batch_sizes == [1, 2]
+    # batch-1 and batch-2 rows agree per-sample semantics
+    y_a = np.asarray(sess.predict(x2[:1]))
+    np.testing.assert_allclose(np.asarray(out)[:1], y_a,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_artifact_rejects_bumped_version(tmp_path, rng):
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.predict(jnp.asarray(rng.normal(size=shapes["in"])
+                             .astype(np.float32)))
+    sess.save(tmp_path / "art")
+    mf = tmp_path / "art" / "manifest.json"
+    blob = json.loads(mf.read_text())
+    blob["version"] = blob["version"] + 1
+    mf.write_text(json.dumps(blob))
+    with pytest.raises(ValueError, match="version"):
+        InferenceSession.load(tmp_path / "art")
+    # and a non-artifact directory is rejected before any version check
+    (tmp_path / "junk").mkdir()
+    (tmp_path / "junk" / "manifest.json").write_text("{}")
+    with pytest.raises(ValueError, match="artifact"):
+        InferenceSession.load(tmp_path / "junk")
+
+
+def test_frozen_session_rejects_unknown_batch(tmp_path, rng):
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.predict(jnp.asarray(rng.normal(size=shapes["in"])
+                             .astype(np.float32)))
+    sess.save(tmp_path / "art")
+    loaded = InferenceSession.load(tmp_path / "art")
+    with pytest.raises(RuntimeError, match="batch-4"):
+        loaded.predict(jnp.zeros((4,) + shapes["in"][1:], jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Bind-time patch_gemm pre-layout
+# ---------------------------------------------------------------------------
+
+def _patch_gemm_case():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 32, 14, 14)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 32, 3, 3)).astype(np.float32))
+    s = ConvSchedule(16, 16, 1, 1, False, "patch_gemm")
+    return x, w, s, rng
+
+
+def test_patch_gemm_prelaid_oracle_bit_exact():
+    """Satellite acceptance: the pre-laid panel path matches the
+    transposing path bit-for-bit (same float ops, weight transpose moved
+    to bind time)."""
+    from repro.core.layout import kernel_to_kcrs_ck, to_nchwc
+    from repro.kernels.ops import (conv2d_block_blocked,
+                                   prelay_patch_gemm_weight)
+
+    x, w, s, rng = _patch_gemm_case()
+    xb = to_nchwc(x, s.ic_bn)
+    wb = kernel_to_kcrs_ck(w, s.ic_bn, s.oc_bn)
+    shift = jnp.asarray(rng.normal(size=(64 // s.oc_bn, s.oc_bn))
+                        .astype(np.float32))
+    ref = conv2d_block_blocked(xb, wb, None, shift, None, stride=1, pad=1,
+                               relu=True, schedule=s)
+    pre = conv2d_block_blocked(xb, prelay_patch_gemm_weight(wb), None,
+                               shift, None, stride=1, pad=1, relu=True,
+                               schedule=s, w_prelaid=True)
+    a, b = np.asarray(ref), np.asarray(pre)
+    assert a.shape == b.shape and a.tobytes() == b.tobytes()
+
+
+def test_engine_binds_patch_gemm_panels(monkeypatch):
+    """bind_params stores the panel-major weight for patch_gemm schedules
+    and the executed model still matches a force-disabled-prelay run."""
+    import repro.engine.executor as executor
+
+    g = Graph()
+    g.add("in", "input")
+    g.add("c", "conv2d", ["in"], in_channels=32, out_channels=64, kh=3,
+          kw=3, pad=1)
+    g.mark_output("c")
+    shapes = {"in": (1, 32, 14, 14)}
+    params = init_params(g, shapes, seed=0)
+    p = Pipeline.preset("transform-elim").run(g, shapes)
+    # force the schedule onto patch_gemm
+    import dataclasses
+    for name, s in list(p.planned.schedules.items()):
+        p.planned.schedules[name] = dataclasses.replace(
+            s, variant="patch_gemm")
+    m_pre = compile_model(p, params)
+    (sched,) = p.planned.schedules.values()
+    lay = p.planned.layouts["c"]
+    assert executor._patch_gemm_prelaid(sched, lay, use_pallas=False)
+    # pre-laid form is panel-major: (Ci, kh, kw, ic_bn, Ko, oc_bn)
+    assert m_pre.params["c"]["w"].shape == (
+        32 // sched.ic_bn, 3, 3, sched.ic_bn, 64 // sched.oc_bn,
+        sched.oc_bn)
+    x = jnp.asarray(np.random.default_rng(2)
+                    .normal(size=shapes["in"]).astype(np.float32))
+    y_pre = np.asarray(m_pre.predict(x))
+    monkeypatch.setattr(executor, "_patch_gemm_prelaid",
+                        lambda *a, **k: False)
+    m_plain = compile_model(p, params)
+    assert m_plain.params["c"]["w"].shape[-2:] == (sched.ic_bn,
+                                                   sched.oc_bn)
+    y_plain = np.asarray(m_plain.predict(x))
+    assert y_pre.tobytes() == y_plain.tobytes()
