@@ -51,6 +51,10 @@ def main() -> None:
     ap.add_argument("--model", default="resnet-18")
     ap.add_argument("--image", type=int, default=64)
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--batches", default=None,
+                    help="extra batch sizes to specialize+save (comma "
+                         "list, e.g. '1,8') — the serving buckets the "
+                         "serving_load benchmark packs into")
     ap.add_argument("--db", default=None,
                     help="schedule database to serve cached winners from "
                          "(e.g. BENCH_variants_db.json); omitted = "
@@ -69,6 +73,8 @@ def main() -> None:
     sess = compile_session(args.model,
                            (args.batch, 3, args.image, args.image),
                            tuning="cached", db=args.db)
+    for b in sorted(int(s) for s in (args.batches or "").split(",") if s):
+        sess.specialize(b)
     rng = np.random.default_rng(0)
     x = rng.normal(size=(args.batch, 3, args.image, args.image)) \
         .astype(np.float32)

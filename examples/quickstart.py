@@ -12,7 +12,10 @@ per-pass timing report.
 
 For the full compile -> predict -> save -> load lifecycle (persistent
 artifacts, per-batch specialization) see ``examples/serve_planned_cnn.py``
-and ``repro.engine.compile``.
+and ``repro.engine.compile``; for heavy-traffic serving on top of a saved
+artifact (async driver, dynamic batching into the artifact's specialized
+batch sizes, deterministic padded execution) see the "Serving" section of
+docs/api.md and ``repro.engine.AsyncServer``.
 """
 import sys
 import time

@@ -1,16 +1,18 @@
 """End-to-end serving driver (the paper's workload: latency-focused CNN
-inference, batch size 1, many requests) — now through the persistent
-``InferenceSession`` lifecycle.
+inference, many requests) — through the persistent ``InferenceSession``
+lifecycle and the async dynamic-batching driver.
 
     PYTHONPATH=src python examples/serve_planned_cnn.py [model] [n_requests]
 
 Compiles the model once (``engine.compile`` runs the full fusion+layout
-pipeline and binds weights into their physical layouts), saves the
-versioned artifact, then — as a cold-start server would — **loads the
-artifact back** and serves a stream of single-image requests from the
-loaded session, reporting the latency distribution.  The load path runs
-zero schedule search and zero weight transformation: the Table-2
-experiment, minus the per-process planning cost.  See docs/api.md.
+pipeline and binds weights into their physical layouts), specializes the
+serving buckets {1, 8}, saves the versioned artifact, then — as a
+cold-start server would — **loads the artifact back** and serves a stream
+of single-image requests through ``AsyncServer``: bounded queue, dynamic
+batching into the artifact's buckets, graceful drain.  The load path runs
+zero schedule search and zero weight transformation, and the driver's
+responses are bit-identical to serving the same artifact one request at a
+time.  See docs/api.md ("Serving").
 """
 import sys
 import tempfile
@@ -23,6 +25,8 @@ sys.path.insert(0, "src")
 from repro.engine import compile as compile_session  # noqa: E402
 from repro.launch.serve import serve_artifact        # noqa: E402
 
+SERVE_BUCKET = 8
+
 
 def main():
     name = sys.argv[1] if len(sys.argv) > 1 else "resnet-18"
@@ -31,15 +35,18 @@ def main():
 
     t0 = time.perf_counter()
     session = compile_session(name, (1, 3, image, image))
+    session.specialize(SERVE_BUCKET)     # the bucket the driver packs into
     t_compile = time.perf_counter() - t0
 
     with tempfile.TemporaryDirectory(prefix="neocpu_session_") as artifact:
         session.save(artifact)
         print(f"model={name} compile_time={t_compile:.1f}s -> artifact "
-              f"{artifact}")
+              f"{artifact} (buckets {session.batch_sizes})")
         # cold-start server: load the artifact (zero search, zero
         # re-binding — serve_artifact asserts it) and serve the stream
-        out = serve_artifact(artifact, n_req)
+        # through the async dynamic-batching driver
+        out = serve_artifact(artifact, n_req, max_batch=SERVE_BUCKET,
+                             max_wait_ms=2.0)
     print(f"top-1 of last request: {int(jnp.argmax(out))}")
 
 

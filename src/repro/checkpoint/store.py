@@ -135,6 +135,15 @@ class CheckpointStore:
                 lambda arr, s: jax.device_put(arr, s), tree, shardings)
         return tree, step, meta
 
+    def delete(self, step: int) -> None:
+        """Remove one step's directory (no-op if absent) — the inference
+        artifact path uses this to drop specializations a re-saved
+        manifest no longer lists."""
+        self.wait()                      # never race an async writer
+        d = self.dir / f"step_{step:06d}"
+        if d.exists():
+            shutil.rmtree(d)
+
     def prune(self, keep_last: int = 3) -> None:
         for s in self.steps()[:-keep_last]:
-            shutil.rmtree(self.dir / f"step_{s:06d}")
+            self.delete(s)

@@ -3,9 +3,19 @@
 ``compile``/``InferenceSession`` (engine/session.py) is the front door —
 plan, tune, bind, specialize per batch size, and persist artifacts;
 ``compile_model`` is the lower-level bind-one-plan entry it rides on.
+``AsyncServer`` (engine/serving.py) turns a session into a dynamic-batching
+serving loop with deterministic, padding-based bucket execution.
 """
 from repro.engine.executor import CompiledModel, bind_params, compile_model
+from repro.engine.serving import (AsyncServer, BatchPolicy,
+                                  DeadlineExceededError, DynamicBatchPolicy,
+                                  QueueFullError, ServerClosedError,
+                                  ServingError, ServingStats,
+                                  nearest_bucket, padded_predict)
 from repro.engine.session import InferenceSession, Session, compile
 
-__all__ = ["CompiledModel", "InferenceSession", "Session", "bind_params",
-           "compile", "compile_model"]
+__all__ = ["AsyncServer", "BatchPolicy", "CompiledModel",
+           "DeadlineExceededError", "DynamicBatchPolicy", "InferenceSession",
+           "QueueFullError", "ServerClosedError", "ServingError",
+           "ServingStats", "Session", "bind_params", "compile",
+           "compile_model", "nearest_bucket", "padded_predict"]

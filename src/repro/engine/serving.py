@@ -1,0 +1,556 @@
+"""Async batched serving driver over ``InferenceSession`` artifacts.
+
+The paper optimizes one inference call; the ROADMAP's north star is heavy
+traffic.  This module closes that gap: an :class:`AsyncServer` wraps a
+(usually artifact-loaded) session with a bounded request queue, a batching
+policy, and a worker loop that packs pending requests into the *nearest
+already-specialized batch size* — the compiled per-batch executables are
+the units a serving loop schedules around.
+
+Determinism is the load-bearing design decision.  XLA:CPU results are
+**not** invariant across batch shapes (a conv's GEMM picks different
+blocking for M=1 vs M=8, so the same image gets different low bits when
+co-batched), but they *are* invariant to row position and neighbor content
+within one fixed-shape executable.  Serving therefore executes every
+request — packed or alone — through the same bucket-shaped programs:
+``padded_predict`` pads a request up to the nearest specialized batch size
+and slices the real rows back out.  Packed results are bit-identical to
+one-request-at-a-time serving of the same artifact, no matter how the
+traffic interleaved; the throughput win of the driver is that one bucket
+execution serves many requests instead of one.
+
+Batching policy (``DynamicBatchPolicy``):
+
+* a batch is flushed when pending rows reach ``max_batch``, when the
+  oldest request has waited ``max_wait_ms``, or immediately during drain;
+* requests are packed strictly FIFO (never reordered — trivially,
+  never reordered within a deadline class);
+* the executed bucket is the *smallest* specialized batch size that fits
+  the packed rows, so the padded waste of a batch of ``n`` rows is exactly
+  ``nearest_bucket(n) - n`` — the minimum achievable given the artifact's
+  specializations, and zero whenever ``n`` itself is specialized.  When
+  the session is not frozen, an unseen size is specialized on demand
+  (behind the session's lock, so the planner never runs concurrently).
+
+Backpressure and lifecycle: ``submit`` raises :class:`QueueFullError`
+beyond ``max_queue`` (the client's signal to shed or retry), a per-request
+``deadline_ms`` expires queued work with :class:`DeadlineExceededError`
+instead of executing it late, and ``close(drain=True)`` completes
+everything in flight while rejecting new submissions with
+:class:`ServerClosedError`.
+
+    sess = InferenceSession.load("artifact/")        # buckets {1, 8}
+    with AsyncServer(sess, DynamicBatchPolicy(max_batch=8,
+                                              max_wait_ms=2.0)) as srv:
+        futs = [srv.submit(x) for x in stream]       # concurrent callers
+        outs = [f.result() for f in futs]            # == padded_predict(x)
+
+Tests drive the scheduling deterministically: construct with
+``autostart=False`` and a fake ``clock``, then pump :meth:`AsyncServer.step`
+by hand — no sleeps anywhere in the suite.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Deque, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Typed serving errors
+# ---------------------------------------------------------------------------
+
+class ServingError(RuntimeError):
+    """Base class for serving-driver failures."""
+
+
+class QueueFullError(ServingError):
+    """Backpressure: the bounded request queue is at capacity."""
+
+
+class DeadlineExceededError(ServingError):
+    """The request's deadline passed while it was still queued."""
+
+
+class ServerClosedError(ServingError):
+    """submit() after close()/drain started."""
+
+
+# ---------------------------------------------------------------------------
+# Bucketed (deterministic) execution helpers
+# ---------------------------------------------------------------------------
+
+def nearest_bucket(n: int, sizes: Sequence[int]) -> Optional[int]:
+    """Smallest specialized batch size >= n, or None if none fits."""
+    up = [s for s in sizes if s >= n]
+    return min(up) if up else None
+
+
+def pad_rows(x: jnp.ndarray, bucket: int) -> jnp.ndarray:
+    """Zero-pad the leading (batch) dim up to ``bucket`` rows."""
+    n = x.shape[0]
+    if n == bucket:
+        return x
+    pad = jnp.zeros((bucket - n,) + x.shape[1:], x.dtype)
+    return jnp.concatenate([x, pad])
+
+
+def _slice_rows(y, a: int, b: int):
+    if isinstance(y, tuple):
+        return tuple(t[a:b] for t in y)
+    return y[a:b]
+
+
+def padded_predict(session, x: jnp.ndarray, bucket: Optional[int] = None):
+    """One request through the serving execution path: pad to the nearest
+    specialized bucket (or an explicit ``bucket``), execute that
+    fixed-shape program, slice the real rows back.  This is the
+    *sequential baseline* the driver's packed results are bit-identical
+    to (results depend only on the bucket programs, never on which other
+    requests shared the batch)."""
+    x = jnp.asarray(x)
+    n = int(x.shape[0])
+    if bucket is None:
+        bucket = nearest_bucket(n, session.batch_sizes)
+    elif bucket < n:
+        raise ValueError(f"bucket {bucket} smaller than the request ({n})")
+    if bucket is None:
+        if session.frozen:
+            raise ServingError(
+                f"request of {n} rows exceeds every specialized batch size "
+                f"{session.batch_sizes} of a frozen session; re-save the "
+                "artifact with a larger bucket or with its source packed")
+        bucket = n                       # specialize on demand (locked)
+    y = session.specialize(bucket).predict(pad_rows(x, bucket))
+    return _slice_rows(y, 0, n)
+
+
+# ---------------------------------------------------------------------------
+# Requests + batching policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One queued inference request (leading dim = rows)."""
+
+    x: jnp.ndarray
+    rows: int
+    future: Future
+    t_submit: float
+    deadline: Optional[float] = None     # absolute clock time, or None
+
+
+class BatchPolicy:
+    """Decides *when* a batch forms and *how many* FIFO requests it takes.
+
+    Subclasses see only the pending queue and the clock, never the
+    session — policies are pure scheduling logic and unit-testable without
+    compiling anything."""
+
+    max_batch: int = 8
+
+    def ready(self, pending: Sequence[Request], now: float) -> bool:
+        raise NotImplementedError
+
+    def take(self, pending: Sequence[Request], cap: int) -> int:
+        raise NotImplementedError
+
+    def next_event(self, pending: Sequence[Request],
+                   now: float) -> Optional[float]:
+        """Seconds until this policy could become ready (worker wait hint);
+        None = only a new submission can change readiness."""
+        return None
+
+
+@dataclasses.dataclass
+class DynamicBatchPolicy(BatchPolicy):
+    """Flush on ``max_batch`` pending rows or ``max_wait_ms`` oldest age.
+
+    Packing is strictly FIFO: ``take`` returns the longest prefix of the
+    queue whose total rows fit the cap.  Padded waste per executed batch
+    is therefore ``nearest_bucket(total_rows) - total_rows`` — the
+    documented (and property-tested) bound.
+
+    ``fixed_bucket`` pins *every* executed batch to one specialized size:
+    a partially-filled flush then pads up to the same program a full
+    flush runs, so results are bit-reproducible regardless of traffic
+    shape (the strict-determinism serving mode; the default ``None``
+    lets small flushes use smaller buckets)."""
+
+    max_batch: int = 8
+    max_wait_ms: float = 5.0
+    fixed_bucket: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.fixed_bucket is not None and self.fixed_bucket < 1:
+            raise ValueError(
+                f"fixed_bucket must be >= 1, got {self.fixed_bucket}")
+
+    def ready(self, pending: Sequence[Request], now: float) -> bool:
+        if not pending:
+            return False
+        total = 0
+        for r in pending:
+            total += r.rows
+            if total >= self.max_batch:
+                return True
+        return (now - pending[0].t_submit) * 1e3 >= self.max_wait_ms
+
+    def take(self, pending: Sequence[Request], cap: int) -> int:
+        n, total = 0, 0
+        for r in pending:
+            if total + r.rows > cap and n > 0:
+                break
+            total += r.rows
+            n += 1
+            if total >= cap:
+                break
+        return n
+
+    def next_event(self, pending: Sequence[Request],
+                   now: float) -> Optional[float]:
+        if not pending:
+            return None
+        events = [pending[0].t_submit + self.max_wait_ms / 1e3]
+        events += [r.deadline for r in pending if r.deadline is not None]
+        return max(0.0, min(events) - now)
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServingStats:
+    """Counters + latency distribution of one server's lifetime."""
+
+    n_submitted: int = 0
+    n_completed: int = 0
+    n_rejected_full: int = 0
+    n_deadline_expired: int = 0
+    n_failed: int = 0
+    n_batches: int = 0
+    rows_executed: int = 0         # real request rows
+    rows_padded: int = 0           # zero rows added to reach the bucket
+    batch_rows: List[int] = dataclasses.field(default_factory=list)
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    def percentile_ms(self, q: float) -> float:
+        if not self.latencies_s:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies_s), q) * 1e3)
+
+    def to_json(self) -> dict:
+        return {
+            "n_submitted": self.n_submitted,
+            "n_completed": self.n_completed,
+            "n_rejected_full": self.n_rejected_full,
+            "n_deadline_expired": self.n_deadline_expired,
+            "n_failed": self.n_failed,
+            "n_batches": self.n_batches,
+            "rows_executed": self.rows_executed,
+            "rows_padded": self.rows_padded,
+            "mean_batch_rows": (sum(self.batch_rows) / len(self.batch_rows)
+                                if self.batch_rows else 0.0),
+            "p50_ms": round(self.percentile_ms(50), 3),
+            "p90_ms": round(self.percentile_ms(90), 3),
+            "p99_ms": round(self.percentile_ms(99), 3),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+
+class AsyncServer:
+    """Request queue + batching worker over one ``InferenceSession``.
+
+    ``submit`` is thread-safe and non-blocking: it enqueues and returns a
+    ``concurrent.futures.Future`` that resolves to exactly what
+    ``padded_predict(session, x)`` would return.  One worker thread packs
+    and executes batches (CPU inference saturates the cores with a single
+    bucket execution; the session lock would serialize extra workers at
+    specialization time anyway).
+
+    ``autostart=False`` starts no thread: callers pump :meth:`step`
+    themselves — the deterministic mode the tests and the synchronous
+    benchmark driver use, with an injectable ``clock``.
+    """
+
+    def __init__(self, session, policy: Optional[BatchPolicy] = None, *,
+                 max_queue: int = 128,
+                 clock: Callable[[], float] = time.monotonic,
+                 autostart: bool = True) -> None:
+        if len(session.input_spec) != 1:
+            raise ValueError("AsyncServer serves single-input models; got "
+                             f"inputs {sorted(session.input_spec)}")
+        self.session = session
+        self.policy = policy or DynamicBatchPolicy()
+        fixed = getattr(self.policy, "fixed_bucket", None)
+        if (fixed is not None and session.frozen
+                and fixed not in session.batch_sizes):
+            raise ValueError(
+                f"fixed_bucket={fixed} is not a specialized batch size of "
+                f"this frozen session (has {session.batch_sizes})")
+        self.max_queue = max_queue
+        self.stats = ServingStats()
+        self._clock = clock
+        self._pending: Deque[Request] = collections.deque()
+        self._cond = threading.Condition()
+        self._draining = False
+        self._closed = False
+        self._worker: Optional[threading.Thread] = None
+        if autostart:
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            daemon=True,
+                                            name="neocpu-serving")
+            self._worker.start()
+
+    # -- capacity ------------------------------------------------------------
+    def _cap(self) -> int:
+        """Max rows one batch may pack: the policy's max_batch, clamped to
+        the pinned bucket (if any) and to the largest executable bucket
+        when the session cannot grow."""
+        cap = self.policy.max_batch
+        fixed = getattr(self.policy, "fixed_bucket", None)
+        if fixed is not None:
+            cap = min(cap, fixed)
+        if self.session.frozen:
+            cap = min(cap, max(self.session.batch_sizes))
+        return cap
+
+    # -- client side ---------------------------------------------------------
+    def submit(self, x, deadline_ms: Optional[float] = None) -> Future:
+        """Enqueue one request (leading dim = rows).  Raises
+        :class:`QueueFullError` at capacity, :class:`ServerClosedError`
+        after close/drain, ValueError for an unpackable request."""
+        x = jnp.asarray(x)
+        (spec,) = self.session.input_spec.values()
+        if x.ndim != len(spec):
+            raise ValueError(f"expected a rank-{len(spec)} batch of inputs "
+                             f"{tuple(spec[1:])}, got shape {tuple(x.shape)}")
+        rows = int(x.shape[0])
+        if rows < 1:
+            raise ValueError("empty request")
+        if rows > self._cap():
+            raise ValueError(
+                f"request of {rows} rows exceeds the packable maximum "
+                f"{self._cap()} (policy max_batch clamped to the largest "
+                "specialized bucket of a frozen session); split it")
+        fut: Future = Future()
+        now = self._clock()
+        deadline = None if deadline_ms is None else now + deadline_ms / 1e3
+        with self._cond:
+            if self._closed or self._draining:
+                raise ServerClosedError("server is closed to new requests")
+            if len(self._pending) >= self.max_queue:
+                self.stats.n_rejected_full += 1
+                raise QueueFullError(
+                    f"request queue at capacity ({self.max_queue}); retry "
+                    "later or raise max_queue")
+            self._pending.append(Request(x, rows, fut, now, deadline))
+            self.stats.n_submitted += 1
+            self._cond.notify_all()
+        return fut
+
+    def predict(self, x, deadline_ms: Optional[float] = None,
+                timeout: Optional[float] = None):
+        """Blocking convenience: submit + wait."""
+        return self.submit(x, deadline_ms=deadline_ms).result(timeout)
+
+    # -- scheduling core -----------------------------------------------------
+    @staticmethod
+    def _resolve(fut: Future, value=None, exc: Optional[BaseException] = None
+                 ) -> bool:
+        """Resolve a client future, tolerating client-side cancel():
+        returns False (and sets nothing) when the client cancelled the
+        request while it was queued — a cancelled future must never kill
+        the worker thread or poison its co-batched neighbors."""
+        if not fut.set_running_or_notify_cancel():
+            return False
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(value)
+        return True
+
+    def _expire_locked(self, now: float) -> None:
+        """Fail queued requests whose deadline passed (checked whenever a
+        batch could form — expired work is never executed late) and drop
+        client-cancelled ones."""
+        keep: Deque[Request] = collections.deque()
+        for r in self._pending:
+            if r.future.cancelled():
+                continue
+            if r.deadline is not None and now >= r.deadline:
+                if self._resolve(r.future, exc=DeadlineExceededError(
+                        f"queued for {(now - r.t_submit) * 1e3:.1f} ms, "
+                        "past its deadline")):
+                    self.stats.n_deadline_expired += 1
+            else:
+                keep.append(r)
+        self._pending = keep
+
+    def _form_locked(self, now: float) -> Optional[List[Request]]:
+        if not self._pending:
+            return None
+        cap = self._cap()
+        # readiness belongs to the policy, but a FIFO prefix that already
+        # fills the *executable* cap (which may be tighter than the
+        # policy's max_batch on a frozen session) must flush immediately
+        # rather than idle on the max_wait timer
+        total = 0
+        filled = False
+        for r in self._pending:
+            total += r.rows
+            if total >= cap:
+                filled = True
+                break
+        if not (self._draining or filled
+                or self.policy.ready(self._pending, now)):
+            return None
+        n = self.policy.take(self._pending, cap)
+        if n <= 0:
+            return None
+        return [self._pending.popleft() for _ in range(n)]
+
+    def _wait_timeout_locked(self, now: float) -> Optional[float]:
+        """Bound the worker's wait by the policy's hint *and* the earliest
+        pending deadline — deadline expiry is the server's promise, so it
+        must not depend on a custom policy implementing next_event."""
+        t = self.policy.next_event(self._pending, now)
+        deadlines = [r.deadline for r in self._pending
+                     if r.deadline is not None]
+        if deadlines:
+            d = max(0.0, min(deadlines) - now)
+            t = d if t is None else min(t, d)
+        return t
+
+    def _execute(self, batch: List[Request]) -> None:
+        rows = sum(r.rows for r in batch)
+        try:
+            xs = batch[0].x if len(batch) == 1 else \
+                jnp.concatenate([r.x for r in batch])
+            bucket = getattr(self.policy, "fixed_bucket", None)
+            if bucket is None:
+                bucket = nearest_bucket(rows, self.session.batch_sizes)
+            if bucket is None:
+                # on-demand re-specialization (session lock serializes the
+                # planner); _cap() already rejected this for frozen sessions
+                bucket = rows
+            m = self.session.specialize(bucket)
+            y = m.predict(pad_rows(xs, bucket))
+            y = jax.block_until_ready(y)
+            y = _slice_rows(y, 0, rows)
+        except BaseException as e:      # noqa: BLE001 — fail the futures
+            n_failed = sum(self._resolve(r.future, exc=e) for r in batch)
+            with self._cond:
+                self.stats.n_failed += n_failed
+            return
+        done = self._clock()
+        off = 0
+        n_ok = 0
+        lats = []
+        for r in batch:
+            if self._resolve(r.future, _slice_rows(y, off, off + r.rows)):
+                n_ok += 1
+                lats.append(done - r.t_submit)
+            off += r.rows
+        with self._cond:
+            self.stats.n_batches += 1
+            self.stats.rows_executed += rows
+            self.stats.rows_padded += bucket - rows
+            self.stats.batch_rows.append(rows)
+            self.stats.n_completed += n_ok
+            self.stats.latencies_s.extend(lats)
+
+    def step(self) -> bool:
+        """Expire deadlines and execute at most one ready batch *now*
+        (manual pump — deterministic tests, synchronous drivers).  Returns
+        True iff a batch ran."""
+        with self._cond:
+            now = self._clock()
+            self._expire_locked(now)
+            batch = self._form_locked(now)
+        if batch is None:
+            return False
+        try:
+            self._execute(batch)
+        finally:
+            with self._cond:
+                self._cond.notify_all()
+        return True
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    now = self._clock()
+                    self._expire_locked(now)
+                    if self._closed or (self._draining
+                                        and not self._pending):
+                        return
+                    batch = self._form_locked(now)
+                    if batch is not None:
+                        break
+                    self._cond.wait(self._wait_timeout_locked(now))
+            try:
+                self._execute(batch)
+            finally:
+                with self._cond:
+                    self._cond.notify_all()
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self, drain: bool = True, timeout: Optional[float] = None
+              ) -> None:
+        """Stop accepting requests.  ``drain=True`` completes everything
+        already queued or in flight first; ``drain=False`` fails queued
+        requests with :class:`ServerClosedError` immediately."""
+        with self._cond:
+            if self._closed:
+                return
+            self._draining = True
+            if not drain:
+                while self._pending:
+                    r = self._pending.popleft()
+                    self._resolve(r.future, exc=ServerClosedError(
+                        "server closed before execution"))
+                self._closed = True
+            self._cond.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout)
+        elif drain:
+            while self.step():          # manual-pump drain (no worker)
+                pass
+        with self._cond:
+            self._closed = True
+            while self._pending:        # whatever a dead worker left behind
+                r = self._pending.popleft()
+                self._resolve(r.future, exc=ServerClosedError(
+                    "server closed before execution"))
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    def __enter__(self) -> "AsyncServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))

@@ -22,21 +22,35 @@ that proves it).
     # ... fresh process ...
     y2 = InferenceSession.load("artifact/").predict(x)   # bit-identical
 
-Artifact layout (version 1):
+Artifact layout (version 2):
 
     <path>/manifest.json   format, version, input spec, tuning,
-                           transform_bw, per-batch plan JSON, schedule-db
-                           blob, pipeline/report metadata
+                           transform_bw, per-batch plan JSON under
+                           "specializations", schedule-db blob,
+                           pipeline/report metadata, and an optional
+                           "source" section (the *logical* graph) that —
+                           together with <path>/source/ — lets a loaded
+                           session legally specialize unseen batch sizes
     <path>/weights/        CheckpointStore; step_<batch>/ holds the bound
                            (physical-layout) params of one specialization
+    <path>/source/         CheckpointStore (one step): the raw logical
+                           params, present iff manifest["source"] is
+
+Older artifacts load through a **migration hook chain**: ``_MIGRATIONS``
+maps each historical version to a function upgrading a manifest one
+version forward, applied in sequence until the current version is reached
+(v1 -> v2 renames "batches" to "specializations" and marks the source as
+absent).  A *future* version — or a manifest that is not valid JSON — is
+still rejected cleanly.  ``register_migration`` lets later builds extend
+the chain.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import shutil
+import threading
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -44,14 +58,39 @@ from repro.checkpoint.store import CheckpointStore
 from repro.core.graph import Graph
 from repro.core.layout import Layout, LayoutKind
 from repro.core.local_search import ScheduleDatabase
-from repro.core.pipeline import Pipeline, Plan
+from repro.core.pipeline import MODES, Pipeline, Plan
 from repro.core.schedule import ConvSchedule
 from repro.core.transform_elim import PlannedGraph
 from repro.engine.executor import CompiledModel, compile_model
 from repro.nn.init import Params, init_params
 
 ARTIFACT_FORMAT = "neocpu-inference-session"
-ARTIFACT_VERSION = 1
+ARTIFACT_VERSION = 2
+
+# version -> hook upgrading a manifest from exactly that version to the
+# next one; load() walks the chain until ARTIFACT_VERSION is reached
+_MIGRATIONS: Dict[int, Callable[[Dict[str, Any], Path], Dict[str, Any]]] = {}
+
+
+def register_migration(from_version: int) -> Callable:
+    """Decorator: install a manifest migration hook for ``from_version``.
+    The hook receives (manifest, artifact_path), mutates/returns the
+    manifest in the *next* version's shape, and must bump "version"."""
+    def deco(fn: Callable[[Dict[str, Any], Path], Dict[str, Any]]):
+        _MIGRATIONS[from_version] = fn
+        return fn
+    return deco
+
+
+@register_migration(1)
+def _migrate_v1_to_v2(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
+    """v1 -> v2: per-batch plans moved from "batches" to "specializations";
+    v1 never packed the logical graph + raw weights, so "source" is absent
+    (the loaded session stays frozen, exactly as v1 sessions were)."""
+    manifest["specializations"] = manifest.pop("batches")
+    manifest["source"] = None
+    manifest["version"] = 2
+    return manifest
 
 
 # ---------------------------------------------------------------------------
@@ -154,9 +193,17 @@ def _params_from_flat(leaves: Dict[str, Any]) -> Params:
 class InferenceSession:
     """One compiled model: plans + bound weights, specialized per batch
     size.  Create with :func:`compile`; persist with :meth:`save` /
-    :meth:`load`.  Sessions loaded from an artifact are *frozen*: they
-    execute their saved specializations but cannot re-plan new batch sizes
-    (the logical graph and raw weights are not part of the artifact)."""
+    :meth:`load`.  Sessions loaded from an artifact *without* a packed
+    source are *frozen*: they execute their saved specializations but
+    cannot re-plan new batch sizes.  Artifacts saved with
+    ``include_source=True`` (the default when the session has its graph)
+    also pack the logical graph + raw weights, so the loaded session can
+    legally specialize unseen batch sizes — with zero schedule searches
+    when the artifact's database already holds those workloads.
+
+    ``specialize`` is thread-safe: concurrent requests for the same new
+    batch size compile it exactly once (the serving driver's workers and
+    user threads share one session)."""
 
     def __init__(self, *, graph: Optional[Graph],
                  base_shapes: Dict[str, Tuple[int, ...]],
@@ -182,6 +229,10 @@ class InferenceSession:
         self.dispatch = dispatch
         self.model_name = model_name
         self._specialized: Dict[int, CompiledModel] = {}
+        # serializes planning/binding: two threads racing on the same new
+        # batch size must not double-compile (and the schedule search /
+        # executor must never run concurrently with itself)
+        self._lock = threading.RLock()
 
     # -- introspection -------------------------------------------------------
     @property
@@ -206,27 +257,37 @@ class InferenceSession:
 
     def specialize(self, batch: int) -> CompiledModel:
         """The executable for one batch size, planning+binding on first
-        use (per-batch-size shape specialization)."""
-        m = self._specialized.get(batch)
+        use (per-batch-size shape specialization).  Thread-safe:
+        double-checked under the session lock, so concurrent callers of an
+        unseen batch size plan+compile it exactly once."""
+        m = self._specialized.get(batch)     # lock-free fast path
         if m is not None:
             return m
-        if self.frozen:
-            raise RuntimeError(
-                f"session loaded from an artifact has no batch-{batch} "
-                f"specialization (saved: {self.batch_sizes}) and no source "
-                "graph to re-plan; save the session with this batch size")
-        plan = self.pipeline.run(
-            self._graph, self._shapes_for(batch), db=self.db,
-            tuning=self.tuning, transform_bw=self.transform_bw,
-            search_budget=self.search_budget)
-        if plan.report is not None and plan.report.transform_bw is not None:
-            # calibrated once (measured tuning); reused by later
-            # specializations and cached in the saved artifact
-            self.transform_bw = plan.report.transform_bw
-        m = compile_model(plan, self._params, use_pallas=self.use_pallas,
-                          interpret=self.interpret, dispatch=self.dispatch)
-        self._specialized[batch] = m
-        return m
+        with self._lock:
+            m = self._specialized.get(batch)
+            if m is not None:                # another thread won the race
+                return m
+            if self.frozen:
+                raise RuntimeError(
+                    f"session loaded from an artifact has no batch-{batch} "
+                    f"specialization (saved: {self.batch_sizes}) and no "
+                    "source graph to re-plan; save the artifact with this "
+                    "batch size or with include_source=True")
+            plan = self.pipeline.run(
+                self._graph, self._shapes_for(batch), db=self.db,
+                tuning=self.tuning, transform_bw=self.transform_bw,
+                search_budget=self.search_budget)
+            if (plan.report is not None
+                    and plan.report.transform_bw is not None):
+                # calibrated once (measured tuning); reused by later
+                # specializations and cached in the saved artifact
+                self.transform_bw = plan.report.transform_bw
+            m = compile_model(plan, self._params,
+                              use_pallas=self.use_pallas,
+                              interpret=self.interpret,
+                              dispatch=self.dispatch)
+            self._specialized[batch] = m
+            return m
 
     # -- execution -----------------------------------------------------------
     def __call__(self, inputs: Dict[str, jnp.ndarray]):
@@ -239,14 +300,33 @@ class InferenceSession:
         return self.specialize(int(x.shape[0])).predict(x)
 
     # -- persistence ---------------------------------------------------------
-    def save(self, path: Union[str, Path]) -> Path:
+    def save(self, path: Union[str, Path],
+             include_source: Optional[bool] = None) -> Path:
         """Write the versioned artifact: every current specialization's
         plan + pre-transformed weights, the schedule database, and the
-        calibrated transform bandwidth."""
+        calibrated transform bandwidth.
+
+        ``include_source`` additionally packs the *logical* graph and raw
+        weights so the loaded session can specialize unseen batch sizes
+        (default: pack whenever the session has them; a frozen session
+        saved again has nothing to pack)."""
+        if include_source is None:
+            include_source = (self._graph is not None
+                              and self._params is not None)
+        if include_source and (self._graph is None or self._params is None):
+            raise RuntimeError("include_source=True but this session has "
+                               "no logical graph/raw weights (loaded from "
+                               "a sourceless artifact)")
+        # under the session lock: a serving worker specializing a new
+        # batch size mid-save must not change the dict between the weight
+        # loop and the manifest (or corrupt either iteration)
+        with self._lock:
+            return self._save_locked(Path(path), include_source)
+
+    def _save_locked(self, path: Path, include_source: bool) -> Path:
         if not self._specialized:
             raise RuntimeError("nothing to save: session has no "
                                "specializations (call predict/specialize)")
-        path = Path(path)
         path.mkdir(parents=True, exist_ok=True)
         store = CheckpointStore(path / "weights")
         for batch, m in self._specialized.items():
@@ -255,7 +335,26 @@ class InferenceSession:
         for stale in set(store.steps()) - set(self._specialized):
             # re-saving into an existing artifact must not ship dead
             # weight copies for batch sizes the manifest no longer lists
-            shutil.rmtree(store.dir / f"step_{stale:06d}")
+            store.delete(stale)
+        source = None
+        if not include_source and (path / "source").exists():
+            # same hygiene for the raw weights: a re-save that drops the
+            # source must not leave the previous save's copy behind
+            import shutil
+            shutil.rmtree(path / "source")
+        if include_source:
+            src_store = CheckpointStore(path / "source")
+            src_store.save(step=0, tree=_params_to_flat_ok(self._params),
+                           meta={"kind": "logical-params"})
+            source = {
+                "graph": _graph_to_json(self._graph),
+                # only presets reconstruct exactly; a custom pipeline's
+                # loaded session re-plans with the default preset
+                "pipeline": (self.pipeline.name
+                             if self.pipeline
+                             and self.pipeline.name in MODES else None),
+                "search_budget": list(self.search_budget),
+            }
         manifest = {
             "format": ARTIFACT_FORMAT,
             "version": ARTIFACT_VERSION,
@@ -267,8 +366,9 @@ class InferenceSession:
             "use_pallas": self.use_pallas,
             "interpret": self.interpret,
             "dispatch": self.dispatch,
-            "batches": {str(b): _plan_to_json(m.plan)
-                        for b, m in self._specialized.items()},
+            "specializations": {str(b): _plan_to_json(m.plan)
+                                for b, m in self._specialized.items()},
+            "source": source,
             # measured winners only: analytical rankings are re-derivable
             # and would bloat the manifest by megabytes per workload set
             "db": self.db.to_blob(measured_only=True),
@@ -284,33 +384,76 @@ class InferenceSession:
     @classmethod
     def load(cls, path: Union[str, Path], *,
              dispatch: Optional[str] = None) -> "InferenceSession":
-        """Reconstruct a frozen session from :meth:`save` output.  No
-        planning, no schedule search, no weight transformation happens —
-        the plans and physical-layout weights come straight off disk."""
+        """Reconstruct a session from :meth:`save` output.  No planning,
+        no schedule search, no weight transformation happens — the plans
+        and physical-layout weights come straight off disk.  Artifacts of
+        older versions are upgraded through the migration hook chain;
+        future versions are rejected.  If the artifact packs its source
+        (v2 ``include_source``), the loaded session is *not* frozen and
+        may specialize unseen batch sizes on demand."""
         path = Path(path)
-        manifest = json.loads((path / "manifest.json").read_text())
-        if manifest.get("format") != ARTIFACT_FORMAT:
+        try:
+            manifest = json.loads((path / "manifest.json").read_text())
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"{path}/manifest.json is corrupt (not valid JSON): {e}"
+            ) from e
+        if (not isinstance(manifest, dict)
+                or manifest.get("format") != ARTIFACT_FORMAT):
             raise ValueError(f"{path} is not a {ARTIFACT_FORMAT} artifact")
         version = manifest.get("version")
-        if version != ARTIFACT_VERSION:
+        if not isinstance(version, int) or version > ARTIFACT_VERSION:
             raise ValueError(
-                f"artifact version {version} is not supported by this "
-                f"build (expected {ARTIFACT_VERSION}); re-save the session "
-                "with a matching version")
+                f"artifact version {version!r} is newer than this build "
+                f"supports ({ARTIFACT_VERSION}); re-save the session with "
+                "a matching version")
+        while version < ARTIFACT_VERSION:
+            hook = _MIGRATIONS.get(version)
+            if hook is None:
+                raise ValueError(
+                    f"artifact version {version} has no migration hook to "
+                    f"{version + 1}; re-save the session with this build")
+            try:
+                manifest = hook(manifest, path)
+            except (KeyError, TypeError, AttributeError) as e:
+                # a structurally-broken old manifest must reject as
+                # cleanly as a corrupt current one
+                raise ValueError(
+                    f"artifact manifest is not a valid version {version}: "
+                    f"{e!r}") from e
+            if manifest.get("version") == version:   # buggy hook guard
+                raise ValueError(
+                    f"migration hook for version {version} did not "
+                    "advance the manifest version")
+            version = manifest["version"]
         db = ScheduleDatabase()
         db.load_blob(manifest.get("db", {}))
-        sess = cls(graph=None,
+        source = manifest.get("source")
+        graph = params = pipeline = None
+        if source is not None:
+            graph = _graph_from_json(source["graph"])
+            leaves, _, _ = CheckpointStore(path / "source").restore_flat(
+                step=0)
+            params = _params_from_flat(leaves)
+            pipeline = Pipeline.preset(source.get("pipeline") or "fusion")
+        sess = cls(graph=graph,
                    base_shapes={k: tuple(v) for k, v in
                                 manifest["input_spec"].items()},
-                   params=None, pipeline=None, db=db,
+                   params=params, pipeline=pipeline, db=db,
                    tuning=manifest["tuning"],
                    transform_bw=manifest.get("transform_bw"),
+                   search_budget=tuple(
+                       (source or {}).get("search_budget", (6, 2, 3))),
                    use_pallas=manifest.get("use_pallas", False),
                    interpret=manifest.get("interpret", True),
                    dispatch=dispatch or manifest.get("dispatch", "whole"),
                    model_name=manifest.get("model"))
         store = CheckpointStore(path / "weights")
-        for bstr, plan_js in manifest["batches"].items():
+        specs = manifest.get("specializations")
+        if not isinstance(specs, dict):
+            raise ValueError(f"{path} manifest has no specializations "
+                             "table (corrupt artifact)")
+        for bstr, plan_js in specs.items():
             batch = int(bstr)
             leaves, _, _ = store.restore_flat(step=batch)
             sess._specialized[batch] = CompiledModel(

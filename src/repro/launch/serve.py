@@ -30,11 +30,18 @@ from repro.configs import ARCHS, reduced as make_reduced
 from repro.models.lm import model
 
 
-def serve_artifact(path: str, n_requests: int):
-    """Cold-start CNN serving: load the compiled session artifact and serve
-    a stream of single-image requests, reporting load time and latency."""
+def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
+                   max_wait_ms: float = 2.0, max_queue: int = 64,
+                   deadline_ms: float = None):
+    """Cold-start CNN serving through the async dynamic-batching driver:
+    load the compiled session artifact, pump a stream of single-image
+    requests through a bounded queue (client-side backpressure on
+    ``QueueFullError``), and drain gracefully on shutdown.  The driver
+    packs requests into the artifact's specialized batch sizes, so the
+    whole run stays at zero schedule searches."""
     from repro.core.local_search import search_calls
-    from repro.engine import InferenceSession
+    from repro.engine import (AsyncServer, DynamicBatchPolicy,
+                              InferenceSession, QueueFullError)
 
     if n_requests < 1:
         raise ValueError(f"--requests must be >= 1, got {n_requests}")
@@ -42,26 +49,54 @@ def serve_artifact(path: str, n_requests: int):
     t0 = time.perf_counter()
     sess = InferenceSession.load(path)
     t_load = time.perf_counter() - t0
-    batch = sess.batch_sizes[0]
     (name,) = sess.input_spec
-    shape = (batch,) + sess.input_spec[name][1:]
+    shape = (1,) + sess.input_spec[name][1:]
     rng = np.random.default_rng(0)
-    lat = []
-    out = None
-    for _ in range(n_requests):
-        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(sess.predict(x))
-        lat.append(time.perf_counter() - t0)
+    xs = [jnp.asarray(rng.normal(size=shape).astype(np.float32))
+          for _ in range(n_requests)]
+    for b in sess.batch_sizes:       # server startup: compile every bucket
+        jax.block_until_ready(sess.specialize(b).predict(
+            jnp.zeros((b,) + shape[1:], jnp.float32)))
+
+    policy = DynamicBatchPolicy(max_batch=max_batch,
+                                max_wait_ms=max_wait_ms)
+    server = AsyncServer(sess, policy, max_queue=max_queue)
+    t_serve0 = time.perf_counter()
+    futures = []
+    n_retries = 0
+    try:
+        for x in xs:
+            while True:
+                try:
+                    futures.append(server.submit(x,
+                                                 deadline_ms=deadline_ms))
+                    break
+                except QueueFullError:
+                    # backpressure: wait for the newest outstanding result
+                    # (FIFO — once it lands the queue has drained) instead
+                    # of growing the queue without bound
+                    n_retries += 1
+                    futures[-1].result()
+        out = None
+        for f in futures:
+            out = f.result()
+    finally:
+        server.close(drain=True)                  # graceful shutdown
+    t_serve = time.perf_counter() - t_serve0
     assert search_calls() == n_searches, \
         "artifact serving must not re-run any schedule search"
-    lat_ms = np.asarray(lat[1:] or lat) * 1e3   # drop compile-carrying call
+    st = server.stats
     print(f"artifact={path} model={sess.model_name or '?'} "
-          f"load={t_load * 1e3:.0f} ms (zero search, zero re-binding)")
-    print(f"served {n_requests} requests: "
-          f"p50={np.percentile(lat_ms, 50):.1f} "
-          f"p90={np.percentile(lat_ms, 90):.1f} "
-          f"p99={np.percentile(lat_ms, 99):.1f} ms")
+          f"load={t_load * 1e3:.0f} ms (zero search, zero re-binding) "
+          f"buckets={sess.batch_sizes}")
+    print(f"served {st.n_completed}/{n_requests} requests in "
+          f"{st.n_batches} batches "
+          f"(mean {st.rows_executed / max(st.n_batches, 1):.1f} rows, "
+          f"{st.rows_padded} padded rows, {n_retries} backpressure waits): "
+          f"{n_requests / t_serve:.1f} req/s  "
+          f"p50={st.percentile_ms(50):.1f} "
+          f"p90={st.percentile_ms(90):.1f} "
+          f"p99={st.percentile_ms(99):.1f} ms")
     return out
 
 
@@ -73,13 +108,26 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--artifact", default=None,
                     help="serve a saved CNN InferenceSession artifact "
-                         "(load->predict, no search) instead of the LM loop")
+                         "through the async dynamic-batching driver "
+                         "(zero search) instead of the LM loop")
     ap.add_argument("--requests", type=int, default=20,
                     help="request count for --artifact serving")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="driver packing limit (rows per executed batch)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="flush a partial batch after this queue age")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="bounded queue capacity (backpressure beyond it)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; queued past it fails typed")
     args = ap.parse_args(argv)
 
     if args.artifact:
-        return serve_artifact(args.artifact, args.requests)
+        return serve_artifact(args.artifact, args.requests,
+                              max_batch=args.max_batch,
+                              max_wait_ms=args.max_wait_ms,
+                              max_queue=args.max_queue,
+                              deadline_ms=args.deadline_ms)
 
     cfg = make_reduced(ARCHS[args.arch])
     params = model.init_params(cfg, jax.random.PRNGKey(0))

@@ -145,7 +145,8 @@ def test_artifact_roundtrip_bit_exact_and_searchless(tmp_path, rng):
     y1 = np.asarray(loaded.predict(x))
     assert local_search.search_calls() == n_before, \
         "load->predict must not run any schedule search"
-    assert loaded.frozen
+    # v2 default packs the source (graph + raw weights): not frozen
+    assert not loaded.frozen
     assert y0.shape == y1.shape and y0.tobytes() == y1.tobytes(), \
         f"artifact round-trip drift: {np.abs(y0 - y1).max()}"
     # plans round-tripped structurally, not just numerically
@@ -192,10 +193,148 @@ def test_frozen_session_rejects_unknown_batch(tmp_path, rng):
     sess = compile_session(g, shapes)
     sess.predict(jnp.asarray(rng.normal(size=shapes["in"])
                              .astype(np.float32)))
-    sess.save(tmp_path / "art")
+    sess.save(tmp_path / "art", include_source=False)
     loaded = InferenceSession.load(tmp_path / "art")
+    assert loaded.frozen
     with pytest.raises(RuntimeError, match="batch-4"):
         loaded.predict(jnp.zeros((4,) + shapes["in"][1:], jnp.float32))
+    # and a frozen session cannot promise a source it does not have
+    with pytest.raises(RuntimeError, match="include_source"):
+        loaded.save(tmp_path / "art2", include_source=True)
+
+
+# ---------------------------------------------------------------------------
+# Artifact v1 -> v2 migration + source-packed re-specialization (PR 5)
+# ---------------------------------------------------------------------------
+
+def _downgrade_to_v1(art):
+    """Rewrite a saved v2 artifact into the v1 on-disk format (per-batch
+    plans under "batches", no source section) — the fixture the migration
+    chain upgrades."""
+    import shutil
+
+    mf = art / "manifest.json"
+    blob = json.loads(mf.read_text())
+    blob["batches"] = blob.pop("specializations")
+    blob.pop("source", None)
+    blob["version"] = 1
+    mf.write_text(json.dumps(blob))
+    if (art / "source").exists():
+        shutil.rmtree(art / "source")
+
+
+def test_artifact_v1_migration_roundtrip(tmp_path, rng):
+    """A v1 manifest loads through the v1->v2 migration hook chain and
+    predicts bit-identically; the migrated session is frozen exactly as
+    v1 sessions were (v1 never packed a source)."""
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    y0 = np.asarray(sess.predict(x))
+    sess.save(tmp_path / "art")
+    _downgrade_to_v1(tmp_path / "art")
+
+    n_before = local_search.search_calls()
+    loaded = InferenceSession.load(tmp_path / "art")
+    y1 = np.asarray(loaded.predict(x))
+    assert local_search.search_calls() == n_before
+    assert loaded.frozen
+    assert y0.tobytes() == y1.tobytes(), "v1 migration drifted the output"
+
+
+def test_artifact_corrupt_and_future_versions_rejected(tmp_path, rng):
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.predict(jnp.asarray(rng.normal(size=shapes["in"])
+                             .astype(np.float32)))
+    sess.save(tmp_path / "art")
+    mf = tmp_path / "art" / "manifest.json"
+    blob = json.loads(mf.read_text())
+    # unknown *future* version: no hook chain can reach it
+    blob["version"] = 99
+    mf.write_text(json.dumps(blob))
+    with pytest.raises(ValueError, match="newer"):
+        InferenceSession.load(tmp_path / "art")
+    # non-integer version is not silently migrated either
+    blob["version"] = "2.0"
+    mf.write_text(json.dumps(blob))
+    with pytest.raises(ValueError, match="version"):
+        InferenceSession.load(tmp_path / "art")
+    # corrupted manifest (truncated write): clean ValueError, no traceback
+    # into json internals at the call site
+    mf.write_text('{"format": "neocpu-inference-sess')
+    with pytest.raises(ValueError, match="corrupt"):
+        InferenceSession.load(tmp_path / "art")
+    # structurally-broken v1 (claims version 1, missing its "batches"
+    # table): the migration chain rejects cleanly, not with a KeyError
+    mf.write_text(json.dumps({"format": "neocpu-inference-session",
+                              "version": 1}))
+    with pytest.raises(ValueError, match="valid version 1"):
+        InferenceSession.load(tmp_path / "art")
+
+
+def test_resave_without_source_drops_stale_source_dir(tmp_path, rng):
+    """Re-saving an artifact with include_source=False must not ship the
+    previous save's raw-weight copy."""
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.predict(jnp.asarray(rng.normal(size=shapes["in"])
+                             .astype(np.float32)))
+    sess.save(tmp_path / "art")                      # packs source
+    assert (tmp_path / "art" / "source").exists()
+    sess.save(tmp_path / "art", include_source=False)
+    assert not (tmp_path / "art" / "source").exists()
+    assert InferenceSession.load(tmp_path / "art").frozen
+
+
+def test_loaded_source_respecializes_zero_search_when_db_holds(tmp_path,
+                                                               rng):
+    """A graph+weights (source-packed) artifact re-specializes an *unseen*
+    batch size with zero schedule searches when the artifact's database
+    already holds those workloads — and reproduces the original session's
+    output for that batch bit-for-bit."""
+    from repro.core.local_search import LocalSearchResult
+
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    x3 = jnp.asarray(rng.normal(size=(3,) + shapes["in"][1:])
+                     .astype(np.float32))
+    y3 = np.asarray(sess.predict(x3))          # db now holds batch-3 too
+    # mark entries measured so the artifact's measured-only db keeps them
+    for key, res in list(sess.db._mem.items()):
+        sess.db._mem[key] = LocalSearchResult(res.workload, res.ranked,
+                                              measured=True,
+                                              search_budget=(99, 99))
+    del sess._specialized[3]                   # ship only the batch-1 spec
+    sess.save(tmp_path / "art")                # include_source by default
+
+    loaded = InferenceSession.load(tmp_path / "art")
+    assert not loaded.frozen
+    assert loaded.batch_sizes == [1]
+    n_before = local_search.search_calls()
+    y3b = np.asarray(loaded.predict(x3))       # re-specializes batch 3
+    assert local_search.search_calls() == n_before, \
+        "db-backed re-specialization must run zero schedule searches"
+    assert loaded.batch_sizes == [1, 3]
+    assert y3.tobytes() == y3b.tobytes(), \
+        "re-specialized plan drifted from the original session"
+
+
+def test_loaded_source_missing_db_entries_still_respecializes(tmp_path,
+                                                              rng):
+    """Without matching db entries the re-specialization still works — it
+    just searches (the counter moves), it must never crash."""
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.predict(jnp.asarray(rng.normal(size=shapes["in"])
+                             .astype(np.float32)))
+    sess.save(tmp_path / "art")                # analytical db -> empty blob
+    loaded = InferenceSession.load(tmp_path / "art")
+    n_before = local_search.search_calls()
+    out = loaded.predict(jnp.asarray(
+        rng.normal(size=(2,) + shapes["in"][1:]).astype(np.float32)))
+    assert np.asarray(out).shape[0] == 2
+    assert local_search.search_calls() > n_before
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,362 @@
+"""Deterministic serving-driver suite: packing/deadline scheduling on a
+fake clock (no sleeps), bit-identical packed results, typed backpressure
+errors, graceful drain, and the specialize() double-compile regression.
+
+Kept on its own short-timeout CI lane — a hang here must fail fast, not
+eat the tier-1 wall-clock budget."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.engine import (AsyncServer, DeadlineExceededError,
+                          DynamicBatchPolicy, QueueFullError,
+                          ServerClosedError, compile_model, nearest_bucket,
+                          padded_predict)
+from repro.engine import compile as compile_session
+
+
+def _mini_net():
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=16, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("bn1", "batch_norm", ["c1"])
+    g.add("r1", "relu", ["bn1"])
+    g.add("c2", "conv2d", ["r1"], in_channels=16, out_channels=32, kh=3,
+          kw=3, pad=1)
+    g.add("gap", "global_avg_pool", ["c2"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=10)
+    g.mark_output("fc")
+    return g, {"in": (1, 3, 16, 16)}
+
+
+@pytest.fixture(scope="module")
+def session():
+    """One compiled session with serving buckets {1, 4} shared by the
+    module (compilation dominates; the driver never mutates it beyond the
+    specialization cache)."""
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.specialize(4)
+    return sess
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _x(rng, rows, hw=16):
+    return jnp.asarray(rng.normal(size=(rows, 3, hw, hw))
+                       .astype(np.float32))
+
+
+def _manual_server(session, **kw):
+    clock = FakeClock()
+    policy = kw.pop("policy", DynamicBatchPolicy(max_batch=4,
+                                                 max_wait_ms=10.0))
+    srv = AsyncServer(session, policy, clock=clock, autostart=False, **kw)
+    return srv, clock
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: packed results == sequential serving, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_concurrent_submits_bit_identical_to_sequential(session, rng):
+    xs = [_x(rng, 1) for _ in range(12)]
+    refs = [np.asarray(padded_predict(session, x, bucket=4)) for x in xs]
+
+    policy = DynamicBatchPolicy(max_batch=4, max_wait_ms=5.0,
+                                fixed_bucket=4)
+    with AsyncServer(session, policy, max_queue=64) as srv:
+        futs = [None] * len(xs)
+
+        def client(lo, hi):
+            for i in range(lo, hi):
+                futs[i] = srv.submit(xs[i])
+
+        threads = [threading.Thread(target=client, args=(i * 4, i * 4 + 4))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        got = [np.asarray(f.result(timeout=60)) for f in futs]
+    for g, r in zip(got, refs):
+        assert g.shape == r.shape and g.tobytes() == r.tobytes(), \
+            "packed result drifted from sequential serving"
+    st = srv.stats
+    assert st.n_completed == 12
+    assert st.rows_executed == 12
+    # every executed batch respected max_batch
+    assert all(b <= 4 for b in st.batch_rows)
+
+
+def test_padded_batch_slices_back_per_request(session, rng):
+    """Mixed-size requests packed into one bucket come back with each
+    request's own rows (and match the unpacked reference)."""
+    xa, xb = _x(rng, 3), _x(rng, 1)
+    srv, clock = _manual_server(session)
+    fa, fb = srv.submit(xa), srv.submit(xb)
+    assert srv.step()                       # 4 rows pending == max_batch
+    ya, yb = np.asarray(fa.result(0)), np.asarray(fb.result(0))
+    assert ya.shape[0] == 3 and yb.shape[0] == 1
+    packed = np.asarray(session.specialize(4).predict(
+        jnp.concatenate([xa, xb])))
+    assert ya.tobytes() == packed[:3].tobytes()
+    assert yb.tobytes() == packed[3:4].tobytes()
+    assert srv.stats.rows_padded == 0       # 3+1 filled the bucket exactly
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Packing honors max_batch / max_wait_ms (fake clock, no sleeps)
+# ---------------------------------------------------------------------------
+
+def test_packing_respects_max_batch_and_max_wait(session, rng):
+    srv, clock = _manual_server(session)
+    # under max_batch and under max_wait: nothing runs
+    f1 = srv.submit(_x(rng, 1))
+    f2 = srv.submit(_x(rng, 1))
+    assert not srv.step()
+    assert not f1.done() and not f2.done()
+    # oldest hits max_wait_ms -> partial flush of both
+    clock.advance_ms(10.1)
+    assert srv.step()
+    assert f1.done() and f2.done()
+    assert srv.stats.batch_rows == [2]
+    # a full batch flushes immediately, leftovers wait for their timeout
+    futs = [srv.submit(_x(rng, 1)) for _ in range(5)]
+    assert srv.step()
+    assert srv.stats.batch_rows == [2, 4]
+    assert [f.done() for f in futs] == [True] * 4 + [False]
+    assert not srv.step()                     # 1 pending, clock unchanged
+    clock.advance_ms(10.1)
+    assert srv.step()
+    assert futs[4].done()
+    assert srv.stats.batch_rows == [2, 4, 1]
+    # padded waste accounting: flushed sizes 2, 4, 1 -> buckets 4, 4, 1
+    assert srv.stats.rows_padded == (4 - 2) + 0 + 0
+    srv.close()
+
+
+def test_fifo_order_within_batches(session, rng):
+    """Requests are packed strictly in submission order."""
+    srv, clock = _manual_server(session)
+    xs = [_x(rng, 2) for _ in range(4)]
+    futs = [srv.submit(x) for x in xs]
+    assert srv.step() and srv.step()
+    got = [np.asarray(f.result(0)) for f in futs]
+    refs = [np.asarray(padded_predict(session, x, bucket=4)) for x in xs]
+    for g, r in zip(got, refs):
+        assert g.tobytes() == r.tobytes()
+    assert srv.stats.batch_rows == [4, 4]
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Typed errors: queue-full backpressure, deadlines, oversize, closed
+# ---------------------------------------------------------------------------
+
+def test_queue_full_raises_typed_error(session, rng):
+    srv, clock = _manual_server(session, max_queue=2)
+    srv.submit(_x(rng, 1))
+    srv.submit(_x(rng, 1))
+    with pytest.raises(QueueFullError):
+        srv.submit(_x(rng, 1))
+    assert srv.stats.n_rejected_full == 1
+    srv.close()
+
+
+def test_deadline_exceeded_typed_error(session, rng):
+    srv, clock = _manual_server(session)
+    doomed = srv.submit(_x(rng, 1), deadline_ms=5.0)
+    healthy = srv.submit(_x(rng, 1))
+    clock.advance_ms(6.0)
+    # past its deadline the request fails instead of executing late
+    assert not srv.step()       # only 'healthy' left; max_wait not reached
+    with pytest.raises(DeadlineExceededError):
+        doomed.result(0)
+    clock.advance_ms(5.0)
+    assert srv.step()
+    assert np.asarray(healthy.result(0)).shape[0] == 1
+    assert srv.stats.n_deadline_expired == 1
+    srv.close()
+
+
+def test_oversize_and_malformed_requests_rejected(session, rng):
+    srv, clock = _manual_server(session)
+    with pytest.raises(ValueError, match="rows"):
+        srv.submit(_x(rng, 5))              # > max_batch
+    with pytest.raises(ValueError, match="rank"):
+        srv.submit(jnp.zeros((3, 16, 16), jnp.float32))
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Graceful drain
+# ---------------------------------------------------------------------------
+
+def test_graceful_drain_completes_inflight_rejects_new(session, rng):
+    srv, clock = _manual_server(session)
+    futs = [srv.submit(_x(rng, 1)) for _ in range(3)]
+    srv.close(drain=True)                  # manual pump drains everything
+    assert all(f.done() for f in futs)
+    assert [np.asarray(f.result(0)).shape[0] for f in futs] == [1, 1, 1]
+    with pytest.raises(ServerClosedError):
+        srv.submit(_x(rng, 1))
+    assert srv.closed
+
+
+def test_close_without_drain_fails_pending(session, rng):
+    srv, clock = _manual_server(session)
+    fut = srv.submit(_x(rng, 1))
+    srv.close(drain=False)
+    with pytest.raises(ServerClosedError):
+        fut.result(0)
+
+
+def test_deadline_honored_without_policy_wakeup_hint(session, rng):
+    """Deadlines are the *server's* promise: a custom policy that never
+    becomes ready and gives no next_event hint must not leave a
+    deadlined request blocked forever."""
+    from repro.engine import BatchPolicy
+
+    class Stubborn(BatchPolicy):
+        max_batch = 4
+
+        def ready(self, pending, now):
+            return False
+
+        def take(self, pending, cap):
+            return 1
+
+    srv = AsyncServer(session, Stubborn())
+    fut = srv.submit(_x(rng, 1), deadline_ms=30.0)
+    with pytest.raises(DeadlineExceededError):
+        fut.result(timeout=30)
+    srv.close(drain=False)
+
+
+def test_drain_with_worker_thread(session, rng):
+    """The async (real-thread) path: drain completes queued work."""
+    policy = DynamicBatchPolicy(max_batch=4, max_wait_ms=1.0)
+    srv = AsyncServer(session, policy, max_queue=32)
+    futs = [srv.submit(_x(rng, 1)) for _ in range(6)]
+    srv.close(drain=True, timeout=60)
+    assert all(np.asarray(f.result(0)).shape[0] == 1 for f in futs)
+    with pytest.raises(ServerClosedError):
+        srv.submit(_x(rng, 1))
+
+
+def test_cancelled_future_skipped_not_fatal(session, rng):
+    """A client-cancelled request must neither kill the scheduling loop
+    nor poison the results of co-batched neighbors."""
+    srv, clock = _manual_server(session)
+    doomed = srv.submit(_x(rng, 1))
+    healthy = srv.submit(_x(rng, 1))
+    assert doomed.cancel()                   # queued futures are cancelable
+    clock.advance_ms(10.1)
+    assert srv.step()
+    assert np.asarray(healthy.result(0)).shape[0] == 1
+    assert srv.stats.n_completed == 1
+    # cancelled + deadline-expired: silently dropped, not double-failed
+    gone = srv.submit(_x(rng, 1), deadline_ms=1.0)
+    assert gone.cancel()
+    clock.advance_ms(2.0)
+    assert not srv.step()
+    assert srv.stats.n_deadline_expired == 0
+    srv.close()
+
+
+def test_frozen_cap_flushes_full_bucket_immediately(session, tmp_path,
+                                                    rng):
+    """On a frozen session whose largest bucket is smaller than the
+    policy's max_batch, a prefix that fills the executable cap flushes at
+    once instead of idling on the max_wait timer."""
+    from repro.engine import InferenceSession
+
+    session.save(tmp_path / "art", include_source=False)
+    frozen = InferenceSession.load(tmp_path / "art")
+    assert frozen.frozen and max(frozen.batch_sizes) == 4
+    policy = DynamicBatchPolicy(max_batch=8, max_wait_ms=1000.0)
+    srv, clock = _manual_server(frozen, policy=policy)
+    futs = [srv.submit(_x(rng, 1)) for _ in range(4)]
+    assert srv.step()                        # no clock advance needed
+    assert all(f.done() for f in futs)
+    assert srv.stats.batch_rows == [4]
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Regression: concurrent specialize() must compile once
+# ---------------------------------------------------------------------------
+
+def test_concurrent_specialize_compiles_once(monkeypatch):
+    """Two threads racing on the same unseen batch size plan+compile it
+    exactly once (the session lock); the loser waits and reuses."""
+    import repro.engine.session as session_mod
+
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+
+    calls = []
+    in_run = threading.Event()
+    real_run = type(sess.pipeline).run
+
+    def slow_run(self, *a, **kw):
+        calls.append(threading.get_ident())
+        in_run.set()
+        # widen the race window: the second thread submits while the
+        # first is still planning
+        threading.Event().wait(0.1)
+        return real_run(self, *a, **kw)
+
+    monkeypatch.setattr(type(sess.pipeline), "run", slow_run)
+    results = []
+
+    def worker():
+        results.append(sess.specialize(2))
+
+    t1 = threading.Thread(target=worker)
+    t1.start()
+    assert in_run.wait(10)
+    t2 = threading.Thread(target=worker)
+    t2.start()
+    t1.join()
+    t2.join()
+    assert len(calls) == 1, "double-compiled the same batch size"
+    assert results[0] is results[1]
+    assert sess.batch_sizes == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Bucket selection helpers
+# ---------------------------------------------------------------------------
+
+def test_nearest_bucket_picks_smallest_fit():
+    assert nearest_bucket(3, [1, 4, 8]) == 4
+    assert nearest_bucket(4, [1, 4, 8]) == 4
+    assert nearest_bucket(5, [1, 4, 8]) == 8
+    assert nearest_bucket(9, [1, 4, 8]) is None
+
+
+def test_padded_predict_matches_direct_at_bucket(session, rng):
+    x = _x(rng, 2)
+    y = np.asarray(padded_predict(session, x, bucket=4))
+    direct = np.asarray(session.specialize(4).predict(
+        jnp.concatenate([x, jnp.zeros((2, 3, 16, 16), jnp.float32)])))[:2]
+    assert y.tobytes() == direct.tobytes()
+    with pytest.raises(ValueError, match="bucket"):
+        padded_predict(session, _x(rng, 3), bucket=2)

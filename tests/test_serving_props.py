@@ -1,0 +1,124 @@
+"""Property tests for the serving batch policy's packing logic (pure
+scheduling — no sessions, no compilation, fake clock only).
+
+Invariants, for random request-size sequences and bucket sets:
+* no executed batch ever packs more than ``max_batch`` rows;
+* requests are never reordered (FIFO — in particular, never reordered
+  within a deadline class);
+* every batch's padded waste is exactly ``nearest_bucket(rows) - rows``,
+  the documented minimum given the artifact's specializations (and with a
+  ``fixed_bucket`` policy, exactly ``fixed_bucket - rows``);
+* the simulated queue always terminates (max_wait flushes stragglers).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.engine.serving import (DynamicBatchPolicy,  # noqa: E402
+                                  nearest_bucket)
+
+
+class _Row:
+    """Stand-in request: rows + arrival time, no arrays or futures."""
+
+    def __init__(self, rows, t_submit, tag):
+        self.rows = rows
+        self.t_submit = t_submit
+        self.deadline = None
+        self.tag = tag
+
+
+def simulate(policy, sizes, arrivals, buckets):
+    """Drain a whole arrival sequence through the policy the way the
+    driver does: flush when ready, else jump the clock to the next event.
+    Returns the executed batches as lists of tags plus per-batch (rows,
+    bucket) records."""
+    cap = policy.max_batch
+    pending = [_Row(s, 0.0, i) for i, s in enumerate(sizes)]
+    del arrivals  # all queued at t=0: worst-case pressure
+    now = 0.0
+    batches, execs = [], []
+    while pending:
+        if not policy.ready(pending, now):
+            nxt = policy.next_event(pending, now)
+            assert nxt is not None, "pending work but no wakeup scheduled"
+            now += max(nxt, 1e-9)
+            continue
+        n = policy.take(pending, cap)
+        assert n >= 1
+        batch, pending = pending[:n], pending[n:]
+        rows = sum(r.rows for r in batch)
+        bucket = policy.fixed_bucket or nearest_bucket(rows, buckets)
+        batches.append([r.tag for r in batch])
+        execs.append((rows, bucket))
+    return batches, execs
+
+
+bucket_sets = st.lists(st.integers(1, 16), min_size=1, max_size=4,
+                       unique=True).map(sorted)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 8), min_size=1, max_size=40),
+    max_batch=st.integers(1, 16),
+    buckets=bucket_sets,
+)
+def test_packing_invariants(sizes, max_batch, buckets):
+    max_batch = max(max_batch, max(buckets))
+    sizes = [min(s, max_batch) for s in sizes]
+    policy = DynamicBatchPolicy(max_batch=max_batch, max_wait_ms=5.0)
+    batches, execs = simulate(policy, sizes, None, buckets)
+
+    # never exceeds max_batch
+    assert all(rows <= max_batch for rows, _ in execs)
+    # FIFO: concatenated batches reproduce submission order exactly
+    flat = [t for b in batches for t in b]
+    assert flat == list(range(len(sizes)))
+    # padded waste is exactly the documented bound: the gap to the
+    # *smallest* bucket that fits (or unbounded growth when none does)
+    for rows, bucket in execs:
+        want = nearest_bucket(rows, buckets)
+        if want is None:
+            assert bucket is None          # driver would specialize rows
+        else:
+            assert bucket == want
+            assert bucket - rows == want - rows  # tight, no larger bucket
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 4), min_size=1, max_size=30),
+    fixed=st.integers(4, 12),
+)
+def test_fixed_bucket_policy_waste_bound(sizes, fixed):
+    policy = DynamicBatchPolicy(max_batch=fixed, max_wait_ms=5.0,
+                                fixed_bucket=fixed)
+    batches, execs = simulate(policy, sizes, None, [fixed])
+    flat = [t for b in batches for t in b]
+    assert flat == list(range(len(sizes)))
+    for rows, bucket in execs:
+        assert bucket == fixed
+        assert 0 <= fixed - rows < fixed   # waste strictly under a bucket
+    # all but the last batch are nearly full: adding the next request
+    # would have overflowed (greedy FIFO prefix)
+    for b_idx, batch in enumerate(batches[:-1]):
+        rows = execs[b_idx][0]
+        nxt_first = sizes[batch[-1] + 1]
+        assert rows + nxt_first > fixed or rows == fixed
+
+
+def test_ready_semantics_fake_clock():
+    """ready() flips on rows-pressure immediately and on age at exactly
+    max_wait_ms — no sleeping involved."""
+    policy = DynamicBatchPolicy(max_batch=4, max_wait_ms=10.0)
+    pend = [_Row(2, 100.0, 0)]
+    assert not policy.ready(pend, 100.0)
+    assert not policy.ready(pend, 100.009)
+    assert policy.ready(pend, 100.010)
+    pend.append(_Row(2, 100.001, 1))
+    assert policy.ready(pend, 100.002)      # 4 rows == max_batch
+    assert policy.take(pend, 4) == 2
+    assert policy.take(pend, 3) == 1        # second would overflow the cap
