@@ -19,47 +19,22 @@ per variant.  ``benchmarks/fusion_ablation.py`` and
 ``benchmarks/template_variants.py`` both ride on it, so ``BENCH_fusion.json``
 and ``BENCH_variants.json`` share one methodology.
 
-``maybe_pin`` adds optional CPU pinning (the ``taskset`` analogue via
-``sched_setaffinity``, when the platform has it): set ``BENCH_PIN=1`` to
-restrict the process to one core, so the scheduler stops migrating the
-benchmark across cores mid-phase on multi-tenant hosts.
+CPU pinning lives in ``repro.launch.cpu.maybe_pin`` (one implementation
+shared with the serving workers); ``maybe_pin`` is re-exported here for
+the benchmarks.  Set ``BENCH_PIN=1`` to restrict the process to one core,
+so the scheduler stops migrating the benchmark across cores mid-phase on
+multi-tenant hosts.
 """
 from __future__ import annotations
 
 import dataclasses
-import os
 import statistics
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Sequence
 
 import jax
 
-_pin_done = False
-
-
-def maybe_pin(cpus: Optional[Sequence[int]] = None) -> Optional[Tuple[int, ...]]:
-    """Pin this process to ``cpus`` (default: the lowest currently-allowed
-    core) when pinning is requested and available.  Opt-in via explicit
-    ``cpus`` or ``BENCH_PIN=1``; silently a no-op where the platform lacks
-    ``sched_setaffinity`` (the same syscall ``taskset`` uses) or the
-    container forbids it.  Returns the pinned set, or None."""
-    global _pin_done
-    if cpus is None:
-        if os.environ.get("BENCH_PIN", "") not in ("1", "true"):
-            return None
-        if not hasattr(os, "sched_getaffinity"):
-            return None
-        cpus = [min(os.sched_getaffinity(0))]
-    if not hasattr(os, "sched_setaffinity"):
-        return None
-    try:
-        os.sched_setaffinity(0, set(cpus))
-    except OSError:
-        return None
-    if not _pin_done:
-        print(f"# pinned to CPU(s) {sorted(cpus)}", flush=True)
-        _pin_done = True
-    return tuple(sorted(cpus))
+from repro.launch.cpu import maybe_pin   # noqa: F401 — benchmark re-export
 
 
 def _time_one_ms(fn: Callable) -> float:

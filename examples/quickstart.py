@@ -15,7 +15,11 @@ artifacts, per-batch specialization) see ``examples/serve_planned_cnn.py``
 and ``repro.engine.compile``; for heavy-traffic serving on top of a saved
 artifact (async driver, dynamic batching into the artifact's specialized
 batch sizes, deterministic padded execution) see the "Serving" section of
-docs/api.md and ``repro.engine.AsyncServer``.
+docs/api.md and ``repro.engine.AsyncServer``.  Multi-core hosts can
+replica-shard every specialization over the batch axis with
+``compile(..., devices=n)`` (after
+``repro.launch.cpu.configure_cpu_devices(n)``) or serve through
+``AsyncServer(workers=n)`` replicas — docs/api.md "Multi-core execution".
 """
 import sys
 import time

@@ -28,6 +28,23 @@ Two dispatch modes:
   where graph-level fusion is measured (benchmarks/fusion_ablation.py):
   a fused plan dispatches one kernel where the unfused plan dispatches
   conv + BN + add + ReLU.
+
+Multi-core execution (two orthogonal levers, both riding on forced host
+devices — ``repro.launch.cpu.configure_cpu_devices``):
+
+* ``devices=D`` — **intra-op** data parallelism: the whole-graph forward
+  is wrapped in ``shard_map`` over a 1-D ``("data",)`` mesh of D host
+  devices, splitting the batch axis so every device runs the *same*
+  per-core NCHW[x]c program on a B/D sub-batch (the plan is built at the
+  sub-batch shape; sharding composes *above* the templates).  Parameters
+  are replicated once at bind.  Batches must divide by D.
+* :meth:`CompiledModel.replica` — **inter-op** replicas: the same
+  executable with its parameters committed to another host device, so
+  concurrent serving workers execute on distinct devices (one program
+  copy per device, compiled lazily on first use; numerics are identical
+  — same code, same host — so the serving bit-identical guarantee holds
+  per fixed (bucket, device-count) program regardless of which worker
+  ran the batch).
 """
 from __future__ import annotations
 
@@ -37,6 +54,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.epilogue import EpilogueSpec, PoolSpec
 from repro.core.layout import Layout, NCHW, kernel_to_kcrs_ck
@@ -235,23 +253,48 @@ def _eval_node(node, lay: Layout, schedule, use_pallas: bool,
     raise NotImplementedError(node.op)
 
 
+def _device_mesh(devices: int):
+    """1-D ("data",) mesh over the first ``devices`` host devices, with
+    the actionable error when the process was not configured for them."""
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < devices:
+        raise RuntimeError(
+            f"plan wants {devices} devices but this process has "
+            f"{len(devs)}; call repro.launch.cpu.configure_cpu_devices"
+            f"({devices}) before the first JAX use (or set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices})")
+    return Mesh(np.asarray(devs[:devices]), ("data",))
+
+
 @dataclasses.dataclass
 class CompiledModel:
-    """Callable end-to-end executable for one plan."""
+    """Callable end-to-end executable for one plan.  ``devices > 1``
+    executes batch-sharded over a host-device mesh (see module docs)."""
 
     plan: Plan
     params: Params               # pre-transformed (bind_params output)
     use_pallas: bool = False
     interpret: bool = True
     dispatch: str = "whole"      # "whole" (one jit) | "op" (per-node jit)
+    devices: int = 1             # batch-sharded over this many host devices
 
     def __post_init__(self):
         structure = self.plan.planned
         use_pallas, interpret = self.use_pallas, self.interpret
         topo = structure.graph.topo_order()
+        self._replicas: Dict[int, "_DeviceReplica"] = {}
 
         if self.dispatch not in ("whole", "op"):
             raise ValueError(f"unknown dispatch mode {self.dispatch!r}")
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.devices > 1 and self.dispatch != "whole":
+            raise ValueError("sharded execution (devices > 1) requires "
+                             "whole-graph dispatch; per-node dispatch "
+                             "would materialize every intermediate "
+                             "across the mesh")
         fns = {n.name: functools.partial(
                    _eval_node, n, structure.layouts[n.name],
                    structure.schedules.get(n.name), use_pallas, interpret)
@@ -273,22 +316,89 @@ class CompiledModel:
             outs = [env[o] for o in structure.graph.outputs]
             return outs[0] if len(outs) == 1 else tuple(outs)
 
-        self._forward = jax.jit(forward) if self.dispatch == "whole" \
-            else forward
+        if self.devices > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            mesh = _device_mesh(self.devices)
+            self._mesh = mesh
+            # params replicated (P()), every input/output batch-sharded
+            # (P("data") partitions the leading axis); check_rep off so
+            # Pallas calls inside the forward stay legal per-shard
+            sharded = shard_map(forward, mesh=mesh,
+                                in_specs=(P(), P("data")),
+                                out_specs=P("data"), check_rep=False)
+            self._forward = jax.jit(sharded)
+            # replicate once at bind, not per call
+            self.params = jax.device_put(
+                self.params, NamedSharding(mesh, P()))
+        else:
+            self._mesh = None
+            self._forward = jax.jit(forward) if self.dispatch == "whole" \
+                else forward
+
+    def _check_batch(self, inputs: Dict[str, jnp.ndarray]) -> None:
+        if self.devices <= 1:
+            return
+        for name, v in inputs.items():
+            if v.shape[0] % self.devices:
+                raise ValueError(
+                    f"input {name!r} batch {v.shape[0]} is not divisible "
+                    f"by devices={self.devices}; sharded programs need an "
+                    "equal per-device sub-batch")
 
     def __call__(self, inputs: Dict[str, jnp.ndarray]):
+        self._check_batch(inputs)
         return self._forward(self.params, inputs)
 
     def predict(self, x: jnp.ndarray):
         """Single-input convenience (the common CNN case)."""
+        return self(inputs={self.input_name: x})
+
+    @property
+    def input_name(self) -> str:
         (inp,) = [n.name for n in self.plan.planned.graph.topo_order()
                   if n.op == "input"]
-        return self(inputs={inp: x})
+        return inp
+
+    def replica(self, device=None) -> "CompiledModel | _DeviceReplica":
+        """The same program with parameters resident on ``device`` — the
+        inter-op serving replica (each ``AsyncServer`` worker executes on
+        its own host device).  Shares this model's jitted forward: JAX
+        dispatches on the committed parameters' device, compiling one
+        executable per device lazily.  Sharded models (``devices > 1``)
+        already span the mesh and return ``self``."""
+        if device is None or self.devices > 1:
+            return self
+        key = getattr(device, "id", device)
+        rep = self._replicas.get(key)
+        if rep is None:
+            rep = _DeviceReplica(self, device)
+            self._replicas[key] = rep
+        return rep
+
+
+class _DeviceReplica:
+    """One ``CompiledModel`` executing on a specific host device (shared
+    jitted forward, device-committed parameter copy)."""
+
+    def __init__(self, model: CompiledModel, device) -> None:
+        self.model = model
+        self.device = device
+        self.plan = model.plan
+        self._params = jax.device_put(model.params, device)
+
+    def __call__(self, inputs: Dict[str, jnp.ndarray]):
+        return self.model._forward(self._params, inputs)
+
+    def predict(self, x: jnp.ndarray):
+        return self(inputs={self.model.input_name: x})
 
 
 def compile_model(plan: Plan, params: Params, use_pallas: bool = False,
                   interpret: bool = True, fold_bn: bool = True,
-                  dispatch: str = "whole") -> CompiledModel:
+                  dispatch: str = "whole", devices: int = 1) -> CompiledModel:
     bound = bind_params(plan, params, fold_bn=fold_bn, use_pallas=use_pallas)
     return CompiledModel(plan=plan, params=bound, use_pallas=use_pallas,
-                         interpret=interpret, dispatch=dispatch)
+                         interpret=interpret, dispatch=dispatch,
+                         devices=devices)

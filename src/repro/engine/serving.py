@@ -45,6 +45,22 @@ everything in flight while rejecting new submissions with
         futs = [srv.submit(x) for x in stream]       # concurrent callers
         outs = [f.result() for f in futs]            # == padded_predict(x)
 
+Multi-worker execution (``workers=N``): N worker threads share the one
+bounded FIFO queue; batches still *form* strictly FIFO under the server
+lock, but up to N of them *execute* concurrently — inter-op data
+parallelism across requests.  Each worker executes through a per-device
+**program replica** (``CompiledModel.replica``: the same bucket program
+with parameters committed to host device ``i``), so on a process
+configured with multiple host devices
+(``repro.launch.cpu.configure_cpu_devices``) the workers run on distinct
+devices instead of contending for one.  Results stay bit-identical to
+single-worker serving: every replica is the same fixed-shape program on
+the same host, so a request's result depends only on its (bucket,
+device-count) program and its batch — never on which worker ran it.
+``pin="auto"`` additionally pins each worker thread to its own CPU set
+(``repro.launch.cpu.worker_cpu_sets`` / ``maybe_pin``), keeping the
+scheduler from migrating workers mid-batch.
+
 Tests drive the scheduling deterministically: construct with
 ``autostart=False`` and a fake ``clock``, then pump :meth:`AsyncServer.step`
 by hand — no sleeps anywhere in the suite.
@@ -246,6 +262,7 @@ class ServingStats:
     rows_padded: int = 0           # zero rows added to reach the bucket
     batch_rows: List[int] = dataclasses.field(default_factory=list)
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    worker_batches: dict = dataclasses.field(default_factory=dict)
 
     def percentile_ms(self, q: float) -> float:
         if not self.latencies_s:
@@ -267,6 +284,9 @@ class ServingStats:
             "p50_ms": round(self.percentile_ms(50), 3),
             "p90_ms": round(self.percentile_ms(90), 3),
             "p99_ms": round(self.percentile_ms(99), 3),
+            "worker_batches": {str(k): v
+                               for k, v in sorted(self.worker_batches
+                                                  .items())},
         }
 
 
@@ -279,10 +299,14 @@ class AsyncServer:
 
     ``submit`` is thread-safe and non-blocking: it enqueues and returns a
     ``concurrent.futures.Future`` that resolves to exactly what
-    ``padded_predict(session, x)`` would return.  One worker thread packs
-    and executes batches (CPU inference saturates the cores with a single
-    bucket execution; the session lock would serialize extra workers at
-    specialization time anyway).
+    ``padded_predict(session, x)`` would return.  ``workers`` worker
+    threads pack (FIFO, under one lock) and execute batches; with more
+    than one, each worker executes through its own per-device program
+    replica (``CompiledModel.replica``) so batches run concurrently on
+    distinct host devices — see the module docs for why results stay
+    bit-identical to single-worker serving.  ``pin="auto"`` gives each
+    worker thread its own CPU affinity set; an explicit ``pin`` is a list
+    of one CPU set per worker.
 
     ``autostart=False`` starts no thread: callers pump :meth:`step`
     themselves — the deterministic mode the tests and the synchronous
@@ -290,12 +314,15 @@ class AsyncServer:
     """
 
     def __init__(self, session, policy: Optional[BatchPolicy] = None, *,
-                 max_queue: int = 128,
+                 max_queue: int = 128, workers: int = 1,
+                 pin=None,
                  clock: Callable[[], float] = time.monotonic,
                  autostart: bool = True) -> None:
         if len(session.input_spec) != 1:
             raise ValueError("AsyncServer serves single-input models; got "
                              f"inputs {sorted(session.input_spec)}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
         self.session = session
         self.policy = policy or DynamicBatchPolicy()
         fixed = getattr(self.policy, "fixed_bucket", None)
@@ -305,18 +332,36 @@ class AsyncServer:
                 f"fixed_bucket={fixed} is not a specialized batch size of "
                 f"this frozen session (has {session.batch_sizes})")
         self.max_queue = max_queue
+        self.workers = workers
+        self._pin_sets = self._resolve_pin(pin, workers)
         self.stats = ServingStats()
         self._clock = clock
         self._pending: Deque[Request] = collections.deque()
         self._cond = threading.Condition()
         self._draining = False
         self._closed = False
-        self._worker: Optional[threading.Thread] = None
+        self._threads: List[threading.Thread] = []
         if autostart:
-            self._worker = threading.Thread(target=self._worker_loop,
-                                            daemon=True,
-                                            name="neocpu-serving")
-            self._worker.start()
+            for i in range(workers):
+                t = threading.Thread(target=self._worker_main, args=(i,),
+                                     daemon=True,
+                                     name=f"neocpu-serving-{i}")
+                self._threads.append(t)
+                t.start()
+
+    @staticmethod
+    def _resolve_pin(pin, workers):
+        if pin is None:
+            return None
+        from repro.launch.cpu import worker_cpu_sets
+
+        if pin == "auto":
+            return worker_cpu_sets(workers)
+        sets = [tuple(s) for s in pin]
+        if len(sets) != workers:
+            raise ValueError(f"pin gives {len(sets)} CPU sets for "
+                             f"{workers} workers")
+        return sets
 
     # -- capacity ------------------------------------------------------------
     def _cap(self) -> int:
@@ -438,7 +483,19 @@ class AsyncServer:
             t = d if t is None else min(t, d)
         return t
 
-    def _execute(self, batch: List[Request]) -> None:
+    def _model_for(self, bucket: int, worker: int):
+        """The executable this worker runs ``bucket`` through: the shared
+        specialization for worker 0 (and single-worker servers), a
+        same-program replica committed to host device ``worker % D`` for
+        the rest — identical numerics, concurrent execution."""
+        m = self.session.specialize(bucket)
+        if self.workers > 1 and getattr(m, "devices", 1) == 1:
+            devs = jax.devices()
+            if len(devs) > 1:
+                return m.replica(devs[worker % len(devs)])
+        return m
+
+    def _execute(self, batch: List[Request], worker: int = 0) -> None:
         rows = sum(r.rows for r in batch)
         try:
             xs = batch[0].x if len(batch) == 1 else \
@@ -450,7 +507,7 @@ class AsyncServer:
                 # on-demand re-specialization (session lock serializes the
                 # planner); _cap() already rejected this for frozen sessions
                 bucket = rows
-            m = self.session.specialize(bucket)
+            m = self._model_for(bucket, worker)
             y = m.predict(pad_rows(xs, bucket))
             y = jax.block_until_ready(y)
             y = _slice_rows(y, 0, rows)
@@ -475,6 +532,8 @@ class AsyncServer:
             self.stats.batch_rows.append(rows)
             self.stats.n_completed += n_ok
             self.stats.latencies_s.extend(lats)
+            self.stats.worker_batches[worker] = \
+                self.stats.worker_batches.get(worker, 0) + 1
 
     def step(self) -> bool:
         """Expire deadlines and execute at most one ready batch *now*
@@ -493,7 +552,13 @@ class AsyncServer:
                 self._cond.notify_all()
         return True
 
-    def _worker_loop(self) -> None:
+    def _worker_main(self, worker: int) -> None:
+        if self._pin_sets is not None:
+            from repro.launch.cpu import maybe_pin
+            maybe_pin(self._pin_sets[worker])   # pins this thread only
+        self._worker_loop(worker)
+
+    def _worker_loop(self, worker: int = 0) -> None:
         while True:
             with self._cond:
                 while True:
@@ -507,7 +572,7 @@ class AsyncServer:
                         break
                     self._cond.wait(self._wait_timeout_locked(now))
             try:
-                self._execute(batch)
+                self._execute(batch, worker)
             finally:
                 with self._cond:
                     self._cond.notify_all()
@@ -529,8 +594,9 @@ class AsyncServer:
                         "server closed before execution"))
                 self._closed = True
             self._cond.notify_all()
-        if self._worker is not None:
-            self._worker.join(timeout)
+        if self._threads:
+            for t in self._threads:
+                t.join(timeout)
         elif drain:
             while self.step():          # manual-pump drain (no worker)
                 pass

@@ -214,8 +214,10 @@ class InferenceSession:
                  transform_bw: Optional[float] = None,
                  search_budget: Tuple[int, int, int] = (6, 2, 3),
                  use_pallas: bool = False, interpret: bool = True,
-                 dispatch: str = "whole",
+                 dispatch: str = "whole", devices: int = 1,
                  model_name: Optional[str] = None) -> None:
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
         self._graph = graph
         self._base_shapes = {k: tuple(v) for k, v in base_shapes.items()}
         self._params = params
@@ -227,6 +229,7 @@ class InferenceSession:
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.dispatch = dispatch
+        self.devices = devices
         self.model_name = model_name
         self._specialized: Dict[int, CompiledModel] = {}
         # serializes planning/binding: two threads racing on the same new
@@ -255,14 +258,27 @@ class InferenceSession:
     def _shapes_for(self, batch: int) -> Dict[str, Tuple[int, ...]]:
         return {k: (batch,) + v[1:] for k, v in self._base_shapes.items()}
 
+    def _check_divisible(self, batch: int) -> None:
+        if self.devices > 1 and batch % self.devices:
+            raise ValueError(
+                f"batch {batch} is not divisible by devices="
+                f"{self.devices}: a bucket of size B on D devices means a "
+                "per-device sub-batch of B/D, so every specialized bucket "
+                "must divide evenly (pick a divisible bucket set, or "
+                "compile with devices=1)")
+
     def specialize(self, batch: int) -> CompiledModel:
         """The executable for one batch size, planning+binding on first
-        use (per-batch-size shape specialization).  Thread-safe:
+        use (per-batch-size shape specialization).  With ``devices=D`` the
+        plan is built at the per-device sub-batch ``batch // D`` — the
+        shapes each device actually executes under the batch-sharded
+        ``shard_map`` — so ``batch`` must divide by D.  Thread-safe:
         double-checked under the session lock, so concurrent callers of an
         unseen batch size plan+compile it exactly once."""
         m = self._specialized.get(batch)     # lock-free fast path
         if m is not None:
             return m
+        self._check_divisible(batch)
         with self._lock:
             m = self._specialized.get(batch)
             if m is not None:                # another thread won the race
@@ -274,7 +290,8 @@ class InferenceSession:
                     "source graph to re-plan; save the artifact with this "
                     "batch size or with include_source=True")
             plan = self.pipeline.run(
-                self._graph, self._shapes_for(batch), db=self.db,
+                self._graph, self._shapes_for(batch // self.devices),
+                db=self.db,
                 tuning=self.tuning, transform_bw=self.transform_bw,
                 search_budget=self.search_budget)
             if (plan.report is not None
@@ -285,7 +302,8 @@ class InferenceSession:
             m = compile_model(plan, self._params,
                               use_pallas=self.use_pallas,
                               interpret=self.interpret,
-                              dispatch=self.dispatch)
+                              dispatch=self.dispatch,
+                              devices=self.devices)
             self._specialized[batch] = m
             return m
 
@@ -366,6 +384,7 @@ class InferenceSession:
             "use_pallas": self.use_pallas,
             "interpret": self.interpret,
             "dispatch": self.dispatch,
+            "devices": self.devices,
             "specializations": {str(b): _plan_to_json(m.plan)
                                 for b, m in self._specialized.items()},
             "source": source,
@@ -383,14 +402,23 @@ class InferenceSession:
 
     @classmethod
     def load(cls, path: Union[str, Path], *,
-             dispatch: Optional[str] = None) -> "InferenceSession":
+             dispatch: Optional[str] = None,
+             devices: Optional[int] = None) -> "InferenceSession":
         """Reconstruct a session from :meth:`save` output.  No planning,
         no schedule search, no weight transformation happens — the plans
         and physical-layout weights come straight off disk.  Artifacts of
         older versions are upgraded through the migration hook chain;
         future versions are rejected.  If the artifact packs its source
         (v2 ``include_source``), the loaded session is *not* frozen and
-        may specialize unseen batch sizes on demand."""
+        may specialize unseen batch sizes on demand.
+
+        ``devices`` re-targets the artifact to a different host-device
+        count (the scaling benchmark loads *one* artifact at every device
+        count).  Plans are built at the per-device sub-batch, so a
+        re-targeted load drops the saved specializations and re-plans from
+        the packed source — with zero schedule searches whenever the
+        artifact's database holds the workloads; it therefore requires a
+        source-packed artifact."""
         path = Path(path)
         try:
             manifest = json.loads((path / "manifest.json").read_text())
@@ -436,6 +464,14 @@ class InferenceSession:
                 step=0)
             params = _params_from_flat(leaves)
             pipeline = Pipeline.preset(source.get("pipeline") or "fusion")
+        saved_devices = manifest.get("devices", 1)
+        retarget = devices is not None and devices != saved_devices
+        if retarget and source is None:
+            raise ValueError(
+                f"artifact was saved at devices={saved_devices} and packs "
+                f"no source; cannot re-target to devices={devices} — its "
+                "plans embed the per-device sub-batch shapes.  Re-save "
+                "with include_source=True")
         sess = cls(graph=graph,
                    base_shapes={k: tuple(v) for k, v in
                                 manifest["input_spec"].items()},
@@ -447,7 +483,12 @@ class InferenceSession:
                    use_pallas=manifest.get("use_pallas", False),
                    interpret=manifest.get("interpret", True),
                    dispatch=dispatch or manifest.get("dispatch", "whole"),
+                   devices=devices if retarget else saved_devices,
                    model_name=manifest.get("model"))
+        if retarget:
+            # saved plans are per-device-sub-batch-shaped for the *old*
+            # device count; re-specialize from the packed source instead
+            return sess
         store = CheckpointStore(path / "weights")
         specs = manifest.get("specializations")
         if not isinstance(specs, dict):
@@ -460,7 +501,7 @@ class InferenceSession:
                 plan=_plan_from_json(plan_js),
                 params=_params_from_flat(leaves),
                 use_pallas=sess.use_pallas, interpret=sess.interpret,
-                dispatch=sess.dispatch)
+                dispatch=sess.dispatch, devices=sess.devices)
         return sess
 
 
@@ -483,7 +524,7 @@ def compile(model: Union[str, Graph],                     # noqa: A001
             search_budget: Tuple[int, int, int] = (6, 2, 3),
             seed: int = 0,
             use_pallas: bool = False, interpret: bool = True,
-            dispatch: str = "whole",
+            dispatch: str = "whole", devices: int = 1,
             eager: bool = True) -> InferenceSession:
     """Build an :class:`InferenceSession` for a model.
 
@@ -502,6 +543,14 @@ def compile(model: Union[str, Graph],                     # noqa: A001
     pipeline    a ``core.pipeline.Pipeline``; default is the full ladder
                 (``Pipeline.preset("fusion")``)
     db          schedule database instance or path to a persisted one
+    devices     batch-shard every specialization over this many host
+                devices (``shard_map`` over a 1-D data mesh; requires
+                ``repro.launch.cpu.configure_cpu_devices(devices)``
+                before the first JAX use).  Batch sizes must divide by
+                it — sharding composes *above* the per-core NCHW[x]c
+                templates, so ``candidate_schedules`` is unchanged and
+                each device runs the plan built for its B/devices
+                sub-batch
     eager       plan + bind the input_spec's batch size now (default); the
                 session still specializes other batch sizes on demand
     """
@@ -551,7 +600,14 @@ def compile(model: Union[str, Graph],                     # noqa: A001
         pipeline=pipeline or Pipeline.preset("fusion"), db=db,
         tuning=tuning, transform_bw=transform_bw,
         search_budget=search_budget, use_pallas=use_pallas,
-        interpret=interpret, dispatch=dispatch, model_name=model_name)
+        interpret=interpret, dispatch=dispatch, devices=devices,
+        model_name=model_name)
     if eager:
-        sess.specialize(next(iter(shapes.values()))[0])
+        base = next(iter(shapes.values()))[0]
+        if devices > 1 and base % devices:
+            raise ValueError(
+                f"input_spec batch {base} is not divisible by devices="
+                f"{devices}; pass a divisible batch (or eager=False and "
+                "specialize divisible buckets yourself)")
+        sess.specialize(base)
     return sess

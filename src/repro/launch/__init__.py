@@ -1,1 +1,8 @@
-"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers."""
+"""Launchers: CPU runtime config (host devices, pinning, env hygiene),
+mesh construction, multi-pod dry-run, train/serve drivers."""
+from repro.launch.cpu import (apply_serving_env, configure_cpu_devices,
+                              configured_device_count, maybe_pin,
+                              worker_cpu_sets)
+
+__all__ = ["apply_serving_env", "configure_cpu_devices",
+           "configured_device_count", "maybe_pin", "worker_cpu_sets"]

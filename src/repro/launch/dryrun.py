@@ -1,7 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^^ MUST be the first two lines, before ANY jax-importing import: jax locks
-# the device count on first init.  Set ONLY here — smoke tests and benches
+from repro.launch.cpu import configure_cpu_devices
+configure_cpu_devices(512, warn_oversubscribe=False)
+# ^^ MUST run before ANY jax-importing import: jax locks the device count
+# on first backend init.  512 placeholder devices back the production-mesh
+# dry-run; configure_cpu_devices *merges* into any user-set XLA_FLAGS
+# instead of clobbering them.  Entry-point only — smoke tests and benches
 # see the single real device.
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.

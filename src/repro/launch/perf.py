@@ -1,6 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^^ before any jax import, same as dryrun.py
+from repro.launch.cpu import configure_cpu_devices
+configure_cpu_devices(512, warn_oversubscribe=False)
+# ^^ before any jax import, same as dryrun.py (merges, never clobbers,
+# user XLA_FLAGS)
 
 """Performance hillclimbing harness (EXPERIMENTS.md §Perf).
 

@@ -11,34 +11,60 @@ zero schedule search and zero weight transformation — the fast-cold-start
 path (build the artifact with ``examples/serve_planned_cnn.py`` or
 ``engine.compile(...).save(dir)``).
 
+Multi-core serving: ``--devices D`` exposes D host cores as JAX devices
+*before* the backend initializes (``launch.cpu.configure_cpu_devices`` —
+required for sharded artifacts and for ``--workers`` replicas to land on
+distinct devices), ``--workers N`` runs N driver workers over one queue,
+and ``--pin-workers`` gives each worker its own CPU affinity set.  The
+allocator/threading env preset (``launch.cpu.apply_serving_env``:
+tcmalloc LD_PRELOAD detection, log/alloc-report hygiene — warn, never
+fail) is applied on every serve.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --artifact artifact/ \
-        --requests 50
+        --requests 50 --devices 4 --workers 4 --pin-workers
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.cpu import apply_serving_env, configure_cpu_devices
 
-from repro.configs import ARCHS, reduced as make_reduced
-from repro.models.lm import model
+# --devices must take effect before the first jax import below locks the
+# backend: peek at argv here (only when this module IS the entrypoint —
+# `python -m repro.launch.serve` executes it as __main__), full parsing
+# stays in main().  Library callers configure devices themselves.
+if __name__ == "__main__":
+    _early = argparse.ArgumentParser(add_help=False)
+    _early.add_argument("--devices", type=int, default=None)
+    _early_args, _ = _early.parse_known_args(sys.argv[1:])
+    if _early_args.devices:
+        configure_cpu_devices(_early_args.devices)
+
+import jax                               # noqa: E402
+import jax.numpy as jnp                  # noqa: E402
+import numpy as np                       # noqa: E402
+
+from repro.configs import ARCHS, reduced as make_reduced   # noqa: E402
+from repro.models.lm import model                          # noqa: E402
 
 
 def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
                    max_wait_ms: float = 2.0, max_queue: int = 64,
-                   deadline_ms: float = None):
+                   deadline_ms: float = None, workers: int = 1,
+                   pin=None):
     """Cold-start CNN serving through the async dynamic-batching driver:
     load the compiled session artifact, pump a stream of single-image
     requests through a bounded queue (client-side backpressure on
     ``QueueFullError``), and drain gracefully on shutdown.  The driver
     packs requests into the artifact's specialized batch sizes, so the
-    whole run stays at zero schedule searches."""
+    whole run stays at zero schedule searches; ``workers > 1`` executes
+    batches concurrently through per-device program replicas."""
+    apply_serving_env()
     from repro.core.local_search import search_calls
     from repro.engine import (AsyncServer, DynamicBatchPolicy,
                               InferenceSession, QueueFullError)
@@ -60,7 +86,8 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
 
     policy = DynamicBatchPolicy(max_batch=max_batch,
                                 max_wait_ms=max_wait_ms)
-    server = AsyncServer(sess, policy, max_queue=max_queue)
+    server = AsyncServer(sess, policy, max_queue=max_queue,
+                         workers=workers, pin=pin)
     t_serve0 = time.perf_counter()
     futures = []
     n_retries = 0
@@ -88,7 +115,8 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
     st = server.stats
     print(f"artifact={path} model={sess.model_name or '?'} "
           f"load={t_load * 1e3:.0f} ms (zero search, zero re-binding) "
-          f"buckets={sess.batch_sizes}")
+          f"buckets={sess.batch_sizes} devices={sess.devices} "
+          f"workers={workers}")
     print(f"served {st.n_completed}/{n_requests} requests in "
           f"{st.n_batches} batches "
           f"(mean {st.rows_executed / max(st.n_batches, 1):.1f} rows, "
@@ -120,6 +148,15 @@ def main(argv=None):
                     help="bounded queue capacity (backpressure beyond it)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline; queued past it fails typed")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="expose this many host cores as JAX devices "
+                         "(applied before backend init when this module "
+                         "is the entrypoint)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="driver worker threads (per-device program "
+                         "replicas behind one queue)")
+    ap.add_argument("--pin-workers", action="store_true",
+                    help="pin each worker thread to its own CPU set")
     args = ap.parse_args(argv)
 
     if args.artifact:
@@ -127,7 +164,9 @@ def main(argv=None):
                               max_batch=args.max_batch,
                               max_wait_ms=args.max_wait_ms,
                               max_queue=args.max_queue,
-                              deadline_ms=args.deadline_ms)
+                              deadline_ms=args.deadline_ms,
+                              workers=args.workers,
+                              pin="auto" if args.pin_workers else None)
 
     cfg = make_reduced(ARCHS[args.arch])
     params = model.init_params(cfg, jax.random.PRNGKey(0))
