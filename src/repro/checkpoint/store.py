@@ -21,6 +21,7 @@ Properties:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import shutil
 import threading
@@ -29,6 +30,35 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def sha256_file(path: str | Path, chunk: int = 1 << 20) -> str:
+    """Streaming SHA-256 of one file (constant memory for big blobs)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
+
+
+def dir_checksums(root: str | Path,
+                  exclude: Tuple[str, ...] = ()) -> Dict[str, str]:
+    """``{posix-relative-path: sha256}`` for every file under ``root``,
+    sorted for a stable manifest encoding.  ``exclude`` names relative
+    paths to skip (e.g. the manifest that will *hold* the checksums)."""
+    root = Path(root)
+    out: Dict[str, str] = {}
+    for p in sorted(root.rglob("*")):
+        if not p.is_file():
+            continue
+        rel = p.relative_to(root).as_posix()
+        if rel in exclude:
+            continue
+        out[rel] = sha256_file(p)
+    return out
 
 
 def _flatten(tree, prefix=""):
@@ -118,9 +148,23 @@ class CheckpointStore:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self.dir / f"step_{step:06d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        leaves = {path: np.load(d / rec["file"])
-                  for path, rec in manifest["leaves"].items()}
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"checkpoint manifest {d}/manifest.json is corrupt "
+                f"(not valid JSON): {e}") from e
+        leaves = {}
+        for path, rec in manifest["leaves"].items():
+            try:
+                leaves[path] = np.load(d / rec["file"])
+            except (ValueError, OSError, EOFError) as e:
+                # np.load on a truncated/garbled .npy raises a bare
+                # ValueError ("Cannot load file...") — re-raise with the
+                # blob named so artifact loaders can wrap it typed
+                raise ValueError(
+                    f"checkpoint leaf {d / rec['file']} (tree path "
+                    f"{path!r}) is corrupt or truncated: {e}") from e
         return leaves, step, manifest["meta"]
 
     def restore(self, template: Any, step: Optional[int] = None,

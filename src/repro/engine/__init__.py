@@ -4,18 +4,40 @@
 plan, tune, bind, specialize per batch size, and persist artifacts;
 ``compile_model`` is the lower-level bind-one-plan entry it rides on.
 ``AsyncServer`` (engine/serving.py) turns a session into a dynamic-batching
-serving loop with deterministic, padding-based bucket execution.
+serving loop with deterministic, padding-based bucket execution, worker
+supervision (retries, restarts, hung-batch watchdog), and pluggable
+overload shedding; ``engine/faults.py`` provides the deterministic fault
+injection the failure paths are tested and benchmarked with;
+``engine/supervision.py`` holds the pure decision logic (heartbeats,
+stragglers, retry backoff, shed policies).
 """
 from repro.engine.executor import CompiledModel, bind_params, compile_model
-from repro.engine.serving import (AsyncServer, BatchPolicy,
-                                  DeadlineExceededError, DynamicBatchPolicy,
-                                  QueueFullError, ServerClosedError,
-                                  ServingError, ServingStats,
+from repro.engine.faults import (DelayBatch, FailBatch, FaultInjector,
+                                 InjectedFault, InjectedPredictError,
+                                 InjectedWorkerCrash, KillWorker,
+                                 corrupt_artifact, corrupt_file)
+from repro.engine.serving import (AllWorkersUnhealthyError, AsyncServer,
+                                  BatchPolicy, DeadlineExceededError,
+                                  DynamicBatchPolicy, LoadShedError,
+                                  QueueFullError, RetriesExhaustedError,
+                                  ServerClosedError, ServingError,
+                                  ServingStats, WorkerCrashError,
                                   nearest_bucket, padded_predict)
-from repro.engine.session import InferenceSession, Session, compile
+from repro.engine.session import (ArtifactCorruptError, ArtifactError,
+                                  InferenceSession, Session, compile)
+from repro.engine.supervision import (HeartbeatMonitor, RetryPolicy,
+                                      SHED_POLICIES, StragglerMitigator,
+                                      StragglerPolicy, choose_shed_victim)
 
-__all__ = ["AsyncServer", "BatchPolicy", "CompiledModel",
-           "DeadlineExceededError", "DynamicBatchPolicy", "InferenceSession",
-           "QueueFullError", "ServerClosedError", "ServingError",
-           "ServingStats", "Session", "bind_params", "compile",
-           "compile_model", "nearest_bucket", "padded_predict"]
+__all__ = ["AllWorkersUnhealthyError", "ArtifactCorruptError",
+           "ArtifactError", "AsyncServer", "BatchPolicy", "CompiledModel",
+           "DeadlineExceededError", "DelayBatch", "DynamicBatchPolicy",
+           "FailBatch", "FaultInjector", "HeartbeatMonitor",
+           "InferenceSession", "InjectedFault", "InjectedPredictError",
+           "InjectedWorkerCrash", "KillWorker", "LoadShedError",
+           "QueueFullError", "RetriesExhaustedError", "RetryPolicy",
+           "SHED_POLICIES", "ServerClosedError", "ServingError",
+           "ServingStats", "Session", "StragglerMitigator",
+           "StragglerPolicy", "WorkerCrashError", "bind_params", "compile",
+           "compile_model", "choose_shed_victim", "corrupt_artifact",
+           "corrupt_file", "nearest_bucket", "padded_predict"]

@@ -61,9 +61,44 @@ device-count) program and its batch — never on which worker ran it.
 (``repro.launch.cpu.worker_cpu_sets`` / ``maybe_pin``), keeping the
 scheduler from migrating workers mid-batch.
 
+Fault tolerance (the failure paths are engineered like the hot path; the
+deterministic :class:`~repro.engine.faults.FaultInjector` exercises each):
+
+* **Crash recovery** — a batch that raises (or a worker thread that dies
+  mid-batch) strands nothing: its requests are *requeued at the queue
+  head* with a per-request retry budget and capped exponential backoff
+  (:class:`~repro.engine.supervision.RetryPolicy`); past the budget the
+  future fails with :class:`RetriesExhaustedError` carrying the original
+  cause.  Retried requests re-execute through the same bucket-shaped
+  programs, so a completed-after-retry response is bit-identical to the
+  never-failed one.
+* **Worker supervision** — a supervisor thread restarts crashed worker
+  threads (up to ``max_restarts`` per slot), requeues whatever they left
+  in flight, and past the restart budget marks the slot *unhealthy*,
+  degrading gracefully to the surviving workers; when no worker survives,
+  pending work fails typed (:class:`AllWorkersUnhealthyError`).
+* **Hung-batch watchdog** (``watchdog_ms``) — workers heartbeat at batch
+  boundaries (:class:`~repro.engine.supervision.HeartbeatMonitor`); a
+  worker silent past the watchdog *while holding an in-flight batch* is
+  treated as hung: its batch is requeued (safe double execution — the
+  first result to land wins, late results are dropped by the future's
+  done-state) and its slot restarted.  Idle silence is revived, never
+  killed.  Set the watchdog well above a worst-case batch (including
+  first-use JIT compilation) or pre-warm the buckets.
+* **Load shedding** (``shed="newest"|"oldest"|"deadline"``) — the
+  overload policy when the bounded queue is full: reject the newcomer
+  (default, :class:`QueueFullError`), shed the oldest queued request, or
+  deadline-aware admission (shed the queued request closest to missing
+  its deadline); shed requests fail with :class:`LoadShedError`.  A
+  request whose deadline already expired is rejected at submission.
+* **health()** — a point-in-time snapshot (queue depth, workers alive/
+  unhealthy/restarted, retry/shed/crash counters) for external probes;
+  the same counters ride in ``ServingStats.to_json``.
+
 Tests drive the scheduling deterministically: construct with
 ``autostart=False`` and a fake ``clock``, then pump :meth:`AsyncServer.step`
-by hand — no sleeps anywhere in the suite.
+(and :meth:`AsyncServer.supervise`) by hand — no sleeps anywhere in the
+suite.
 """
 from __future__ import annotations
 
@@ -72,11 +107,16 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
-from typing import Callable, Deque, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.engine.faults import FaultInjector, InjectedWorkerCrash
+from repro.engine.supervision import (HeartbeatMonitor, RetryPolicy,
+                                      SHED_POLICIES, StragglerMitigator,
+                                      StragglerPolicy, choose_shed_victim)
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +137,24 @@ class DeadlineExceededError(ServingError):
 
 class ServerClosedError(ServingError):
     """submit() after close()/drain started."""
+
+
+class RetriesExhaustedError(ServingError):
+    """The request failed on every execution attempt within its retry
+    budget; ``__cause__`` is the last underlying failure."""
+
+
+class LoadShedError(ServingError):
+    """The request was evicted from the queue by the overload policy."""
+
+
+class WorkerCrashError(ServingError):
+    """A worker thread died mid-batch (its requests were requeued)."""
+
+
+class AllWorkersUnhealthyError(ServingError):
+    """Every worker slot exhausted its restart budget; the server cannot
+    execute anything."""
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +219,8 @@ class Request:
     future: Future
     t_submit: float
     deadline: Optional[float] = None     # absolute clock time, or None
+    retries: int = 0                     # re-executions consumed so far
+    not_before: Optional[float] = None   # retry backoff gate (absolute)
 
 
 class BatchPolicy:
@@ -260,6 +320,12 @@ class ServingStats:
     n_batches: int = 0
     rows_executed: int = 0         # real request rows
     rows_padded: int = 0           # zero rows added to reach the bucket
+    n_retried: int = 0             # request re-executions granted
+    n_retries_exhausted: int = 0   # requests failed past their budget
+    n_shed: int = 0                # queued requests evicted by overload
+    n_worker_crashes: int = 0      # worker threads that died mid-service
+    n_worker_restarts: int = 0     # supervisor-spawned replacements
+    n_hung_requeued: int = 0       # watchdog-requeued in-flight batches
     batch_rows: List[int] = dataclasses.field(default_factory=list)
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     worker_batches: dict = dataclasses.field(default_factory=dict)
@@ -279,6 +345,12 @@ class ServingStats:
             "n_batches": self.n_batches,
             "rows_executed": self.rows_executed,
             "rows_padded": self.rows_padded,
+            "n_retried": self.n_retried,
+            "n_retries_exhausted": self.n_retries_exhausted,
+            "n_shed": self.n_shed,
+            "n_worker_crashes": self.n_worker_crashes,
+            "n_worker_restarts": self.n_worker_restarts,
+            "n_hung_requeued": self.n_hung_requeued,
             "mean_batch_rows": (sum(self.batch_rows) / len(self.batch_rows)
                                 if self.batch_rows else 0.0),
             "p50_ms": round(self.percentile_ms(50), 3),
@@ -299,30 +371,47 @@ class AsyncServer:
 
     ``submit`` is thread-safe and non-blocking: it enqueues and returns a
     ``concurrent.futures.Future`` that resolves to exactly what
-    ``padded_predict(session, x)`` would return.  ``workers`` worker
-    threads pack (FIFO, under one lock) and execute batches; with more
-    than one, each worker executes through its own per-device program
-    replica (``CompiledModel.replica``) so batches run concurrently on
-    distinct host devices — see the module docs for why results stay
-    bit-identical to single-worker serving.  ``pin="auto"`` gives each
-    worker thread its own CPU affinity set; an explicit ``pin`` is a list
-    of one CPU set per worker.
+    ``padded_predict(session, x)`` would return — or a *typed*
+    ``ServingError``; under supervision no request is ever silently lost.
+    ``workers`` worker threads pack (FIFO, under one lock) and execute
+    batches; with more than one, each worker executes through its own
+    per-device program replica (``CompiledModel.replica``) so batches run
+    concurrently on distinct host devices — see the module docs for why
+    results stay bit-identical to single-worker serving.  ``pin="auto"``
+    gives each worker thread its own CPU affinity set; an explicit
+    ``pin`` is a list of one CPU set per worker.
 
-    ``autostart=False`` starts no thread: callers pump :meth:`step`
-    themselves — the deterministic mode the tests and the synchronous
-    benchmark driver use, with an injectable ``clock``.
+    Fault-tolerance knobs: ``retry`` (a ``RetryPolicy``; ``budget=0``
+    disables), ``shed`` (overload policy), ``watchdog_ms`` (hung-batch
+    detection; off by default), ``max_restarts`` (per worker slot),
+    ``faults`` (a ``FaultInjector`` for tests/benchmarks).
+
+    ``autostart=False`` starts no threads: callers pump :meth:`step` (and
+    :meth:`supervise`) themselves — the deterministic mode the tests and
+    the synchronous benchmark driver use, with an injectable ``clock``.
     """
 
     def __init__(self, session, policy: Optional[BatchPolicy] = None, *,
                  max_queue: int = 128, workers: int = 1,
                  pin=None,
+                 retry: Optional[RetryPolicy] = None,
+                 shed: str = "newest",
+                 watchdog_ms: Optional[float] = None,
+                 max_restarts: int = 2,
+                 faults: Optional[FaultInjector] = None,
                  clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
                  autostart: bool = True) -> None:
         if len(session.input_spec) != 1:
             raise ValueError("AsyncServer serves single-input models; got "
                              f"inputs {sorted(session.input_spec)}")
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if shed not in SHED_POLICIES:
+            raise ValueError(f"unknown shed policy {shed!r}; "
+                             f"pick one of {SHED_POLICIES}")
+        if max_restarts < 0:
+            raise ValueError(f"max_restarts must be >= 0, got {max_restarts}")
         self.session = session
         self.policy = policy or DynamicBatchPolicy()
         fixed = getattr(self.policy, "fixed_bucket", None)
@@ -334,20 +423,48 @@ class AsyncServer:
         self.max_queue = max_queue
         self.workers = workers
         self._pin_sets = self._resolve_pin(pin, workers)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.shed = shed
+        self.watchdog_ms = watchdog_ms
+        self.max_restarts = max_restarts
+        self.faults = faults
         self.stats = ServingStats()
         self._clock = clock
+        self._sleep = sleep
         self._pending: Deque[Request] = collections.deque()
         self._cond = threading.Condition()
         self._draining = False
         self._closed = False
-        self._threads: List[threading.Thread] = []
+        self._batch_seq = 0
+        self._inflight: Dict[int, List[Request]] = {}
+        self._worker_gen: Dict[int, int] = {i: 0 for i in range(workers)}
+        self._restarts: Dict[int, int] = {i: 0 for i in range(workers)}
+        self._crash_counted: set = set()     # slots whose death is counted
+        self._unhealthy: set = set()
+        self._threads: List[Optional[threading.Thread]] = [None] * workers
+        self._monitor = (HeartbeatMonitor(range(workers),
+                                          timeout_s=watchdog_ms / 1e3,
+                                          clock=clock)
+                         if watchdog_ms is not None else None)
+        self._straggler = (StragglerMitigator(
+            range(workers), StragglerPolicy(slow_factor=3.0, evict_after=5))
+            if watchdog_ms is not None and workers > 1 else None)
+        self._supervisor: Optional[threading.Thread] = None
+        self._stop_supervisor = threading.Event()
         if autostart:
             for i in range(workers):
-                t = threading.Thread(target=self._worker_main, args=(i,),
-                                     daemon=True,
-                                     name=f"neocpu-serving-{i}")
-                self._threads.append(t)
-                t.start()
+                self._threads[i] = self._spawn_worker(i, gen=0)
+            self._supervisor = threading.Thread(
+                target=self._supervisor_main, daemon=True,
+                name="neocpu-serving-supervisor")
+            self._supervisor.start()
+
+    def _spawn_worker(self, slot: int, gen: int) -> threading.Thread:
+        t = threading.Thread(target=self._worker_main, args=(slot, gen),
+                             daemon=True,
+                             name=f"neocpu-serving-{slot}.{gen}")
+        t.start()
+        return t
 
     @staticmethod
     def _resolve_pin(pin, workers):
@@ -379,8 +496,10 @@ class AsyncServer:
     # -- client side ---------------------------------------------------------
     def submit(self, x, deadline_ms: Optional[float] = None) -> Future:
         """Enqueue one request (leading dim = rows).  Raises
-        :class:`QueueFullError` at capacity, :class:`ServerClosedError`
-        after close/drain, ValueError for an unpackable request."""
+        :class:`QueueFullError` at capacity (unless the shed policy
+        evicts a queued request instead), :class:`DeadlineExceededError`
+        for an already-expired deadline, :class:`ServerClosedError` after
+        close/drain, ValueError for an unpackable request."""
         x = jnp.asarray(x)
         (spec,) = self.session.input_spec.values()
         if x.ndim != len(spec):
@@ -396,15 +515,35 @@ class AsyncServer:
                 "specialized bucket of a frozen session); split it")
         fut: Future = Future()
         now = self._clock()
+        if deadline_ms is not None and deadline_ms <= 0:
+            # deadline-aware admission: work that cannot possibly finish
+            # in time is rejected up front, never queued
+            with self._cond:
+                self.stats.n_deadline_expired += 1
+            raise DeadlineExceededError(
+                f"deadline_ms={deadline_ms} already expired at submission")
         deadline = None if deadline_ms is None else now + deadline_ms / 1e3
         with self._cond:
             if self._closed or self._draining:
                 raise ServerClosedError("server is closed to new requests")
+            if (self._threads and self._unhealthy
+                    and len(self._unhealthy) == len(self._threads)):
+                raise AllWorkersUnhealthyError(
+                    "every worker slot exhausted its restart budget; "
+                    "the server cannot execute requests")
             if len(self._pending) >= self.max_queue:
-                self.stats.n_rejected_full += 1
-                raise QueueFullError(
-                    f"request queue at capacity ({self.max_queue}); retry "
-                    "later or raise max_queue")
+                victim = choose_shed_victim(self._pending, self.shed)
+                if victim is None:
+                    self.stats.n_rejected_full += 1
+                    raise QueueFullError(
+                        f"request queue at capacity ({self.max_queue}); "
+                        "retry later or raise max_queue")
+                shed = self._pending[victim]
+                del self._pending[victim]
+                if self._resolve(shed.future, exc=LoadShedError(
+                        f"shed by the {self.shed!r} overload policy after "
+                        f"{(now - shed.t_submit) * 1e3:.1f} ms queued")):
+                    self.stats.n_shed += 1
             self._pending.append(Request(x, rows, fut, now, deadline))
             self.stats.n_submitted += 1
             self._cond.notify_all()
@@ -419,16 +558,23 @@ class AsyncServer:
     @staticmethod
     def _resolve(fut: Future, value=None, exc: Optional[BaseException] = None
                  ) -> bool:
-        """Resolve a client future, tolerating client-side cancel():
-        returns False (and sets nothing) when the client cancelled the
-        request while it was queued — a cancelled future must never kill
-        the worker thread or poison its co-batched neighbors."""
+        """Resolve a client future exactly once, tolerating client-side
+        cancel() and duplicate execution: returns False (and sets
+        nothing) when the client cancelled the request while it was
+        queued, or when the future already holds a result — a hung batch
+        requeued by the watchdog may legally execute twice, and the first
+        (bit-identical) result wins."""
+        if fut.done():
+            return False
         if not fut.set_running_or_notify_cancel():
             return False
-        if exc is not None:
-            fut.set_exception(exc)
-        else:
-            fut.set_result(value)
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(value)
+        except Exception:               # lost a set race: first writer won
+            return False
         return True
 
     def _expire_locked(self, now: float) -> None:
@@ -448,8 +594,25 @@ class AsyncServer:
                 keep.append(r)
         self._pending = keep
 
+    def _ready_prefix_locked(self, now: float) -> Sequence[Request]:
+        """The FIFO prefix eligible to form a batch now: requests whose
+        retry backoff gate has passed.  Strict FIFO means a backing-off
+        head blocks everything behind it; during drain the gates are
+        waived so close() terminates."""
+        if self._draining:
+            return self._pending
+        n = 0
+        for r in self._pending:
+            if r.not_before is not None and now < r.not_before:
+                break
+            n += 1
+        if n == len(self._pending):
+            return self._pending
+        return [self._pending[i] for i in range(n)]
+
     def _form_locked(self, now: float) -> Optional[List[Request]]:
-        if not self._pending:
+        pending = self._ready_prefix_locked(now)
+        if not pending:
             return None
         cap = self._cap()
         # readiness belongs to the policy, but a FIFO prefix that already
@@ -458,24 +621,33 @@ class AsyncServer:
         # rather than idle on the max_wait timer
         total = 0
         filled = False
-        for r in self._pending:
+        for r in pending:
             total += r.rows
             if total >= cap:
                 filled = True
                 break
         if not (self._draining or filled
-                or self.policy.ready(self._pending, now)):
+                or self.policy.ready(pending, now)):
             return None
-        n = self.policy.take(self._pending, cap)
+        n = self.policy.take(pending, cap)
         if n <= 0:
             return None
+        n = min(n, len(pending))
         return [self._pending.popleft() for _ in range(n)]
 
     def _wait_timeout_locked(self, now: float) -> Optional[float]:
-        """Bound the worker's wait by the policy's hint *and* the earliest
-        pending deadline — deadline expiry is the server's promise, so it
-        must not depend on a custom policy implementing next_event."""
-        t = self.policy.next_event(self._pending, now)
+        """Bound the worker's wait by the policy's hint, the earliest
+        pending deadline (deadline expiry is the server's promise, so it
+        must not depend on a custom policy implementing next_event), and
+        the head's retry-backoff gate (a blocked head makes the policy's
+        hints meaningless until it unblocks)."""
+        t = None
+        if self._pending:
+            nb = self._pending[0].not_before
+            if nb is not None and nb > now:
+                t = nb - now
+            else:
+                t = self.policy.next_event(self._pending, now)
         deadlines = [r.deadline for r in self._pending
                      if r.deadline is not None]
         if deadlines:
@@ -495,9 +667,44 @@ class AsyncServer:
                 return m.replica(devs[worker % len(devs)])
         return m
 
-    def _execute(self, batch: List[Request], worker: int = 0) -> None:
+    def _fail_or_requeue(self, batch: List[Request],
+                         exc: BaseException) -> None:
+        """A batch execution failed: requeue each request at the queue
+        head (preserving FIFO order) with its backoff gate set, or fail
+        its future once the retry budget is spent.  ``budget=0`` fails
+        with the original exception — the no-retry behavior."""
+        now = self._clock()
+        with self._cond:
+            requeue: List[Request] = []
+            for r in batch:
+                if r.future.cancelled() or r.future.done():
+                    continue
+                if not self._closed and r.retries < self.retry.budget:
+                    r.retries += 1
+                    r.not_before = now + self.retry.backoff_s(r.retries)
+                    requeue.append(r)
+                    self.stats.n_retried += 1
+                    continue
+                if self.retry.budget > 0:
+                    err: BaseException = RetriesExhaustedError(
+                        f"failed after {r.retries} retries "
+                        f"(budget {self.retry.budget}): {exc!r}")
+                    err.__cause__ = exc
+                    self.stats.n_retries_exhausted += 1
+                else:
+                    err = exc
+                if self._resolve(r.future, exc=err):
+                    self.stats.n_failed += 1
+            for r in reversed(requeue):
+                self._pending.appendleft(r)
+            self._cond.notify_all()
+
+    def _execute(self, batch: List[Request], worker: int = 0,
+                 seq: Optional[int] = None) -> None:
         rows = sum(r.rows for r in batch)
         try:
+            if self.faults is not None and seq is not None:
+                self.faults.fire(worker, seq, self._sleep)
             xs = batch[0].x if len(batch) == 1 else \
                 jnp.concatenate([r.x for r in batch])
             bucket = getattr(self.policy, "fixed_bucket", None)
@@ -511,10 +718,10 @@ class AsyncServer:
             y = m.predict(pad_rows(xs, bucket))
             y = jax.block_until_ready(y)
             y = _slice_rows(y, 0, rows)
-        except BaseException as e:      # noqa: BLE001 — fail the futures
-            n_failed = sum(self._resolve(r.future, exc=e) for r in batch)
-            with self._cond:
-                self.stats.n_failed += n_failed
+        except BaseException as e:      # noqa: BLE001 — retry or fail typed
+            self._fail_or_requeue(batch, e)
+            if isinstance(e, InjectedWorkerCrash):
+                raise WorkerCrashError(str(e)) from e
             return
         done = self._clock()
         off = 0
@@ -538,30 +745,44 @@ class AsyncServer:
     def step(self) -> bool:
         """Expire deadlines and execute at most one ready batch *now*
         (manual pump — deterministic tests, synchronous drivers).  Returns
-        True iff a batch ran."""
+        True iff a batch ran (or crashed: an injected worker kill counts
+        as one crash-and-instant-restart here, since there is no thread
+        to die)."""
         with self._cond:
             now = self._clock()
             self._expire_locked(now)
             batch = self._form_locked(now)
+            if batch is not None:
+                seq = self._batch_seq
+                self._batch_seq += 1
+                self._inflight[0] = batch
         if batch is None:
             return False
         try:
-            self._execute(batch)
+            self._execute(batch, worker=0, seq=seq)
+        except WorkerCrashError:
+            with self._cond:
+                self.stats.n_worker_crashes += 1
         finally:
             with self._cond:
+                if self._inflight.get(0) is batch:
+                    del self._inflight[0]
                 self._cond.notify_all()
         return True
 
-    def _worker_main(self, worker: int) -> None:
+    def _worker_main(self, worker: int, gen: int = 0) -> None:
         if self._pin_sets is not None:
             from repro.launch.cpu import maybe_pin
             maybe_pin(self._pin_sets[worker])   # pins this thread only
-        self._worker_loop(worker)
+        self._worker_loop(worker, gen)
 
-    def _worker_loop(self, worker: int = 0) -> None:
+    def _worker_loop(self, worker: int = 0, gen: int = 0) -> None:
         while True:
             with self._cond:
                 while True:
+                    if (self._worker_gen.get(worker, gen) != gen
+                            or worker in self._unhealthy):
+                        return          # superseded zombie / evicted slot
                     now = self._clock()
                     self._expire_locked(now)
                     if self._closed or (self._draining
@@ -569,20 +790,220 @@ class AsyncServer:
                         return
                     batch = self._form_locked(now)
                     if batch is not None:
+                        seq = self._batch_seq
+                        self._batch_seq += 1
+                        self._inflight[worker] = batch
                         break
                     self._cond.wait(self._wait_timeout_locked(now))
+            if self._monitor is not None:
+                self._monitor.beat(worker)
+            t0 = self._clock()
             try:
-                self._execute(batch, worker)
+                self._execute(batch, worker, seq=seq)
+            except WorkerCrashError:
+                with self._cond:        # counted here, not when the
+                    self.stats.n_worker_crashes += 1    # supervisor sees it
+                    self._crash_counted.add(worker)
+                return                  # thread dies; supervisor restarts
             finally:
                 with self._cond:
+                    if self._inflight.get(worker) is batch:
+                        del self._inflight[worker]
+                    if (self._straggler is not None
+                            and self._worker_gen.get(worker) == gen):
+                        self._straggler.record(
+                            {worker: self._clock() - t0})
                     self._cond.notify_all()
+                if (self._monitor is not None
+                        and self._worker_gen.get(worker) == gen):
+                    self._monitor.beat(worker)
+
+    # -- supervision ---------------------------------------------------------
+    def _supervisor_main(self) -> None:
+        interval = 0.01
+        if self.watchdog_ms is not None:
+            interval = min(interval, self.watchdog_ms / 1e3 / 4)
+        while not self._stop_supervisor.wait(interval):
+            with self._cond:
+                if self._closed:
+                    return
+            self.supervise()
+
+    def supervise(self) -> None:
+        """One supervision pass: requeue what dead threads left in
+        flight, restart crashed worker slots (or mark them unhealthy past
+        ``max_restarts``), fire the hung-batch watchdog, and degrade to a
+        typed failure when no worker survives.  Called periodically by
+        the supervisor thread; pump it by hand in ``autostart=False``
+        tests."""
+        now = self._clock()
+        with self._cond:
+            self._check_dead_locked(now)
+            if self._monitor is not None:
+                self._check_hung_locked(now)
+            if self._straggler is not None:
+                self._straggler.stragglers()      # update strike counters
+                for w in self._straggler.evictions():
+                    if w not in self._unhealthy:
+                        self._supersede_locked(
+                            w, reason="straggler eviction", requeue=True)
+            self._degrade_locked()
+            self._cond.notify_all()
+
+    def _check_dead_locked(self, now: float) -> None:
+        if self._closed or self._draining:
+            return                      # workers exit legitimately now
+        for slot, t in enumerate(self._threads):
+            if t is None or t.is_alive() or slot in self._unhealthy:
+                continue
+            # the slot's current thread died without being superseded:
+            # that is a crash — requeue whatever it left in flight
+            # (backstop; the injected-kill path already requeued) and
+            # restart or evict the slot
+            if slot not in self._crash_counted:
+                self.stats.n_worker_crashes += 1
+            self._crash_counted.discard(slot)
+            self._threads[slot] = None
+            batch = self._inflight.pop(slot, None)
+            if batch:
+                self._requeue_orphans(batch, WorkerCrashError(
+                    f"worker {slot} died mid-batch"), now)
+            self._restart_or_evict_locked(slot)
+
+    def _check_hung_locked(self, now: float) -> None:
+        for slot in self._monitor.check():
+            if (slot in self._unhealthy or self._threads[slot] is None
+                    or not self._threads[slot].is_alive()):
+                continue                # dead slots are _check_dead's job
+            batch = self._inflight.pop(slot, None)
+            if batch is None:
+                # idle silence: workers only beat at batch boundaries, so
+                # a quiet queue looks like silence — revive, don't kill
+                self._monitor.revive(slot)
+                continue
+            # hung batch: requeue it (duplicate execution is safe — the
+            # first bit-identical result wins via the future done-guard)
+            # and supersede the zombie thread
+            self.stats.n_hung_requeued += 1
+            if self._straggler is not None:
+                self._straggler.record({slot: self.watchdog_ms / 1e3})
+            self._requeue_orphans(batch, WorkerCrashError(
+                f"worker {slot} hung past the {self.watchdog_ms} ms "
+                "watchdog"), now)
+            self._supersede_locked(slot, reason="hung batch", requeue=False)
+
+    def _requeue_orphans(self, batch: List[Request], exc: BaseException,
+                         now: float) -> None:
+        """Locked variant of _fail_or_requeue for supervisor use."""
+        requeue: List[Request] = []
+        for r in batch:
+            if r.future.cancelled() or r.future.done():
+                continue
+            if not self._closed and r.retries < self.retry.budget:
+                r.retries += 1
+                r.not_before = now + self.retry.backoff_s(r.retries)
+                requeue.append(r)
+                self.stats.n_retried += 1
+                continue
+            if self.retry.budget > 0:
+                err: BaseException = RetriesExhaustedError(
+                    f"failed after {r.retries} retries "
+                    f"(budget {self.retry.budget}): {exc!r}")
+                err.__cause__ = exc
+                self.stats.n_retries_exhausted += 1
+            else:
+                err = exc
+            if self._resolve(r.future, exc=err):
+                self.stats.n_failed += 1
+        for r in reversed(requeue):
+            self._pending.appendleft(r)
+
+    def _supersede_locked(self, slot: int, *, reason: str,
+                          requeue: bool) -> None:
+        """Retire a slot's current thread (it exits at its next loop check
+        via the generation token) and restart or evict the slot."""
+        self._worker_gen[slot] = self._worker_gen.get(slot, 0) + 1
+        if requeue:
+            batch = self._inflight.pop(slot, None)
+            if batch:
+                self._requeue_orphans(batch, WorkerCrashError(
+                    f"worker {slot} superseded: {reason}"), self._clock())
+        self._threads[slot] = None
+        self._restart_or_evict_locked(slot)
+
+    def _restart_or_evict_locked(self, slot: int) -> None:
+        if self._restarts[slot] < self.max_restarts:
+            self._restarts[slot] += 1
+            self.stats.n_worker_restarts += 1
+            gen = self._worker_gen[slot] = self._worker_gen.get(slot, 0) + 1
+            if self._monitor is not None:
+                self._monitor.revive(slot)
+            self._threads[slot] = self._spawn_worker(slot, gen)
+        else:
+            self._unhealthy.add(slot)
+            if self._straggler is not None:
+                self._straggler.drop(slot)
+
+    def _degrade_locked(self) -> None:
+        if not (self._threads and self._unhealthy
+                and len(self._unhealthy) == len(self._threads)):
+            return
+        while self._pending:
+            r = self._pending.popleft()
+            if self._resolve(r.future, exc=AllWorkersUnhealthyError(
+                    "every worker slot exhausted its restart budget")):
+                self.stats.n_failed += 1
+
+    def health(self) -> dict:
+        """Point-in-time health snapshot for external probes (the
+        counters also ride in ``stats.to_json()``)."""
+        with self._cond:
+            alive = sum(1 for t in self._threads
+                        if t is not None and t.is_alive())
+            return {
+                "queue_depth": len(self._pending),
+                "inflight_batches": len(self._inflight),
+                "workers": {
+                    "configured": self.workers,
+                    "alive": alive,
+                    "unhealthy": sorted(self._unhealthy),
+                    "restarts": dict(self._restarts),
+                },
+                "watchdog_ms": self.watchdog_ms,
+                "shed_policy": self.shed,
+                "retry_budget": self.retry.budget,
+                "draining": self._draining,
+                "closed": self._closed,
+                "counters": {
+                    "n_submitted": self.stats.n_submitted,
+                    "n_completed": self.stats.n_completed,
+                    "n_failed": self.stats.n_failed,
+                    "n_retried": self.stats.n_retried,
+                    "n_retries_exhausted": self.stats.n_retries_exhausted,
+                    "n_shed": self.stats.n_shed,
+                    "n_rejected_full": self.stats.n_rejected_full,
+                    "n_deadline_expired": self.stats.n_deadline_expired,
+                    "n_worker_crashes": self.stats.n_worker_crashes,
+                    "n_worker_restarts": self.stats.n_worker_restarts,
+                    "n_hung_requeued": self.stats.n_hung_requeued,
+                },
+            }
 
     # -- lifecycle -----------------------------------------------------------
     def close(self, drain: bool = True, timeout: Optional[float] = None
               ) -> None:
         """Stop accepting requests.  ``drain=True`` completes everything
         already queued or in flight first; ``drain=False`` fails queued
-        requests with :class:`ServerClosedError` immediately."""
+        requests with :class:`ServerClosedError` immediately.
+
+        Robust by construction: idempotent (a second close returns
+        immediately), and ``drain=True`` terminates even when worker
+        threads are dead or a batch raises mid-drain — once the threads
+        are gone the closing thread pumps the remainder itself, with
+        retry budgets bounding the work (backoff gates are waived during
+        drain).  A worker hung in a predict call is the one thing that
+        can stall the join — pass ``timeout`` (per join) to bound it;
+        whatever remains is failed typed."""
         with self._cond:
             if self._closed:
                 return
@@ -594,12 +1015,30 @@ class AsyncServer:
                         "server closed before execution"))
                 self._closed = True
             self._cond.notify_all()
-        if self._threads:
-            for t in self._threads:
+        self._stop_supervisor.set()
+        if self._supervisor is not None:
+            self._supervisor.join(timeout)
+            self._supervisor = None
+        for t in list(self._threads):
+            if t is not None:
                 t.join(timeout)
-        elif drain:
-            while self.step():          # manual-pump drain (no worker)
-                pass
+        if drain:
+            # backstop drain: if the workers died (or never existed —
+            # manual mode), the closing thread pumps what is left; a
+            # batch that keeps failing exhausts its requests' retry
+            # budgets, so this terminates
+            while True:
+                with self._cond:
+                    if self._closed or not self._pending:
+                        break
+                    threads_alive = any(t is not None and t.is_alive()
+                                        for t in self._threads)
+                if threads_alive:       # join timed out but they live on
+                    with self._cond:
+                        self._cond.wait(0.05)
+                    continue
+                if not self.step():
+                    break               # nothing formable: fail leftovers
         with self._cond:
             self._closed = True
             while self._pending:        # whatever a dead worker left behind

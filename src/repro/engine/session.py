@@ -22,27 +22,39 @@ that proves it).
     # ... fresh process ...
     y2 = InferenceSession.load("artifact/").predict(x)   # bit-identical
 
-Artifact layout (version 2):
+Artifact layout (version 3):
 
     <path>/manifest.json   format, version, input spec, tuning,
-                           transform_bw, per-batch plan JSON under
-                           "specializations", schedule-db blob,
-                           pipeline/report metadata, and an optional
-                           "source" section (the *logical* graph) that —
-                           together with <path>/source/ — lets a loaded
-                           session legally specialize unseen batch sizes
+                           transform_bw, schedule-db blob, pipeline/report
+                           metadata, the "specializations" table (batch ->
+                           plan-file reference), a "checksums" table
+                           (relative path -> SHA-256 of every other file
+                           in the artifact), and an optional "source"
+                           section (the *logical* graph) that — together
+                           with <path>/source/ — lets a loaded session
+                           legally specialize unseen batch sizes
+    <path>/plans/          batch_<b>.json: one specialization's plan
     <path>/weights/        CheckpointStore; step_<batch>/ holds the bound
                            (physical-layout) params of one specialization
     <path>/source/         CheckpointStore (one step): the raw logical
                            params, present iff manifest["source"] is
 
+Integrity: ``save`` builds the whole artifact in a sibling temp directory
+and atomically swaps it in, so a crash mid-save never leaves a
+half-written artifact where a loadable one stood.  ``load`` verifies
+every checksummed file before deserializing anything and raises the typed
+:class:`ArtifactCorruptError` (a bit-flipped weight blob or plan is
+refused, never silently served); structurally-broken artifacts raise
+:class:`ArtifactError`.  Both subclass ``ValueError``.
+
 Older artifacts load through a **migration hook chain**: ``_MIGRATIONS``
 maps each historical version to a function upgrading a manifest one
 version forward, applied in sequence until the current version is reached
 (v1 -> v2 renames "batches" to "specializations" and marks the source as
-absent).  A *future* version — or a manifest that is not valid JSON — is
-still rejected cleanly.  ``register_migration`` lets later builds extend
-the chain.
+absent; v2 -> v3 marks the checksums as absent — migrated manifests keep
+their inline plans and load unverified until re-saved).  A *future*
+version — or a manifest that is not valid JSON — is still rejected
+cleanly.  ``register_migration`` lets later builds extend the chain.
 """
 from __future__ import annotations
 
@@ -54,7 +66,8 @@ from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.store import (CheckpointStore, dir_checksums,
+                                    sha256_file)
 from repro.core.graph import Graph
 from repro.core.layout import Layout, LayoutKind
 from repro.core.local_search import ScheduleDatabase
@@ -65,7 +78,19 @@ from repro.engine.executor import CompiledModel, compile_model
 from repro.nn.init import Params, init_params
 
 ARTIFACT_FORMAT = "neocpu-inference-session"
-ARTIFACT_VERSION = 2
+ARTIFACT_VERSION = 3
+
+
+class ArtifactError(ValueError):
+    """A saved artifact cannot be loaded: missing, structurally invalid,
+    or from an unsupported version.  Subclasses ``ValueError`` so
+    pre-typed callers keep working."""
+
+
+class ArtifactCorruptError(ArtifactError):
+    """The artifact's bytes do not match what was saved: a checksum
+    mismatch, a truncated blob, or unparseable JSON.  Corrupt weights are
+    *refused*, never silently served."""
 
 # version -> hook upgrading a manifest from exactly that version to the
 # next one; load() walks the chain until ARTIFACT_VERSION is reached
@@ -90,6 +115,18 @@ def _migrate_v1_to_v2(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
     manifest["specializations"] = manifest.pop("batches")
     manifest["source"] = None
     manifest["version"] = 2
+    return manifest
+
+
+@register_migration(2)
+def _migrate_v2_to_v3(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
+    """v2 -> v3: per-file SHA-256 checksums and per-batch plan files.
+    Pre-v3 artifacts recorded neither, so "checksums" is marked absent
+    (the artifact loads unverified — re-save to gain integrity checking)
+    and the inline plan dicts stay where they are (the loader accepts
+    both inline plans and v3 file references)."""
+    manifest["checksums"] = None
+    manifest["version"] = 3
     return manifest
 
 
@@ -345,23 +382,26 @@ class InferenceSession:
         if not self._specialized:
             raise RuntimeError("nothing to save: session has no "
                                "specializations (call predict/specialize)")
-        path.mkdir(parents=True, exist_ok=True)
-        store = CheckpointStore(path / "weights")
+        import shutil
+
+        # build the whole artifact in a sibling temp dir and atomically
+        # swap it in: a crash at ANY point of save() leaves either the
+        # previous complete artifact or the new complete artifact at
+        # `path` — never a half-written mixture.  (This also makes re-save
+        # hygiene trivial: stale weight steps / a dropped source dir
+        # simply are not in the fresh tree.)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.parent / f".{path.name}.tmp-save"
+        if tmp.exists():
+            shutil.rmtree(tmp)           # leftover of a crashed save
+        tmp.mkdir()
+        store = CheckpointStore(tmp / "weights")
         for batch, m in self._specialized.items():
             store.save(step=batch, tree=_params_to_flat_ok(m.params),
                        meta={"batch": batch})
-        for stale in set(store.steps()) - set(self._specialized):
-            # re-saving into an existing artifact must not ship dead
-            # weight copies for batch sizes the manifest no longer lists
-            store.delete(stale)
         source = None
-        if not include_source and (path / "source").exists():
-            # same hygiene for the raw weights: a re-save that drops the
-            # source must not leave the previous save's copy behind
-            import shutil
-            shutil.rmtree(path / "source")
         if include_source:
-            src_store = CheckpointStore(path / "source")
+            src_store = CheckpointStore(tmp / "source")
             src_store.save(step=0, tree=_params_to_flat_ok(self._params),
                            meta={"kind": "logical-params"})
             source = {
@@ -373,6 +413,13 @@ class InferenceSession:
                              and self.pipeline.name in MODES else None),
                 "search_budget": list(self.search_budget),
             }
+        plans_dir = tmp / "plans"
+        plans_dir.mkdir()
+        specs = {}
+        for batch, m in self._specialized.items():
+            rel = f"plans/batch_{batch:05d}.json"
+            (tmp / rel).write_text(json.dumps(_plan_to_json(m.plan)))
+            specs[str(batch)] = {"file": rel}
         manifest = {
             "format": ARTIFACT_FORMAT,
             "version": ARTIFACT_VERSION,
@@ -385,19 +432,24 @@ class InferenceSession:
             "interpret": self.interpret,
             "dispatch": self.dispatch,
             "devices": self.devices,
-            "specializations": {str(b): _plan_to_json(m.plan)
-                                for b, m in self._specialized.items()},
+            "specializations": specs,
             "source": source,
             # measured winners only: analytical rankings are re-derivable
             # and would bloat the manifest by megabytes per workload set
             "db": self.db.to_blob(measured_only=True),
+            # every file except the manifest itself, verified on load
+            "checksums": dir_checksums(tmp),
         }
-        # atomic manifest install (same crash-safety stance as the
-        # CheckpointStore next to it): a killed save never leaves a
-        # truncated manifest behind complete weights
-        tmp = path / ".manifest.json.tmp"
-        tmp.write_text(json.dumps(manifest))
-        tmp.replace(path / "manifest.json")
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if path.exists():
+            old = path.parent / f".{path.name}.old-save"
+            if old.exists():
+                shutil.rmtree(old)
+            path.rename(old)
+            tmp.rename(path)
+            shutil.rmtree(old)
+        else:
+            tmp.rename(path)
         return path
 
     @classmethod
@@ -421,24 +473,31 @@ class InferenceSession:
         source-packed artifact."""
         path = Path(path)
         try:
-            manifest = json.loads((path / "manifest.json").read_text())
+            raw = (path / "manifest.json").read_text()
+        except FileNotFoundError as e:
+            raise ArtifactError(
+                f"{path} is not a saved artifact: no manifest.json "
+                f"({e})") from e
+        try:
+            manifest = json.loads(raw)
         except json.JSONDecodeError as e:
-            raise ValueError(
+            raise ArtifactCorruptError(
                 f"{path}/manifest.json is corrupt (not valid JSON): {e}"
             ) from e
         if (not isinstance(manifest, dict)
                 or manifest.get("format") != ARTIFACT_FORMAT):
-            raise ValueError(f"{path} is not a {ARTIFACT_FORMAT} artifact")
+            raise ArtifactError(f"{path} is not a {ARTIFACT_FORMAT} "
+                                "artifact")
         version = manifest.get("version")
         if not isinstance(version, int) or version > ARTIFACT_VERSION:
-            raise ValueError(
+            raise ArtifactError(
                 f"artifact version {version!r} is newer than this build "
                 f"supports ({ARTIFACT_VERSION}); re-save the session with "
                 "a matching version")
         while version < ARTIFACT_VERSION:
             hook = _MIGRATIONS.get(version)
             if hook is None:
-                raise ValueError(
+                raise ArtifactError(
                     f"artifact version {version} has no migration hook to "
                     f"{version + 1}; re-save the session with this build")
             try:
@@ -446,22 +505,45 @@ class InferenceSession:
             except (KeyError, TypeError, AttributeError) as e:
                 # a structurally-broken old manifest must reject as
                 # cleanly as a corrupt current one
-                raise ValueError(
+                raise ArtifactError(
                     f"artifact manifest is not a valid version {version}: "
                     f"{e!r}") from e
             if manifest.get("version") == version:   # buggy hook guard
-                raise ValueError(
+                raise ArtifactError(
                     f"migration hook for version {version} did not "
                     "advance the manifest version")
             version = manifest["version"]
+        # integrity gate: verify every checksummed file BEFORE
+        # deserializing anything — a flipped bit in a weight blob or plan
+        # is refused typed, never silently served.  Pre-v3 artifacts
+        # (checksums migrated to None) load unverified.
+        checksums = manifest.get("checksums")
+        if isinstance(checksums, dict):
+            for rel, want in checksums.items():
+                f = path / rel
+                if not f.is_file():
+                    raise ArtifactCorruptError(
+                        f"artifact file {rel} is listed in the manifest "
+                        f"checksums but missing from {path} (corrupt or "
+                        "partially-copied artifact)")
+                got = sha256_file(f)
+                if got != want:
+                    raise ArtifactCorruptError(
+                        f"artifact file {rel} is corrupt: sha256 {got} "
+                        f"does not match the manifest's {want}")
         db = ScheduleDatabase()
         db.load_blob(manifest.get("db", {}))
         source = manifest.get("source")
         graph = params = pipeline = None
         if source is not None:
             graph = _graph_from_json(source["graph"])
-            leaves, _, _ = CheckpointStore(path / "source").restore_flat(
-                step=0)
+            try:
+                leaves, _, _ = CheckpointStore(
+                    path / "source").restore_flat(step=0)
+            except (ValueError, FileNotFoundError, KeyError) as e:
+                raise ArtifactCorruptError(
+                    f"artifact source weights under {path}/source are "
+                    f"corrupt or incomplete: {e}") from e
             params = _params_from_flat(leaves)
             pipeline = Pipeline.preset(source.get("pipeline") or "fusion")
         saved_devices = manifest.get("devices", 1)
@@ -492,13 +574,34 @@ class InferenceSession:
         store = CheckpointStore(path / "weights")
         specs = manifest.get("specializations")
         if not isinstance(specs, dict):
-            raise ValueError(f"{path} manifest has no specializations "
-                             "table (corrupt artifact)")
+            raise ArtifactCorruptError(
+                f"{path} manifest has no specializations table (corrupt "
+                "artifact)")
         for bstr, plan_js in specs.items():
             batch = int(bstr)
-            leaves, _, _ = store.restore_flat(step=batch)
+            if isinstance(plan_js, dict) and set(plan_js) == {"file"}:
+                # v3: plan stored as an external per-batch file (already
+                # checksum-verified above when the manifest carries sums)
+                try:
+                    plan_js = json.loads((path / plan_js["file"])
+                                         .read_text())
+                except FileNotFoundError as e:
+                    raise ArtifactCorruptError(
+                        f"artifact plan for batch {batch} is missing: "
+                        f"{e}") from e
+                except json.JSONDecodeError as e:
+                    raise ArtifactCorruptError(
+                        f"artifact plan for batch {batch} is corrupt "
+                        f"(not valid JSON): {e}") from e
+            try:
+                plan = _plan_from_json(plan_js)
+                leaves, _, _ = store.restore_flat(step=batch)
+            except (ValueError, FileNotFoundError, KeyError) as e:
+                raise ArtifactCorruptError(
+                    f"artifact specialization for batch {batch} is "
+                    f"corrupt or incomplete: {e}") from e
             sess._specialized[batch] = CompiledModel(
-                plan=_plan_from_json(plan_js),
+                plan=plan,
                 params=_params_from_flat(leaves),
                 use_pallas=sess.use_pallas, interpret=sess.interpret,
                 dispatch=sess.dispatch, devices=sess.devices)

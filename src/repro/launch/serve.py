@@ -56,18 +56,26 @@ from repro.models.lm import model                          # noqa: E402
 def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
                    max_wait_ms: float = 2.0, max_queue: int = 64,
                    deadline_ms: float = None, workers: int = 1,
-                   pin=None):
+                   pin=None, shed: str = "newest",
+                   retry_budget: int = 2, backoff_ms: float = 10.0,
+                   watchdog_ms: float = None, show_health: bool = False):
     """Cold-start CNN serving through the async dynamic-batching driver:
     load the compiled session artifact, pump a stream of single-image
     requests through a bounded queue (client-side backpressure on
     ``QueueFullError``), and drain gracefully on shutdown.  The driver
     packs requests into the artifact's specialized batch sizes, so the
     whole run stays at zero schedule searches; ``workers > 1`` executes
-    batches concurrently through per-device program replicas."""
+    batches concurrently through per-device program replicas.
+
+    Fault-tolerance knobs map straight onto ``AsyncServer``: ``shed``
+    picks the overload policy, ``retry_budget``/``backoff_ms`` configure
+    crash-recovery retries, ``watchdog_ms`` arms the hung-batch watchdog
+    (set it well above a worst-case batch — buckets are pre-warmed here,
+    so JIT compilation cannot trip it)."""
     apply_serving_env()
     from repro.core.local_search import search_calls
     from repro.engine import (AsyncServer, DynamicBatchPolicy,
-                              InferenceSession, QueueFullError)
+                              InferenceSession, QueueFullError, RetryPolicy)
 
     if n_requests < 1:
         raise ValueError(f"--requests must be >= 1, got {n_requests}")
@@ -87,7 +95,10 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
     policy = DynamicBatchPolicy(max_batch=max_batch,
                                 max_wait_ms=max_wait_ms)
     server = AsyncServer(sess, policy, max_queue=max_queue,
-                         workers=workers, pin=pin)
+                         workers=workers, pin=pin, shed=shed,
+                         retry=RetryPolicy(budget=retry_budget,
+                                           backoff_ms=backoff_ms),
+                         watchdog_ms=watchdog_ms)
     t_serve0 = time.perf_counter()
     futures = []
     n_retries = 0
@@ -107,6 +118,9 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
         out = None
         for f in futures:
             out = f.result()
+        if show_health:
+            import json as _json
+            print("health:", _json.dumps(server.health(), indent=2))
     finally:
         server.close(drain=True)                  # graceful shutdown
     t_serve = time.perf_counter() - t_serve0
@@ -157,6 +171,23 @@ def main(argv=None):
                          "replicas behind one queue)")
     ap.add_argument("--pin-workers", action="store_true",
                     help="pin each worker thread to its own CPU set")
+    ap.add_argument("--shed", default="newest",
+                    choices=("newest", "oldest", "deadline"),
+                    help="overload policy when the queue is full: reject "
+                         "the newcomer, shed the oldest queued request, or "
+                         "shed the queued request closest to its deadline")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="re-executions a request may get after a worker "
+                         "crash or failed batch (0 disables retries)")
+    ap.add_argument("--backoff-ms", type=float, default=10.0,
+                    help="initial retry backoff (doubles per attempt, "
+                         "capped at 1 s)")
+    ap.add_argument("--watchdog-ms", type=float, default=None,
+                    help="hung-batch watchdog: a worker silent this long "
+                         "while holding a batch is restarted and its "
+                         "batch requeued (off by default)")
+    ap.add_argument("--health", action="store_true",
+                    help="print the server health() snapshot after the run")
     args = ap.parse_args(argv)
 
     if args.artifact:
@@ -166,7 +197,12 @@ def main(argv=None):
                               max_queue=args.max_queue,
                               deadline_ms=args.deadline_ms,
                               workers=args.workers,
-                              pin="auto" if args.pin_workers else None)
+                              pin="auto" if args.pin_workers else None,
+                              shed=args.shed,
+                              retry_budget=args.retry_budget,
+                              backoff_ms=args.backoff_ms,
+                              watchdog_ms=args.watchdog_ms,
+                              show_health=args.health)
 
     cfg = make_reduced(ARCHS[args.arch])
     params = model.init_params(cfg, jax.random.PRNGKey(0))

@@ -1,62 +1,37 @@
-"""Fault tolerance: heartbeats, failure detection, elastic re-meshing,
-straggler mitigation.
+"""Trainer-fleet fault tolerance — QUARANTINED seed remainder.
 
-Mechanism (what would run on a 1000+-node fleet):
+The live supervision primitives that used to be defined here —
+``HeartbeatMonitor``, ``StragglerPolicy``, ``StragglerMitigator`` — moved
+to :mod:`repro.engine.supervision` when the serving supervisor
+(``engine/serving.py``: crashed-worker restart, hung-batch watchdog,
+straggler eviction) became their first production consumer; they are
+re-exported here unchanged for the trainer demo
+(``examples/train_lm_fault_tolerant.py``) and existing imports.
 
-* every host posts a heartbeat each step; the supervisor declares a host
-  dead after ``timeout_s`` of silence;
-* on failure the supervisor (1) quiesces, (2) computes the largest valid
-  mesh over the survivors, (3) restores the latest checkpoint with the new
-  mesh's shardings (checkpoints are stored unsharded exactly for this),
-  (4) re-slices the deterministic data stream, (5) resumes — the training
-  trajectory is bit-identical to a run that had started on the small mesh
-  at that step;
-* stragglers (step time > factor x median) are first given fewer batch
-  rows (deterministic re-slice), then evicted like failures if they stay
-  slow.
-
-The decision logic is pure and unit-tested; the demo example drives it
-with injected failures on the CPU device.
+What *stays* in this module is the trainer-only elastic-remesh logic —
+:func:`plan_elastic_mesh` and :func:`rebalanced_batch_split` — which has
+exactly one consumer, the training-loop demo.  The inference-serving
+stack (the repo's north star) does not use it: serving recovery is
+restart-and-requeue (see ``docs/api.md`` "Failure modes and guarantees"),
+not mesh shrinking, because inference workers hold no sharded state worth
+re-meshing around.  Kept as a working demo of the elastic-restart story
+(checkpoints are stored unsharded exactly so a smaller mesh can restore
+them), not as a serving dependency; delete alongside the trainer demo if
+that path is ever dropped.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
+
+from repro.engine.supervision import (HeartbeatMonitor, StragglerMitigator,
+                                      StragglerPolicy)
+
+__all__ = ["HeartbeatMonitor", "StragglerMitigator", "StragglerPolicy",
+           "plan_elastic_mesh", "rebalanced_batch_split"]
 
 
 # ---------------------------------------------------------------------------
-# Heartbeats
-# ---------------------------------------------------------------------------
-
-class HeartbeatMonitor:
-    def __init__(self, hosts: Sequence[int], timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
-        self.timeout_s = timeout_s
-        self.clock = clock
-        now = clock()
-        self.last_seen: Dict[int, float] = {h: now for h in hosts}
-        self.dead: set = set()
-
-    def beat(self, host: int) -> None:
-        if host not in self.dead:
-            self.last_seen[host] = self.clock()
-
-    def check(self) -> List[int]:
-        """Returns hosts newly declared dead."""
-        now = self.clock()
-        newly = [h for h, t in self.last_seen.items()
-                 if h not in self.dead and now - t > self.timeout_s]
-        self.dead.update(newly)
-        return newly
-
-    @property
-    def alive(self) -> List[int]:
-        return sorted(h for h in self.last_seen if h not in self.dead)
-
-
-# ---------------------------------------------------------------------------
-# Elastic mesh planning
+# Elastic mesh planning (trainer demo only)
 # ---------------------------------------------------------------------------
 
 def plan_elastic_mesh(n_devices: int, *, model_axis: int,
@@ -89,57 +64,3 @@ def rebalanced_batch_split(global_batch: int, weights: Sequence[float]
     for i in range(rem):
         out[order[i % len(order)]] += 1
     return out
-
-
-# ---------------------------------------------------------------------------
-# Straggler detection
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class StragglerPolicy:
-    slow_factor: float = 1.5     # step_time > factor x median -> straggler
-    evict_after: int = 3         # consecutive straggler steps -> evict
-    window: int = 5              # smoothing window
-
-
-class StragglerMitigator:
-    def __init__(self, hosts: Sequence[int],
-                 policy: StragglerPolicy = StragglerPolicy()):
-        self.policy = policy
-        self.history: Dict[int, List[float]] = {h: [] for h in hosts}
-        self.strikes: Dict[int, int] = {h: 0 for h in hosts}
-
-    def record(self, times: Dict[int, float]) -> None:
-        for h, t in times.items():
-            hist = self.history.setdefault(h, [])
-            hist.append(t)
-            del hist[:-self.policy.window]
-
-    def _avg(self, h: int) -> float:
-        hist = self.history[h] or [0.0]
-        return sum(hist) / len(hist)
-
-    def stragglers(self) -> List[int]:
-        avgs = {h: self._avg(h) for h in self.history}
-        med = sorted(avgs.values())[len(avgs) // 2]
-        out = []
-        for h, t in avgs.items():
-            if med > 0 and t > self.policy.slow_factor * med:
-                self.strikes[h] = self.strikes.get(h, 0) + 1
-                out.append(h)
-            else:
-                self.strikes[h] = 0
-        return out
-
-    def evictions(self) -> List[int]:
-        return [h for h, s in self.strikes.items()
-                if s >= self.policy.evict_after]
-
-    def batch_weights(self) -> Dict[int, float]:
-        """1/step-time weights for rebalanced_batch_split (tier-1
-        mitigation: slow hosts get proportionally fewer rows)."""
-        return {h: 1.0 / max(self._avg(h), 1e-6) for h in self.history}
-
-    def drop(self, host: int) -> None:
-        self.history.pop(host, None)
-        self.strikes.pop(host, None)

@@ -1,0 +1,446 @@
+"""Fault-injection suite for the serving stack: scripted crashes, failed
+batches, stragglers, retries/backoff, load shedding, supervisor restarts,
+the hung-batch watchdog, and close() robustness.
+
+Deterministic wherever possible: the manual-pump servers run on a fake
+clock with zero sleeps.  The supervisor/watchdog tests need real threads
+(that is the thing under test) but keep all timing generous and bounded.
+
+Kept on its own short-timeout CI lane — a hang here must fail fast."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.engine import (AllWorkersUnhealthyError, AsyncServer,
+                          DeadlineExceededError, DelayBatch,
+                          DynamicBatchPolicy, FailBatch, FaultInjector,
+                          InjectedPredictError, InjectedWorkerCrash,
+                          KillWorker, LoadShedError, QueueFullError,
+                          RetriesExhaustedError, RetryPolicy,
+                          padded_predict)
+from repro.engine import compile as compile_session
+
+
+def _mini_net():
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=8, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("r1", "relu", ["c1"])
+    g.add("gap", "global_avg_pool", ["r1"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=10)
+    g.mark_output("fc")
+    return g, {"in": (1, 3, 16, 16)}
+
+
+@pytest.fixture(scope="module")
+def session():
+    g, shapes = _mini_net()
+    sess = compile_session(g, shapes)
+    sess.specialize(4)
+    return sess
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _x(rng, rows=1):
+    return jnp.asarray(rng.normal(size=(rows, 3, 16, 16))
+                       .astype(np.float32))
+
+
+def _manual(session, **kw):
+    clock = FakeClock()
+    kw.setdefault("policy", DynamicBatchPolicy(max_batch=4,
+                                               max_wait_ms=10.0))
+    policy = kw.pop("policy")
+    srv = AsyncServer(session, policy, clock=clock, autostart=False,
+                      sleep=lambda s: None, **kw)
+    return srv, clock
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector matching semantics (pure)
+# ---------------------------------------------------------------------------
+
+def test_injector_matching_and_budgets():
+    inj = FaultInjector(FailBatch(on_batch=2),
+                        KillWorker(worker=1, times=2),
+                        DelayBatch(times=None))
+    # batch 0, worker 0: only the unlimited delay matches
+    inj.fire(0, 0, sleep=lambda s: None)
+    assert inj.fired_kinds() == ["DelayBatch"]
+    # batch 2 matches the FailBatch once; its budget then hits zero
+    with pytest.raises(InjectedPredictError):
+        inj.fire(0, 2, sleep=lambda s: None)
+    inj.fire(0, 2, sleep=lambda s: None)        # budget spent: no raise
+    # worker pin: kills worker 1 twice, then never again
+    with pytest.raises(InjectedWorkerCrash):
+        inj.fire(1, 5, sleep=lambda s: None)
+    with pytest.raises(InjectedWorkerCrash):
+        inj.fire(1, 6, sleep=lambda s: None)
+    inj.fire(1, 7, sleep=lambda s: None)
+    kinds = inj.fired_kinds()
+    assert kinds.count("KillWorker") == 2
+    assert kinds.count("FailBatch") == 1
+
+
+def test_injector_delay_sleeps_before_raise():
+    slept = []
+    inj = FaultInjector(DelayBatch(delay_ms=30.0), FailBatch())
+    with pytest.raises(InjectedPredictError):
+        inj.fire(0, 0, sleep=slept.append)
+    assert slept == [pytest.approx(0.030)]
+
+
+# ---------------------------------------------------------------------------
+# Retries: failed/killed batches requeue with backoff, results stay
+# bit-identical; past the budget the future fails typed with the cause
+# ---------------------------------------------------------------------------
+
+def test_failed_batch_retries_bit_identical(session, rng):
+    x = _x(rng)
+    ref = np.asarray(padded_predict(session, x, bucket=1))
+    srv, clock = _manual(session,
+                         faults=FaultInjector(FailBatch(on_batch=0)),
+                         retry=RetryPolicy(budget=2, backoff_ms=10.0))
+    fut = srv.submit(x)
+    clock.advance_ms(10.1)
+    assert srv.step()                        # batch 0: injected failure
+    assert not fut.done()                    # requeued, not failed
+    assert not srv.step()                    # backoff gate holds it
+    clock.advance_ms(10.1)
+    assert srv.step()                        # retry executes clean
+    assert np.asarray(fut.result(0)).tobytes() == ref.tobytes(), \
+        "completed-after-retry response drifted from padded_predict"
+    assert srv.stats.n_retried == 1
+    assert srv.stats.n_failed == 0
+    srv.close()
+
+
+def test_killed_worker_batch_requeued_and_retried(session, rng):
+    x = _x(rng)
+    ref = np.asarray(padded_predict(session, x, bucket=1))
+    srv, clock = _manual(session,
+                         faults=FaultInjector(KillWorker(on_batch=0)),
+                         retry=RetryPolicy(budget=1, backoff_ms=5.0))
+    fut = srv.submit(x)
+    clock.advance_ms(10.1)
+    assert srv.step()                        # crash counted, batch requeued
+    assert srv.stats.n_worker_crashes == 1
+    clock.advance_ms(5.1)
+    assert srv.step()
+    assert np.asarray(fut.result(0)).tobytes() == ref.tobytes()
+    srv.close()
+
+
+def test_retries_exhausted_typed_with_cause(session, rng):
+    srv, clock = _manual(session,
+                         faults=FaultInjector(FailBatch(times=None)),
+                         retry=RetryPolicy(budget=2, backoff_ms=10.0))
+    fut = srv.submit(_x(rng))
+    for _ in range(3):                       # first attempt + 2 retries
+        clock.advance_ms(21.0)               # > max_wait and > max backoff
+        assert srv.step()
+    with pytest.raises(RetriesExhaustedError) as ei:
+        fut.result(0)
+    assert isinstance(ei.value.__cause__, InjectedPredictError)
+    assert srv.stats.n_retried == 2
+    assert srv.stats.n_retries_exhausted == 1
+    assert srv.stats.n_failed == 1
+    srv.close()
+
+
+def test_budget_zero_fails_with_original_exception(session, rng):
+    """retry budget 0 = the pre-supervision contract: the future fails
+    with the underlying exception itself, not a retry wrapper."""
+    srv, clock = _manual(session,
+                         faults=FaultInjector(FailBatch()),
+                         retry=RetryPolicy(budget=0))
+    fut = srv.submit(_x(rng))
+    clock.advance_ms(10.1)
+    assert srv.step()
+    with pytest.raises(InjectedPredictError):
+        fut.result(0)
+    assert srv.stats.n_retried == 0
+    srv.close()
+
+
+def test_retry_backoff_does_not_starve_healthy_requests(session, rng):
+    """FIFO is strict, so a backing-off head blocks the queue — but only
+    until its gate passes; nothing is reordered or lost."""
+    srv, clock = _manual(session,
+                         faults=FaultInjector(FailBatch(on_batch=0)),
+                         retry=RetryPolicy(budget=2, backoff_ms=50.0))
+    f1 = srv.submit(_x(rng))
+    clock.advance_ms(10.1)
+    assert srv.step()                        # f1 fails, backs off 50 ms
+    f2 = srv.submit(_x(rng))
+    clock.advance_ms(10.1)                   # f2 ready but behind the gate
+    assert not srv.step()
+    clock.advance_ms(40.1)
+    assert srv.step()                        # gate passed: f1+f2 pack FIFO
+    assert f1.done() and f2.done()
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Load shedding + deadline-aware admission
+# ---------------------------------------------------------------------------
+
+def test_shed_oldest_evicts_head_admits_newcomer(session, rng):
+    srv, clock = _manual(session, max_queue=2, shed="oldest")
+    f0, f1 = srv.submit(_x(rng)), srv.submit(_x(rng))
+    f2 = srv.submit(_x(rng))                 # full: f0 shed, f2 admitted
+    with pytest.raises(LoadShedError):
+        f0.result(0)
+    assert len(srv) == 2
+    assert srv.stats.n_shed == 1
+    clock.advance_ms(10.1)
+    assert srv.step()
+    assert f1.done() and f2.done()
+    srv.close()
+
+
+def test_shed_deadline_evicts_tightest_deadline(session, rng):
+    srv, clock = _manual(session, max_queue=2, shed="deadline")
+    f_loose = srv.submit(_x(rng), deadline_ms=500.0)
+    f_tight = srv.submit(_x(rng), deadline_ms=20.0)
+    f_new = srv.submit(_x(rng))
+    with pytest.raises(LoadShedError):
+        f_tight.result(0)                    # closest to missing its SLO
+    clock.advance_ms(10.1)
+    assert srv.step()
+    assert f_loose.done() and f_new.done()
+    # with nothing deadlined the policy degrades to rejecting the newcomer
+    srv2, _ = _manual(session, max_queue=1, shed="deadline")
+    srv2.submit(_x(rng))
+    with pytest.raises(QueueFullError):
+        srv2.submit(_x(rng))
+    srv.close()
+    srv2.close()
+
+
+def test_expired_deadline_rejected_at_admission(session, rng):
+    srv, clock = _manual(session)
+    with pytest.raises(DeadlineExceededError):
+        srv.submit(_x(rng), deadline_ms=0.0)
+    with pytest.raises(DeadlineExceededError):
+        srv.submit(_x(rng), deadline_ms=-5.0)
+    assert srv.stats.n_deadline_expired == 2
+    assert len(srv) == 0                     # never queued
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# close() robustness (satellite): terminates under faults, idempotent
+# ---------------------------------------------------------------------------
+
+def test_close_drain_terminates_when_batches_keep_failing(session, rng):
+    """drain=True with an always-failing batch must terminate: retry
+    budgets bound the pump, leftovers fail typed."""
+    srv, clock = _manual(session,
+                         faults=FaultInjector(FailBatch(times=None)),
+                         retry=RetryPolicy(budget=2, backoff_ms=10.0))
+    futs = [srv.submit(_x(rng)) for _ in range(3)]
+    srv.close(drain=True)                    # must return, not hang
+    assert all(f.done() for f in futs)
+    for f in futs:
+        with pytest.raises(RetriesExhaustedError):
+            f.result(0)
+    assert srv.closed
+
+
+def test_close_drain_terminates_with_dead_worker_thread(session, rng):
+    """Real-thread regression: the worker dies on its first batch; close
+    (drain=True) must finish the rest on the closing thread."""
+    xs = [_x(rng) for _ in range(4)]
+    refs = [np.asarray(padded_predict(session, x, bucket=1)) for x in xs]
+    srv = AsyncServer(session, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=0.0),
+                      faults=FaultInjector(KillWorker(on_batch=0)),
+                      retry=RetryPolicy(budget=2, backoff_ms=1.0),
+                      max_restarts=0, workers=1)
+    futs = [srv.submit(x) for x in xs]
+    srv.close(drain=True, timeout=30)
+    out = [np.asarray(f.result(0)) for f in futs]
+    for got, ref in zip(out, refs):
+        assert got.tobytes() == ref.tobytes()
+    assert srv.stats.n_completed == 4
+
+
+def test_close_idempotent_and_reentrant(session, rng):
+    srv, clock = _manual(session)
+    fut = srv.submit(_x(rng))
+    srv.close(drain=True)
+    srv.close(drain=True)                    # second close: no-op
+    srv.close(drain=False)
+    assert fut.done()
+    assert srv.closed
+
+
+# ---------------------------------------------------------------------------
+# Supervision with real threads: restart, eviction, degradation
+# ---------------------------------------------------------------------------
+
+def _wait_until(pred, timeout=30.0, step=0.01):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(step)
+    return pred()
+
+
+def test_supervisor_restarts_crashed_worker(session, rng):
+    """An injected worker kill loses nothing: the supervisor restarts the
+    slot and the requeued request completes bit-identically."""
+    xs = [_x(rng) for _ in range(6)]
+    refs = [np.asarray(padded_predict(session, x, bucket=1)) for x in xs]
+    srv = AsyncServer(session, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=0.0),
+                      faults=FaultInjector(KillWorker(on_batch=1)),
+                      retry=RetryPolicy(budget=2, backoff_ms=1.0),
+                      workers=1, max_restarts=2)
+    futs = [srv.submit(x) for x in xs]
+    for f, ref in zip(futs, refs):
+        assert np.asarray(f.result(timeout=60)).tobytes() == ref.tobytes()
+    assert _wait_until(lambda: srv.stats.n_worker_restarts >= 1)
+    h = srv.health()
+    assert h["workers"]["alive"] == 1
+    assert h["counters"]["n_worker_crashes"] >= 1
+    srv.close()
+    assert srv.stats.n_completed == 6
+
+
+def test_repeated_crashes_mark_unhealthy_and_degrade(session, rng):
+    """A slot that keeps dying past max_restarts goes unhealthy; with no
+    survivors the server fails pending + new work typed instead of
+    accepting requests it can never serve."""
+    srv = AsyncServer(session, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=0.0),
+                      faults=FaultInjector(KillWorker(times=None)),
+                      retry=RetryPolicy(budget=1, backoff_ms=1.0),
+                      workers=1, max_restarts=1)
+    futs = [srv.submit(_x(rng)) for _ in range(3)]
+    assert _wait_until(lambda: srv.health()["workers"]["unhealthy"] == [0])
+    assert _wait_until(lambda: all(f.done() for f in futs))
+    for f in futs:
+        with pytest.raises((RetriesExhaustedError,
+                            AllWorkersUnhealthyError)):
+            f.result(0)
+    with pytest.raises(AllWorkersUnhealthyError):
+        srv.submit(_x(rng))
+    assert srv.stats.n_worker_restarts == 1
+    srv.close()
+
+
+def test_multi_worker_degrades_to_survivors(session, rng):
+    """Killing every batch on worker 0 evicts only that slot; worker 1
+    keeps serving (graceful degradation, not an outage)."""
+    xs = [_x(rng) for _ in range(8)]
+    refs = [np.asarray(padded_predict(session, x, bucket=1)) for x in xs]
+    srv = AsyncServer(session, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=0.0),
+                      faults=FaultInjector(
+                          KillWorker(worker=0, times=None)),
+                      retry=RetryPolicy(budget=4, backoff_ms=1.0),
+                      workers=2, max_restarts=1)
+    futs = [srv.submit(x) for x in xs]
+    for f, ref in zip(futs, refs):
+        assert np.asarray(f.result(timeout=60)).tobytes() == ref.tobytes()
+    srv.close()
+    h = srv.health()
+    assert h["counters"]["n_completed"] == 8
+
+
+# ---------------------------------------------------------------------------
+# Hung-batch watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_requeues_hung_batch(session, rng):
+    """A worker stalled mid-batch past the watchdog gets superseded and
+    its batch re-executed; the client still gets the bit-identical
+    result (first resolution wins)."""
+    x = _x(rng)
+    ref = np.asarray(padded_predict(session, x, bucket=1))
+    for b in session.batch_sizes:            # pre-warm: JIT must not trip
+        session.specialize(b).predict(jnp.zeros((b, 3, 16, 16),
+                                                jnp.float32))
+    srv = AsyncServer(session, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=0.0),
+                      faults=FaultInjector(
+                          DelayBatch(on_batch=0, delay_ms=1500.0)),
+                      retry=RetryPolicy(budget=2, backoff_ms=1.0),
+                      workers=1, max_restarts=2, watchdog_ms=150.0)
+    fut = srv.submit(x)
+    assert np.asarray(fut.result(timeout=60)).tobytes() == ref.tobytes()
+    assert _wait_until(lambda: srv.stats.n_hung_requeued >= 1)
+    assert srv.stats.n_worker_restarts >= 1
+    srv.close()
+
+
+def test_watchdog_leaves_idle_workers_alone(session, rng):
+    """Idle silence is not a hang: with no traffic for several watchdog
+    windows, no restarts fire and the worker still serves afterwards."""
+    srv = AsyncServer(session, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=0.0),
+                      workers=1, watchdog_ms=50.0)
+    time.sleep(0.3)                          # several silent windows
+    assert srv.stats.n_hung_requeued == 0
+    assert srv.stats.n_worker_restarts == 0
+    fut = srv.submit(_x(rng))
+    assert np.asarray(fut.result(timeout=60)).shape[0] == 1
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# health()
+# ---------------------------------------------------------------------------
+
+def test_health_snapshot_shape(session, rng):
+    srv, clock = _manual(session, shed="oldest",
+                         retry=RetryPolicy(budget=3))
+    srv.submit(_x(rng))
+    h = srv.health()
+    assert h["queue_depth"] == 1
+    assert h["workers"]["configured"] == 1
+    assert h["shed_policy"] == "oldest"
+    assert h["retry_budget"] == 3
+    assert not h["closed"] and not h["draining"]
+    for k in ("n_submitted", "n_retried", "n_shed", "n_worker_crashes",
+              "n_worker_restarts", "n_hung_requeued"):
+        assert k in h["counters"]
+    srv.close()
+    assert srv.health()["closed"]
+
+
+def test_stats_to_json_carries_fault_counters(session, rng):
+    srv, clock = _manual(session,
+                         faults=FaultInjector(FailBatch(on_batch=0)),
+                         retry=RetryPolicy(budget=1, backoff_ms=5.0))
+    fut = srv.submit(_x(rng))
+    clock.advance_ms(10.1)
+    srv.step()
+    clock.advance_ms(5.1)
+    srv.step()
+    fut.result(0)
+    js = srv.stats.to_json()
+    assert js["n_retried"] == 1
+    for k in ("n_retries_exhausted", "n_shed", "n_worker_crashes",
+              "n_worker_restarts", "n_hung_requeued"):
+        assert k in js
+    srv.close()

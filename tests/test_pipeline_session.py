@@ -208,19 +208,25 @@ def test_frozen_session_rejects_unknown_batch(tmp_path, rng):
 # ---------------------------------------------------------------------------
 
 def _downgrade_to_v1(art):
-    """Rewrite a saved v2 artifact into the v1 on-disk format (per-batch
-    plans under "batches", no source section) — the fixture the migration
-    chain upgrades."""
+    """Rewrite a saved v3 artifact into the v1 on-disk format (per-batch
+    plans inline under "batches", no source section, no checksums, no
+    plans/ dir) — the fixture the v1->v2->v3 migration chain upgrades."""
     import shutil
 
     mf = art / "manifest.json"
     blob = json.loads(mf.read_text())
-    blob["batches"] = blob.pop("specializations")
+    specs = blob.pop("specializations")
+    blob["batches"] = {
+        b: (json.loads((art / p["file"]).read_text())
+            if isinstance(p, dict) and set(p) == {"file"} else p)
+        for b, p in specs.items()}
     blob.pop("source", None)
+    blob.pop("checksums", None)
     blob["version"] = 1
     mf.write_text(json.dumps(blob))
-    if (art / "source").exists():
-        shutil.rmtree(art / "source")
+    for sub in ("source", "plans"):
+        if (art / sub).exists():
+            shutil.rmtree(art / sub)
 
 
 def test_artifact_v1_migration_roundtrip(tmp_path, rng):

@@ -1,0 +1,145 @@
+"""Direct unit tests for the pure supervision decision logic
+(``engine/supervision.py``): heartbeats (including the serving watchdog's
+revive path), straggler strikes/evictions, retry backoff math, and the
+overload shed-victim policies.  Everything runs on injected fake clocks —
+no threads, no jax, no sleeps."""
+import pytest
+
+from repro.engine.supervision import (HeartbeatMonitor, RetryPolicy,
+                                      SHED_POLICIES, StragglerMitigator,
+                                      StragglerPolicy, choose_shed_victim)
+
+
+class Clock:
+    def __init__(self, t=100.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_silence_declares_dead_once():
+    c = Clock()
+    mon = HeartbeatMonitor([0, 1, 2], timeout_s=1.0, clock=c)
+    c.t += 0.5
+    mon.beat(1)
+    c.t += 0.6                       # 0 and 2 silent 1.1 s, 1 only 0.6 s
+    assert mon.check() == [0, 2]
+    assert mon.check() == []         # newly-dead reported exactly once
+    assert mon.alive == [1]
+
+
+def test_heartbeat_dead_host_beats_ignored_until_revive():
+    c = Clock()
+    mon = HeartbeatMonitor([0], timeout_s=1.0, clock=c)
+    c.t += 2.0
+    assert mon.check() == [0]
+    mon.beat(0)                      # a zombie's beat must not resurrect
+    assert mon.alive == []
+    mon.revive(0)                    # the supervisor's explicit decision
+    assert mon.alive == [0]
+    c.t += 0.5
+    assert mon.check() == []         # revive reset the silence window
+    c.t += 0.6
+    assert mon.check() == [0]        # and the timeout applies again
+
+
+def test_heartbeat_revive_idle_worker_pattern():
+    """The serving watchdog's idle path: silence without an in-flight
+    batch is revived each check, so an idle worker is never killed."""
+    c = Clock()
+    mon = HeartbeatMonitor([0], timeout_s=0.1, clock=c)
+    for _ in range(5):
+        c.t += 0.2
+        for h in mon.check():
+            mon.revive(h)            # "no inflight batch -> idle"
+    assert mon.alive == [0]
+
+
+# ---------------------------------------------------------------------------
+# StragglerMitigator
+# ---------------------------------------------------------------------------
+
+def test_straggler_strikes_and_eviction():
+    pol = StragglerPolicy(slow_factor=1.5, evict_after=2, window=3)
+    mit = StragglerMitigator([0, 1, 2], pol)
+    for _ in range(3):
+        mit.record({0: 1.0, 1: 1.0, 2: 5.0})
+    assert mit.stragglers() == [2]
+    assert mit.evictions() == []     # one strike, needs two
+    mit.record({0: 1.0, 1: 1.0, 2: 5.0})
+    assert mit.stragglers() == [2]
+    assert mit.evictions() == [2]
+    mit.drop(2)                      # evicted: stops skewing the median
+    assert 2 not in mit.history and mit.stragglers() == []
+
+
+def test_straggler_recovery_resets_strikes():
+    pol = StragglerPolicy(slow_factor=1.5, evict_after=2, window=2)
+    mit = StragglerMitigator([0, 1, 2], pol)
+    mit.record({0: 1.0, 1: 1.0, 2: 5.0})
+    assert mit.stragglers() == [2]
+    mit.record({0: 1.0, 1: 1.0, 2: 1.0})
+    mit.record({0: 1.0, 1: 1.0, 2: 1.0})   # window=2 forgets the slow one
+    assert mit.stragglers() == []
+    assert mit.evictions() == []     # strike counter reset on recovery
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_backoff_exponential_and_capped():
+    rp = RetryPolicy(budget=5, backoff_ms=10.0, backoff_factor=2.0,
+                     max_backoff_ms=50.0)
+    assert rp.backoff_s(1) == pytest.approx(0.010)
+    assert rp.backoff_s(2) == pytest.approx(0.020)
+    assert rp.backoff_s(3) == pytest.approx(0.040)
+    assert rp.backoff_s(4) == pytest.approx(0.050)   # capped
+    assert rp.backoff_s(9) == pytest.approx(0.050)
+    with pytest.raises(ValueError, match="1-based"):
+        rp.backoff_s(0)
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="budget"):
+        RetryPolicy(budget=-1)
+    with pytest.raises(ValueError, match="backoff"):
+        RetryPolicy(backoff_factor=0.5)
+    RetryPolicy(budget=0)            # retries-off is a legal config
+
+
+# ---------------------------------------------------------------------------
+# choose_shed_victim
+# ---------------------------------------------------------------------------
+
+class _Req:
+    def __init__(self, deadline=None):
+        self.deadline = deadline
+
+
+def test_shed_newest_rejects_incoming():
+    assert choose_shed_victim([_Req(), _Req()], "newest") is None
+
+
+def test_shed_oldest_evicts_queue_head():
+    assert choose_shed_victim([_Req(), _Req()], "oldest") == 0
+
+
+def test_shed_deadline_picks_tightest_deadline():
+    q = [_Req(deadline=5.0), _Req(deadline=None), _Req(deadline=2.0),
+         _Req(deadline=9.0)]
+    assert choose_shed_victim(q, "deadline") == 2
+    # nothing deadlined: degrade to "newest" (reject incoming)
+    assert choose_shed_victim([_Req(), _Req()], "deadline") is None
+
+
+def test_shed_empty_queue_and_unknown_policy():
+    assert choose_shed_victim([], "oldest") is None
+    with pytest.raises(ValueError, match="shed"):
+        choose_shed_victim([_Req()], "lifo")
+    assert set(SHED_POLICIES) == {"newest", "oldest", "deadline"}
