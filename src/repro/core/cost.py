@@ -77,7 +77,7 @@ def conv_vmem_bytes(wl: ConvWorkload, s: ConvSchedule) -> int:
     w_pad = wl.width + 2 * wl.pw
     b = wl.dtype_bytes
     inp = h_pad * w_pad * s.ic_bn * b
-    ker = wl.kh * wl.kw * s.ic_bn * s.oc_bn * b
+    ker = wl.kh * wl.kw * s.ic_bn * s.oc_bn * (1 if s.dtype == "int8" else b)
     outp = s.oh_bn * ow * s.oc_bn * 4  # fp32 accum
     return inp + ker + outp
 
@@ -130,7 +130,13 @@ def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
     ic_chunks = cin // s.ic_bn
     input_once = wl.batch * cin * wl.height * wl.width * b
     input_bytes = input_once * oc_chunks
-    weight_bytes = (wl.out_channels * cin * wl.kh * wl.kw * b) * wl.batch
+    # dtype="int8" stores the weight as 1-byte quantization codes — 4x
+    # denser weight traffic (the accumulator stays 4 bytes either way:
+    # int32 and fp32 are the same width, so acc_bytes below is unchanged);
+    # the per-channel dequant multiply rides the fused epilogue pass for
+    # free, like a BN scale.
+    wb = 1 if s.dtype == "int8" else b
+    weight_bytes = (wl.out_channels * cin * wl.kh * wl.kw * wb) * wl.batch
     # stored output: the fused pooling reduction shrinks the final store to
     # the pooled tiling (the conv-resolution tensor never reaches HBM); the
     # extra input-channel accumulation passes still run at conv resolution

@@ -27,6 +27,15 @@ Epilogue application order is fixed:
     acc = relu(acc)                    # before pooling, as in the zoo graphs
     acc = pool(acc)                    # spatial reduction on the fp32 tile
     out[.., off:off+C, ..] = acc       # channel-offset store (concat fusion)
+
+The per-channel ``scale`` operand has two producers, folded the same way
+at bind time: the absorbed BN scale, and (``ConvSchedule.dtype="int8"``)
+the weight-dequantize scale of the quantized template — the int8
+accumulator holds integer-code contractions, so multiplying by the
+quantization scale in the affine stage reconstructs the fp32 conv, and
+every template variant gets the dequant epilogue for free from the one
+shared implementation (:func:`fold_dequant_scale` composes the two when a
+conv carries both).
 """
 from __future__ import annotations
 
@@ -143,3 +152,16 @@ class EpilogueSpec:
 
 
 IDENTITY = EpilogueSpec()
+
+
+def fold_dequant_scale(scale, w_scale):
+    """Fold a per-output-channel weight-dequantize scale into the epilogue's
+    ``scale`` operand, exactly the way BN folding composes at bind time:
+    scales multiply (the affine stage applies their product once), and an
+    absent epilogue scale just becomes the dequant scale.  Shift is
+    untouched — dequantization is purely multiplicative (symmetric
+    quantization has no zero-point)."""
+    if w_scale is None:
+        return scale
+    w_scale = jnp.asarray(w_scale, jnp.float32)
+    return w_scale if scale is None else scale * w_scale

@@ -26,6 +26,14 @@ from repro.core.schedule import ConvSchedule, ConvWorkload, candidate_schedules
 
 Runner = Callable[[ConvWorkload, ConvSchedule], float]
 
+# Two schedules whose wall-clocks are within this relative tolerance are
+# indistinguishable on this host (OS jitter on a ~3-repeat measurement);
+# guided search breaks such ties with the analytical model instead of the
+# noise.  The model is dtype-aware — it prices int8's 4x-lighter weight
+# traffic — so on workloads where the host shows no measurable difference
+# the tie resolves toward the denser encoding.
+MEASURE_NOISE_FLOOR = 0.02
+
 # Process-wide spy: how many actual searches (not memo hits) have run.  A
 # session loaded from a saved artifact must go load -> predict without any
 # schedule search; tests and the CI cross-process smoke assert on these.
@@ -59,15 +67,27 @@ def measured_runner(wl: ConvWorkload, s: ConvSchedule, repeats: int = 3) -> floa
     pad = wl.pad if wl.pad_w < 0 else (wl.pad, wl.pw)
     x = jnp.asarray(rng.normal(size=(wl.batch, cin, wl.height, wl.width))
                     .astype(np.float32))
-    w = jnp.asarray(rng.normal(
-        size=(wl.out_channels, cin, wl.kh, wl.kw)).astype(np.float32))
+    w = rng.normal(
+        size=(wl.out_channels, cin, wl.kh, wl.kw)).astype(np.float32)
+    int8 = getattr(s, "dtype", "fp32") == "int8"
+    w_scale = None
+    if int8:
+        # measure exactly what the engine binds: int8 weight codes through
+        # the blocked layout, dequant scale on the epilogue scale operand
+        from repro.core.quantize import quantize_per_channel
+
+        wq, w_scale = quantize_per_channel(w, axis=0)
+        w = wq
     xb = to_nchwc(x, s.ic_bn)
-    wb = kernel_to_kcrs_ck(w, s.ic_bn, s.oc_bn)
+    wb = kernel_to_kcrs_ck(jnp.asarray(w), s.ic_bn, s.oc_bn)
     fused = (wl.fused_bn or wl.fused_relu or wl.fused_residual
              or bool(wl.fused_pool) or wl.concat_total > 0)
-    if fused:
+    if fused or int8:
         oh, ow = wl.out_hw
         ko = wl.out_channels // s.oc_bn
+        scale = None
+        if int8:
+            scale = jnp.asarray(w_scale.reshape(ko, s.oc_bn))
         shift = jnp.asarray(rng.normal(size=(ko, s.oc_bn)).astype(np.float32))
         residual = None
         if wl.fused_residual:
@@ -81,9 +101,9 @@ def measured_runner(wl: ConvWorkload, s: ConvSchedule, repeats: int = 3) -> floa
                 (wl.batch, wl.concat_total // s.oc_bn, poh, pow_, s.oc_bn),
                 dtype=jnp.float32)
         f = lambda: conv2d_block_jnp(
-            xb, wb, None, shift if wl.fused_bn else None, residual,
+            xb, wb, scale, shift if wl.fused_bn else None, residual,
             out_buf, stride=wl.stride, pad=pad, epilogue=spec,
-            variant=s.variant)
+            variant=s.variant, dtype=getattr(s, "dtype", "fp32"))
     else:
         f = lambda: conv2d_nchwc_jnp(xb, wb, stride=wl.stride, pad=pad,
                                      variant=s.variant)
@@ -157,15 +177,20 @@ def guided_local_search(wl: ConvWorkload, top_k: int = 6,
     survivors.  Used by the --measured benchmarks on this host CPU.
 
     The shortlist is the roofline top-``top_k`` *plus* the best
-    ``per_variant`` candidates of every lowering variant, so a variant the
-    analytical model underrates still gets measured — the whole point of
-    the variant axis is that the measurement, not the model, picks it.
-    Candidates are deduped by ``(ic_bn, oc_bn, variant)``: the jnp template
-    the measurement runs ignores ow_bn/oh_bn/unroll_ker, so tuples that
-    differ only there are the same computation and would waste both a
-    measurement and a shortlist slot."""
-    from repro.core.schedule import VARIANTS
+    ``per_variant`` candidates of every ``(lowering variant, dtype)`` pair
+    present in the enumeration, so a variant the analytical model
+    underrates still gets measured — and a quantized workload always
+    wall-clocks its int8 templates against the fp32 ones, which is how
+    mixed-precision plans fall out of the normal search with no special
+    casing.  Candidates are deduped by ``(ic_bn, oc_bn, variant, dtype)``:
+    the jnp template the measurement runs ignores ow_bn/oh_bn/unroll_ker,
+    so tuples that differ only there are the same computation and would
+    waste both a measurement and a shortlist slot.
 
+    Measured costs within ``MEASURE_NOISE_FLOOR`` of the winner are ties:
+    that group is re-ranked by the analytical model (which does resolve
+    sub-noise differences such as int8's lighter weight traffic), so the
+    final winner is deterministic instead of an OS-jitter coin flip."""
     SEARCH_COUNTERS["guided_local_search"] += 1
 
     pruned = local_search(wl, roofline_runner, max_candidates)
@@ -173,7 +198,7 @@ def guided_local_search(wl: ConvWorkload, top_k: int = 6,
     seen = set()
 
     def _add(s: ConvSchedule) -> bool:
-        key = (s.ic_bn, s.oc_bn, s.resolved_variant())
+        key = (s.ic_bn, s.oc_bn, s.resolved_variant(), s.dtype)
         if key in seen:
             return False
         seen.add(key)
@@ -184,16 +209,32 @@ def guided_local_search(wl: ConvWorkload, top_k: int = 6,
         if len(short) >= top_k:
             break
         _add(r.schedule)
-    for variant in VARIANTS:
-        n_have = sum(1 for s in short if s.resolved_variant() == variant)
+    axes = sorted({(r.schedule.resolved_variant(), r.schedule.dtype)
+                   for r in pruned.ranked})
+    for variant, dtype in axes:
+        n_have = sum(1 for s in short
+                     if s.resolved_variant() == variant and s.dtype == dtype)
         for r in pruned.ranked:
             if n_have >= per_variant:
                 break
-            if r.schedule.resolved_variant() == variant and _add(r.schedule):
+            if (r.schedule.resolved_variant() == variant
+                    and r.schedule.dtype == dtype and _add(r.schedule)):
                 n_have += 1
     scored = [RankedSchedule(s, measured_runner(wl, s, repeats=repeats))
               for s in short]
-    scored.sort(key=lambda r: (r.cost_s, r.schedule))
+    floor = min(r.cost_s for r in scored) * (1.0 + MEASURE_NOISE_FLOOR)
+
+    def _rank(r: RankedSchedule):
+        if r.cost_s <= floor:   # tied with the winner: analytical tiebreak
+            cost = conv_schedule_cost(wl, r.schedule)
+            # memory_s second: on compute-bound workloads the analytical
+            # totals tie exactly (total = max(compute, memory)), and the
+            # lighter weight traffic — int8's whole point — must still
+            # decide the tie instead of the schedule tuple's field order
+            return (0, cost.total_s, cost.memory_s, r.schedule)
+        return (1, r.cost_s, 0.0, r.schedule)
+
+    scored.sort(key=_rank)
     return LocalSearchResult(workload=wl, ranked=scored, measured=True,
                              search_budget=(top_k, per_variant))
 
@@ -221,6 +262,8 @@ def _wl_key(wl: ConvWorkload) -> str:
             key += "c"
     if wl.concat_total:  # concat-offset write constrains oc_bn candidates
         key += f"_cat{wl.concat_offset}of{wl.concat_total}"
+    if wl.quantize:  # int8-eligible searches rank a larger candidate space
+        key += "_q8"
     return key
 
 

@@ -58,7 +58,8 @@ MODES = ("nchw", "layout", "transform-elim", "global-search", "fusion")
 TUNINGS = ("roofline", "cached", "measured")
 
 
-def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
+def make_workload(node: Node, in_shape: Tuple[int, ...],
+                  quantize: bool = False) -> ConvWorkload:
     a = node.attrs
     n, c, h, w = in_shape
     fused = node.op == "conv_block"
@@ -67,6 +68,11 @@ def make_workload(node: Node, in_shape: Tuple[int, ...]) -> ConvWorkload:
     # always last when present, so a residual exists only past that slot
     n_data = 1 + (1 if concat else 0)
     return ConvWorkload(
+        # int8 eligibility rides the workload so the local search enumerates
+        # (and the database keys) the quantized axis; only conv_block nodes
+        # qualify — the dequant scale travels on the fused epilogue's scale
+        # operand, which a plain conv2d node doesn't carry
+        quantize=quantize and fused,
         batch=n, in_channels=c, out_channels=a["out_channels"],
         height=h, width=w, kh=a["kh"], kw=a["kw"],
         stride=a.get("stride", 1), pad=a.get("pad", 0),
@@ -277,7 +283,8 @@ def _uniform_schedules(graph: Graph, locals_: Dict[str, LocalSearchResult],
         else:  # pair pruned from candidates: synthesize a legal schedule
             ref = locals_[node.name].best
             out[node.name] = ConvSchedule(ic, oc, ref.ow_bn, ref.oh_bn,
-                                          ref.unroll_ker, ref.variant)
+                                          ref.unroll_ker, ref.variant,
+                                          dtype=ref.dtype)
     return out
 
 
@@ -329,6 +336,7 @@ class PipelineState:
     db: ScheduleDatabase
     runner: Runner = roofline_runner
     tuning: str = "roofline"            # "roofline" | "cached" | "measured"
+    quantize: bool = False              # enumerate int8 schedules per conv
     transform_bw: Optional[float] = None
     search_budget: Tuple[int, int, int] = (6, 2, 3)  # top_k, per_variant, reps
     locals_: Dict[str, LocalSearchResult] = dataclasses.field(
@@ -398,7 +406,8 @@ class LocalTune(Pass):
     def __call__(self, state: PipelineState) -> Dict[str, Any]:
         n_before = len(state.db)
         for node in state.graph.conv_nodes():
-            wl = make_workload(node, state.graph.nodes[node.inputs[0]].shape)
+            wl = make_workload(node, state.graph.nodes[node.inputs[0]].shape,
+                               quantize=state.quantize)
             if state.tuning == "measured":
                 top_k, per_variant, repeats = state.search_budget
                 res = state.db.search_measured(
@@ -558,6 +567,7 @@ class Pipeline:
             db: Optional[ScheduleDatabase] = None,
             runner: Runner = roofline_runner,
             tuning: str = "roofline",
+            quantize: bool = False,
             transform_bw: Optional[float] = None,
             search_budget: Tuple[int, int, int] = (6, 2, 3)) -> Plan:
         # transform_bw: bytes/s the *execution host* moves a layout
@@ -573,7 +583,8 @@ class Pipeline:
         state = PipelineState(graph=graph, input_shapes=dict(input_shapes),
                               db=db if db is not None else ScheduleDatabase(),
                               runner=runner,
-                              tuning=tuning, transform_bw=transform_bw,
+                              tuning=tuning, quantize=quantize,
+                              transform_bw=transform_bw,
                               search_budget=search_budget)
         t_start = time.perf_counter()
         pass_reports: List[PassReport] = []

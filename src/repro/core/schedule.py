@@ -57,6 +57,12 @@ class ConvWorkload:
     # must divide both so the blocked offset store is legal.
     concat_offset: int = 0
     concat_total: int = 0
+    # int8 eligibility: when True, ``candidate_schedules`` also enumerates
+    # the quantized (dtype="int8") lowerings for this workload, so the
+    # search weighs int8 against fp32 per workload and mixed-precision
+    # plans fall out of the normal ranking.  Off by default — a quantized
+    # schedule changes numerics, so it must be opted into per compile.
+    quantize: bool = False
 
     @property
     def pw(self) -> int:
@@ -116,11 +122,22 @@ class ConvWorkload:
 # tap_stack below sublane ic_bn, per_tap otherwise).
 VARIANTS = ("per_tap", "tap_stack", "scan", "patch_gemm")
 
+# Numeric-precision axis of the schedule space.  "int8" is weight-only
+# quantization (W8: per-output-channel symmetric int8 weights bound at
+# bind_params time, activations fp32, dequantize scale applied through the
+# shared epilogue exactly like a BN scale) — a quantized template is just
+# another point on the schedule axis, searched like any other.  Only the
+# variants with an int8 instantiation in kernels/ops.py may carry it.
+DTYPES = ("fp32", "int8")
+INT8_VARIANTS = ("tap_stack", "patch_gemm")
+
 
 @dataclasses.dataclass(frozen=True, order=True)
 class ConvSchedule:
     """(ic_bn, oc_bn, reg_n→ow_bn, unroll_ker) + TPU's oh_bn block rows +
-    the lowering ``variant`` (the §3.2 template picked per workload)."""
+    the lowering ``variant`` (the §3.2 template picked per workload) + the
+    numeric ``dtype`` ("fp32", or "int8" for the weight-quantized
+    instantiation of the variant)."""
 
     ic_bn: int
     oc_bn: int
@@ -128,6 +145,7 @@ class ConvSchedule:
     oh_bn: int = 1
     unroll_ker: bool = False
     variant: str = "auto"
+    dtype: str = "fp32"
 
     def validate(self, wl: ConvWorkload) -> None:
         cin = wl.in_channels // wl.groups
@@ -147,6 +165,13 @@ class ConvSchedule:
                 f"(offset {wl.concat_offset}, total {wl.concat_total})")
         if self.variant != "auto" and self.variant not in VARIANTS:
             raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
+        if self.dtype not in DTYPES:
+            raise ValueError(f"dtype {self.dtype!r} not in {DTYPES}")
+        if (self.dtype == "int8"
+                and self.resolved_variant() not in INT8_VARIANTS):
+            raise ValueError(
+                f"dtype 'int8' has no {self.resolved_variant()!r} "
+                f"instantiation; int8 variants are {INT8_VARIANTS}")
 
     def resolved_variant(self) -> str:
         """The concrete lowering ``auto`` defers to (PR-1's heuristic)."""
@@ -208,6 +233,10 @@ def candidate_schedules(wl: ConvWorkload, max_candidates: int = 0,
                 for variant in VARIANTS:
                     out.append(ConvSchedule(ic_bn, oc_bn, ow_bn, oh_bn,
                                             unroll, variant))
+                    if wl.quantize and variant in INT8_VARIANTS:
+                        out.append(ConvSchedule(ic_bn, oc_bn, ow_bn, oh_bn,
+                                                unroll, variant,
+                                                dtype="int8"))
     # stable unique, optional cap
     seen = set()
     uniq = []

@@ -24,7 +24,8 @@ from repro.engine.serving import (AllWorkersUnhealthyError, AsyncServer,
                                   ServingStats, WorkerCrashError,
                                   nearest_bucket, padded_predict)
 from repro.engine.session import (ArtifactCorruptError, ArtifactError,
-                                  InferenceSession, Session, compile)
+                                  InferenceSession, Session,
+                                  UnverifiedArtifactWarning, compile)
 from repro.engine.supervision import (HeartbeatMonitor, RetryPolicy,
                                       SHED_POLICIES, StragglerMitigator,
                                       StragglerPolicy, choose_shed_victim)
@@ -38,6 +39,7 @@ __all__ = ["AllWorkersUnhealthyError", "ArtifactCorruptError",
            "QueueFullError", "RetriesExhaustedError", "RetryPolicy",
            "SHED_POLICIES", "ServerClosedError", "ServingError",
            "ServingStats", "Session", "StragglerMitigator",
-           "StragglerPolicy", "WorkerCrashError", "bind_params", "compile",
+           "StragglerPolicy", "UnverifiedArtifactWarning",
+           "WorkerCrashError", "bind_params", "compile",
            "compile_model", "choose_shed_victim", "corrupt_artifact",
            "corrupt_file", "nearest_bucket", "padded_predict"]

@@ -56,9 +56,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.epilogue import EpilogueSpec, PoolSpec
+from repro.core.epilogue import EpilogueSpec, PoolSpec, fold_dequant_scale
 from repro.core.layout import Layout, NCHW, kernel_to_kcrs_ck
 from repro.core.pipeline import Plan
+from repro.core.quantize import quantize_per_channel
 from repro.kernels.ops import prelay_patch_gemm_weight
 from repro.nn import ops
 from repro.nn.init import Params
@@ -110,6 +111,16 @@ def _bind_conv_block(plan: Plan, node, params: Params,
 
     lay = plan.planned.layouts[node.name]
     sched = plan.planned.schedules.get(node.name)
+    if (sched is not None and lay.is_blocked
+            and getattr(sched, "dtype", "fp32") == "int8"):
+        # §3.2 extended to numerics: the weight transformation pass is
+        # also where quantization happens — per-output-channel symmetric
+        # int8 codes replace the fp32 kernel (after any BN fold, so the
+        # codes absorb the BN scale), and the dequantize scale folds into
+        # the epilogue's per-channel scale exactly like an unfolded BN.
+        wq, w_scale = quantize_per_channel(np.asarray(w), axis=0)
+        w = jnp.asarray(wq)
+        scale = fold_dequant_scale(scale, w_scale)
     q: Dict[str, jnp.ndarray] = {}
     if sched is not None and lay.is_blocked:
         q["w"] = kernel_to_kcrs_ck(w, sched.ic_bn, sched.oc_bn)

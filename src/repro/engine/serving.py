@@ -323,6 +323,7 @@ class ServingStats:
     n_retried: int = 0             # request re-executions granted
     n_retries_exhausted: int = 0   # requests failed past their budget
     n_shed: int = 0                # queued requests evicted by overload
+    n_cancelled: int = 0           # client-cancelled requests dropped
     n_worker_crashes: int = 0      # worker threads that died mid-service
     n_worker_restarts: int = 0     # supervisor-spawned replacements
     n_hung_requeued: int = 0       # watchdog-requeued in-flight batches
@@ -348,6 +349,7 @@ class ServingStats:
             "n_retried": self.n_retried,
             "n_retries_exhausted": self.n_retries_exhausted,
             "n_shed": self.n_shed,
+            "n_cancelled": self.n_cancelled,
             "n_worker_crashes": self.n_worker_crashes,
             "n_worker_restarts": self.n_worker_restarts,
             "n_hung_requeued": self.n_hung_requeued,
@@ -428,7 +430,7 @@ class AsyncServer:
         self.watchdog_ms = watchdog_ms
         self.max_restarts = max_restarts
         self.faults = faults
-        self.stats = ServingStats()
+        self._stats = ServingStats()
         self._clock = clock
         self._sleep = sleep
         self._pending: Deque[Request] = collections.deque()
@@ -480,6 +482,25 @@ class AsyncServer:
                              f"{workers} workers")
         return sets
 
+    # -- stats ---------------------------------------------------------------
+    @property
+    def stats(self) -> ServingStats:
+        """Internally-consistent point-in-time copy of the counters.
+        Workers mutate the live object under the server lock, so reading
+        fields off it lock-free could tear — e.g. observe a request
+        counted completed while its batch still appears in flight.  The
+        snapshot is taken under the same lock every mutation holds
+        (invariant at any quiescent point: ``n_completed + n_failed +
+        n_shed + n_cancelled + n_deadline_expired + queued + in-flight ==
+        n_submitted``), and the copy is detached — mutating it changes
+        nothing in the server."""
+        with self._cond:
+            return dataclasses.replace(
+                self._stats,
+                batch_rows=list(self._stats.batch_rows),
+                latencies_s=list(self._stats.latencies_s),
+                worker_batches=dict(self._stats.worker_batches))
+
     # -- capacity ------------------------------------------------------------
     def _cap(self) -> int:
         """Max rows one batch may pack: the policy's max_batch, clamped to
@@ -519,7 +540,7 @@ class AsyncServer:
             # deadline-aware admission: work that cannot possibly finish
             # in time is rejected up front, never queued
             with self._cond:
-                self.stats.n_deadline_expired += 1
+                self._stats.n_deadline_expired += 1
             raise DeadlineExceededError(
                 f"deadline_ms={deadline_ms} already expired at submission")
         deadline = None if deadline_ms is None else now + deadline_ms / 1e3
@@ -534,7 +555,7 @@ class AsyncServer:
             if len(self._pending) >= self.max_queue:
                 victim = choose_shed_victim(self._pending, self.shed)
                 if victim is None:
-                    self.stats.n_rejected_full += 1
+                    self._stats.n_rejected_full += 1
                     raise QueueFullError(
                         f"request queue at capacity ({self.max_queue}); "
                         "retry later or raise max_queue")
@@ -543,9 +564,9 @@ class AsyncServer:
                 if self._resolve(shed.future, exc=LoadShedError(
                         f"shed by the {self.shed!r} overload policy after "
                         f"{(now - shed.t_submit) * 1e3:.1f} ms queued")):
-                    self.stats.n_shed += 1
+                    self._stats.n_shed += 1
             self._pending.append(Request(x, rows, fut, now, deadline))
-            self.stats.n_submitted += 1
+            self._stats.n_submitted += 1
             self._cond.notify_all()
         return fut
 
@@ -584,12 +605,13 @@ class AsyncServer:
         keep: Deque[Request] = collections.deque()
         for r in self._pending:
             if r.future.cancelled():
+                self._stats.n_cancelled += 1
                 continue
             if r.deadline is not None and now >= r.deadline:
                 if self._resolve(r.future, exc=DeadlineExceededError(
                         f"queued for {(now - r.t_submit) * 1e3:.1f} ms, "
                         "past its deadline")):
-                    self.stats.n_deadline_expired += 1
+                    self._stats.n_deadline_expired += 1
             else:
                 keep.append(r)
         self._pending = keep
@@ -668,33 +690,45 @@ class AsyncServer:
         return m
 
     def _fail_or_requeue(self, batch: List[Request],
-                         exc: BaseException) -> None:
+                         exc: BaseException,
+                         worker: Optional[int] = None) -> None:
         """A batch execution failed: requeue each request at the queue
         head (preserving FIFO order) with its backoff gate set, or fail
         its future once the retry budget is spent.  ``budget=0`` fails
-        with the original exception — the no-retry behavior."""
+        with the original exception — the no-retry behavior.
+
+        ``worker`` retires the batch's in-flight entry in the same locked
+        section that requeues/fails it: removing it later (the caller's
+        ``finally``) would leave a window where a request is counted both
+        pending and in flight."""
         now = self._clock()
         with self._cond:
+            if (worker is not None
+                    and self._inflight.get(worker) is batch):
+                del self._inflight[worker]
             requeue: List[Request] = []
             for r in batch:
-                if r.future.cancelled() or r.future.done():
+                if r.future.cancelled():
+                    self._stats.n_cancelled += 1
+                    continue
+                if r.future.done():
                     continue
                 if not self._closed and r.retries < self.retry.budget:
                     r.retries += 1
                     r.not_before = now + self.retry.backoff_s(r.retries)
                     requeue.append(r)
-                    self.stats.n_retried += 1
+                    self._stats.n_retried += 1
                     continue
                 if self.retry.budget > 0:
                     err: BaseException = RetriesExhaustedError(
                         f"failed after {r.retries} retries "
                         f"(budget {self.retry.budget}): {exc!r}")
                     err.__cause__ = exc
-                    self.stats.n_retries_exhausted += 1
+                    self._stats.n_retries_exhausted += 1
                 else:
                     err = exc
                 if self._resolve(r.future, exc=err):
-                    self.stats.n_failed += 1
+                    self._stats.n_failed += 1
             for r in reversed(requeue):
                 self._pending.appendleft(r)
             self._cond.notify_all()
@@ -719,7 +753,7 @@ class AsyncServer:
             y = jax.block_until_ready(y)
             y = _slice_rows(y, 0, rows)
         except BaseException as e:      # noqa: BLE001 — retry or fail typed
-            self._fail_or_requeue(batch, e)
+            self._fail_or_requeue(batch, e, worker=worker)
             if isinstance(e, InjectedWorkerCrash):
                 raise WorkerCrashError(str(e)) from e
             return
@@ -733,14 +767,22 @@ class AsyncServer:
                 lats.append(done - r.t_submit)
             off += r.rows
         with self._cond:
-            self.stats.n_batches += 1
-            self.stats.rows_executed += rows
-            self.stats.rows_padded += bucket - rows
-            self.stats.batch_rows.append(rows)
-            self.stats.n_completed += n_ok
-            self.stats.latencies_s.extend(lats)
-            self.stats.worker_batches[worker] = \
-                self.stats.worker_batches.get(worker, 0) + 1
+            self._stats.n_batches += 1
+            self._stats.rows_executed += rows
+            self._stats.rows_padded += bucket - rows
+            self._stats.batch_rows.append(rows)
+            self._stats.n_completed += n_ok
+            self._stats.latencies_s.extend(lats)
+            self._stats.worker_batches[worker] = \
+                self._stats.worker_batches.get(worker, 0) + 1
+            # the batch leaves flight in the same locked section that
+            # counts it completed, so no snapshot can observe requests
+            # both completed and in flight (the callers' ``finally``
+            # removal stays as an identity-checked backstop for the
+            # watchdog-requeue path)
+            if self._inflight.get(worker) is batch:
+                del self._inflight[worker]
+            self._cond.notify_all()
 
     def step(self) -> bool:
         """Expire deadlines and execute at most one ready batch *now*
@@ -762,7 +804,7 @@ class AsyncServer:
             self._execute(batch, worker=0, seq=seq)
         except WorkerCrashError:
             with self._cond:
-                self.stats.n_worker_crashes += 1
+                self._stats.n_worker_crashes += 1
         finally:
             with self._cond:
                 if self._inflight.get(0) is batch:
@@ -802,7 +844,7 @@ class AsyncServer:
                 self._execute(batch, worker, seq=seq)
             except WorkerCrashError:
                 with self._cond:        # counted here, not when the
-                    self.stats.n_worker_crashes += 1    # supervisor sees it
+                    self._stats.n_worker_crashes += 1    # supervisor sees it
                     self._crash_counted.add(worker)
                 return                  # thread dies; supervisor restarts
             finally:
@@ -861,7 +903,7 @@ class AsyncServer:
             # (backstop; the injected-kill path already requeued) and
             # restart or evict the slot
             if slot not in self._crash_counted:
-                self.stats.n_worker_crashes += 1
+                self._stats.n_worker_crashes += 1
             self._crash_counted.discard(slot)
             self._threads[slot] = None
             batch = self._inflight.pop(slot, None)
@@ -884,7 +926,7 @@ class AsyncServer:
             # hung batch: requeue it (duplicate execution is safe — the
             # first bit-identical result wins via the future done-guard)
             # and supersede the zombie thread
-            self.stats.n_hung_requeued += 1
+            self._stats.n_hung_requeued += 1
             if self._straggler is not None:
                 self._straggler.record({slot: self.watchdog_ms / 1e3})
             self._requeue_orphans(batch, WorkerCrashError(
@@ -897,24 +939,27 @@ class AsyncServer:
         """Locked variant of _fail_or_requeue for supervisor use."""
         requeue: List[Request] = []
         for r in batch:
-            if r.future.cancelled() or r.future.done():
+            if r.future.cancelled():
+                self._stats.n_cancelled += 1
+                continue
+            if r.future.done():
                 continue
             if not self._closed and r.retries < self.retry.budget:
                 r.retries += 1
                 r.not_before = now + self.retry.backoff_s(r.retries)
                 requeue.append(r)
-                self.stats.n_retried += 1
+                self._stats.n_retried += 1
                 continue
             if self.retry.budget > 0:
                 err: BaseException = RetriesExhaustedError(
                     f"failed after {r.retries} retries "
                     f"(budget {self.retry.budget}): {exc!r}")
                 err.__cause__ = exc
-                self.stats.n_retries_exhausted += 1
+                self._stats.n_retries_exhausted += 1
             else:
                 err = exc
             if self._resolve(r.future, exc=err):
-                self.stats.n_failed += 1
+                self._stats.n_failed += 1
         for r in reversed(requeue):
             self._pending.appendleft(r)
 
@@ -934,7 +979,7 @@ class AsyncServer:
     def _restart_or_evict_locked(self, slot: int) -> None:
         if self._restarts[slot] < self.max_restarts:
             self._restarts[slot] += 1
-            self.stats.n_worker_restarts += 1
+            self._stats.n_worker_restarts += 1
             gen = self._worker_gen[slot] = self._worker_gen.get(slot, 0) + 1
             if self._monitor is not None:
                 self._monitor.revive(slot)
@@ -952,7 +997,7 @@ class AsyncServer:
             r = self._pending.popleft()
             if self._resolve(r.future, exc=AllWorkersUnhealthyError(
                     "every worker slot exhausted its restart budget")):
-                self.stats.n_failed += 1
+                self._stats.n_failed += 1
 
     def health(self) -> dict:
         """Point-in-time health snapshot for external probes (the
@@ -963,6 +1008,8 @@ class AsyncServer:
             return {
                 "queue_depth": len(self._pending),
                 "inflight_batches": len(self._inflight),
+                "inflight_requests": sum(len(b) for b in
+                                         self._inflight.values()),
                 "workers": {
                     "configured": self.workers,
                     "alive": alive,
@@ -975,17 +1022,18 @@ class AsyncServer:
                 "draining": self._draining,
                 "closed": self._closed,
                 "counters": {
-                    "n_submitted": self.stats.n_submitted,
-                    "n_completed": self.stats.n_completed,
-                    "n_failed": self.stats.n_failed,
-                    "n_retried": self.stats.n_retried,
-                    "n_retries_exhausted": self.stats.n_retries_exhausted,
-                    "n_shed": self.stats.n_shed,
-                    "n_rejected_full": self.stats.n_rejected_full,
-                    "n_deadline_expired": self.stats.n_deadline_expired,
-                    "n_worker_crashes": self.stats.n_worker_crashes,
-                    "n_worker_restarts": self.stats.n_worker_restarts,
-                    "n_hung_requeued": self.stats.n_hung_requeued,
+                    "n_submitted": self._stats.n_submitted,
+                    "n_completed": self._stats.n_completed,
+                    "n_failed": self._stats.n_failed,
+                    "n_retried": self._stats.n_retried,
+                    "n_retries_exhausted": self._stats.n_retries_exhausted,
+                    "n_shed": self._stats.n_shed,
+                    "n_cancelled": self._stats.n_cancelled,
+                    "n_rejected_full": self._stats.n_rejected_full,
+                    "n_deadline_expired": self._stats.n_deadline_expired,
+                    "n_worker_crashes": self._stats.n_worker_crashes,
+                    "n_worker_restarts": self._stats.n_worker_restarts,
+                    "n_hung_requeued": self._stats.n_hung_requeued,
                 },
             }
 

@@ -22,20 +22,27 @@ that proves it).
     # ... fresh process ...
     y2 = InferenceSession.load("artifact/").predict(x)   # bit-identical
 
-Artifact layout (version 3):
+Artifact layout (version 4):
 
     <path>/manifest.json   format, version, input spec, tuning,
                            transform_bw, schedule-db blob, pipeline/report
                            metadata, the "specializations" table (batch ->
                            plan-file reference), a "checksums" table
                            (relative path -> SHA-256 of every other file
-                           in the artifact), and an optional "source"
-                           section (the *logical* graph) that — together
-                           with <path>/source/ — lets a loaded session
-                           legally specialize unseen batch sizes
+                           in the artifact), a "quantized" section (None,
+                           or a reference to <path>/quantized.json), and
+                           an optional "source" section (the *logical*
+                           graph) that — together with <path>/source/ —
+                           lets a loaded session legally specialize unseen
+                           batch sizes
     <path>/plans/          batch_<b>.json: one specialization's plan
     <path>/weights/        CheckpointStore; step_<batch>/ holds the bound
                            (physical-layout) params of one specialization
+                           — int8 weight codes for quantized convs, stored
+                           and checksummed like any other array
+    <path>/quantized.json  (dtype="int8" sessions only) the quantization
+                           scheme plus the per-conv dtype map of every
+                           specialization, checksummed like any other file
     <path>/source/         CheckpointStore (one step): the raw logical
                            params, present iff manifest["source"] is
 
@@ -52,15 +59,21 @@ maps each historical version to a function upgrading a manifest one
 version forward, applied in sequence until the current version is reached
 (v1 -> v2 renames "batches" to "specializations" and marks the source as
 absent; v2 -> v3 marks the checksums as absent — migrated manifests keep
-their inline plans and load unverified until re-saved).  A *future*
-version — or a manifest that is not valid JSON — is still rejected
-cleanly.  ``register_migration`` lets later builds extend the chain.
+their inline plans and load unverified until re-saved; v3 -> v4 marks the
+quantized payload as absent).  Artifacts whose checksums migrated to
+``None`` load with one explicit :class:`UnverifiedArtifactWarning`, and a
+plain load -> save round trip backfills the checksums (``save`` always
+writes a fresh table), upgrading the artifact to verified integrity.  A
+*future* version — or a manifest that is not valid JSON — is still
+rejected cleanly.  ``register_migration`` lets later builds extend the
+chain.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import threading
+import warnings
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
@@ -78,13 +91,22 @@ from repro.engine.executor import CompiledModel, compile_model
 from repro.nn.init import Params, init_params
 
 ARTIFACT_FORMAT = "neocpu-inference-session"
-ARTIFACT_VERSION = 3
+ARTIFACT_VERSION = 4
+
+SESSION_DTYPES = ("fp32", "int8")
 
 
 class ArtifactError(ValueError):
     """A saved artifact cannot be loaded: missing, structurally invalid,
     or from an unsupported version.  Subclasses ``ValueError`` so
     pre-typed callers keep working."""
+
+
+class UnverifiedArtifactWarning(UserWarning):
+    """A pre-v3 artifact is loading without checksum verification (its
+    manifest predates the integrity table).  Re-saving the loaded session
+    backfills the checksums, so one load -> save round trip upgrades the
+    artifact to verified integrity."""
 
 
 class ArtifactCorruptError(ArtifactError):
@@ -127,6 +149,16 @@ def _migrate_v2_to_v3(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
     both inline plans and v3 file references)."""
     manifest["checksums"] = None
     manifest["version"] = 3
+    return manifest
+
+
+@register_migration(3)
+def _migrate_v3_to_v4(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
+    """v3 -> v4: the optional quantized payload (``quantized.json`` +
+    manifest reference, written by ``dtype="int8"`` sessions).  Pre-v4
+    artifacts are all fp32, so "quantized" is simply absent."""
+    manifest["quantized"] = None
+    manifest["version"] = 4
     return manifest
 
 
@@ -252,9 +284,12 @@ class InferenceSession:
                  search_budget: Tuple[int, int, int] = (6, 2, 3),
                  use_pallas: bool = False, interpret: bool = True,
                  dispatch: str = "whole", devices: int = 1,
+                 dtype: str = "fp32",
                  model_name: Optional[str] = None) -> None:
         if devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
+        if dtype not in SESSION_DTYPES:
+            raise ValueError(f"dtype {dtype!r} not in {SESSION_DTYPES}")
         self._graph = graph
         self._base_shapes = {k: tuple(v) for k, v in base_shapes.items()}
         self._params = params
@@ -267,6 +302,9 @@ class InferenceSession:
         self.interpret = interpret
         self.dispatch = dispatch
         self.devices = devices
+        # "int8": specializations enumerate quantized schedules; the search
+        # decides per conv, so the bound plan may be mixed-precision
+        self.dtype = dtype
         self.model_name = model_name
         self._specialized: Dict[int, CompiledModel] = {}
         # serializes planning/binding: two threads racing on the same new
@@ -329,7 +367,8 @@ class InferenceSession:
             plan = self.pipeline.run(
                 self._graph, self._shapes_for(batch // self.devices),
                 db=self.db,
-                tuning=self.tuning, transform_bw=self.transform_bw,
+                tuning=self.tuning, quantize=(self.dtype == "int8"),
+                transform_bw=self.transform_bw,
                 search_budget=self.search_budget)
             if (plan.report is not None
                     and plan.report.transform_bw is not None):
@@ -420,6 +459,23 @@ class InferenceSession:
             rel = f"plans/batch_{batch:05d}.json"
             (tmp / rel).write_text(json.dumps(_plan_to_json(m.plan)))
             specs[str(batch)] = {"file": rel}
+        quantized = None
+        if self.dtype == "int8":
+            # the payload names the scheme and which convs actually bound
+            # int8 codes (the search decides per conv — a mixed plan is
+            # normal); written before the checksum walk so it is verified
+            # on load like any other file
+            (tmp / "quantized.json").write_text(json.dumps({
+                "dtype": self.dtype,
+                "scheme": ("w8: per-output-channel symmetric int8 weights, "
+                           "qmax 127, dequantize scale folded into the "
+                           "epilogue scale operand"),
+                "schedule_dtypes": {
+                    str(batch): {name: s.dtype for name, s in
+                                 m.plan.planned.schedules.items()}
+                    for batch, m in self._specialized.items()},
+            }))
+            quantized = {"file": "quantized.json", "dtype": self.dtype}
         manifest = {
             "format": ARTIFACT_FORMAT,
             "version": ARTIFACT_VERSION,
@@ -433,6 +489,7 @@ class InferenceSession:
             "dispatch": self.dispatch,
             "devices": self.devices,
             "specializations": specs,
+            "quantized": quantized,
             "source": source,
             # measured winners only: analytical rankings are re-derivable
             # and would bloat the manifest by megabytes per workload set
@@ -531,6 +588,13 @@ class InferenceSession:
                     raise ArtifactCorruptError(
                         f"artifact file {rel} is corrupt: sha256 {got} "
                         f"does not match the manifest's {want}")
+        else:
+            warnings.warn(
+                f"artifact {path} predates checksums (pre-v3) and is "
+                "loading UNVERIFIED: its payloads cannot be integrity-"
+                "checked.  Re-save the loaded session to backfill "
+                "checksums and upgrade it in place.",
+                UnverifiedArtifactWarning, stacklevel=2)
         db = ScheduleDatabase()
         db.load_blob(manifest.get("db", {}))
         source = manifest.get("source")
@@ -566,6 +630,8 @@ class InferenceSession:
                    interpret=manifest.get("interpret", True),
                    dispatch=dispatch or manifest.get("dispatch", "whole"),
                    devices=devices if retarget else saved_devices,
+                   dtype=(manifest.get("quantized") or {}).get("dtype",
+                                                               "fp32"),
                    model_name=manifest.get("model"))
         if retarget:
             # saved plans are per-device-sub-batch-shaped for the *old*
@@ -628,6 +694,7 @@ def compile(model: Union[str, Graph],                     # noqa: A001
             seed: int = 0,
             use_pallas: bool = False, interpret: bool = True,
             dispatch: str = "whole", devices: int = 1,
+            dtype: str = "fp32",
             eager: bool = True) -> InferenceSession:
     """Build an :class:`InferenceSession` for a model.
 
@@ -654,6 +721,12 @@ def compile(model: Union[str, Graph],                     # noqa: A001
                 templates, so ``candidate_schedules`` is unchanged and
                 each device runs the plan built for its B/devices
                 sub-batch
+    dtype       "fp32" (default), or "int8": enumerate per-output-channel
+                W8-quantized schedules alongside fp32 ones; the search
+                picks per conv, weights quantize once at bind time, and
+                the dequantize scale folds into the fused epilogue like a
+                BN scale.  Saved artifacts carry a checksummed
+                ``quantized.json`` payload
     eager       plan + bind the input_spec's batch size now (default); the
                 session still specializes other batch sizes on demand
     """
@@ -704,7 +777,7 @@ def compile(model: Union[str, Graph],                     # noqa: A001
         tuning=tuning, transform_bw=transform_bw,
         search_budget=search_budget, use_pallas=use_pallas,
         interpret=interpret, dispatch=dispatch, devices=devices,
-        model_name=model_name)
+        dtype=dtype, model_name=model_name)
     if eager:
         base = next(iter(shapes.values()))[0]
         if devices > 1 and base % devices:

@@ -152,6 +152,44 @@ _ACC_FNS = {"per_tap": _acc_per_tap, "tap_stack": _acc_tap_stack,
             "scan": _acc_scan, "patch_gemm": _acc_patch_gemm}
 
 
+# ---------------------------------------------------------------------------
+# int8 instantiations (ConvSchedule.dtype == "int8", weight-only W8).
+#
+# The weight operand arrives as int8 *integer codes* (quantized per output
+# channel at bind time — core/quantize.py); activations stay fp32.  The
+# loop nests are identical to the fp32 variants: the integer codes are
+# upcast at the MAC (XLA:CPU has no s8 GEMM kernels — on a VNNI/s8-dot
+# backend this upcast is where the native s8 contraction slots in), and
+# the per-channel dequantize scale is applied by the shared epilogue's
+# ``scale`` operand, exactly like a folded BN scale.  What int8 buys on
+# this backend is the 4x denser weight payload and traffic, not FLOPs.
+# ---------------------------------------------------------------------------
+
+def _require_int8_weight(w, variant: str):
+    if w.dtype != jnp.int8:
+        raise TypeError(
+            f"dtype='int8' {variant} template expects an int8 weight "
+            f"operand (quantized codes), got {w.dtype}")
+
+
+def _acc_tap_stack_int8(xp, w_blocked, stride, oh, ow):
+    """tap_stack over int8 weight codes: one contraction with the full
+    kh*kw*ic_bn reduction, weight upcast at the MAC."""
+    _require_int8_weight(w_blocked, "tap_stack")
+    return _acc_tap_stack(xp, w_blocked, stride, oh, ow)
+
+
+def _acc_patch_gemm_int8(xp, w_blocked, stride, oh, ow):
+    """im2col lowering over int8 weight codes: the (kh*kw*cin, cout) GEMM
+    operand is 4x denser in memory, upcast at the MAC."""
+    _require_int8_weight(w_blocked, "patch_gemm")
+    return _acc_patch_gemm(xp, w_blocked, stride, oh, ow)
+
+
+_ACC_FNS_INT8 = {"tap_stack": _acc_tap_stack_int8,
+                 "patch_gemm": _acc_patch_gemm_int8}
+
+
 def apply_epilogue_fp32(acc: jnp.ndarray, scale, shift, residual,
                         spec: EpilogueSpec) -> jnp.ndarray:
     """The composable epilogue on the blocked fp32 accumulator
@@ -174,7 +212,8 @@ def apply_epilogue_fp32(acc: jnp.ndarray, scale, shift, residual,
 def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
                        stride: int, pad, spec: EpilogueSpec,
                        variant: str = "auto",
-                       w_prelaid: bool = False) -> jnp.ndarray:
+                       w_prelaid: bool = False,
+                       dtype: str = "fp32") -> jnp.ndarray:
     """Blocked direct conv + composable fused epilogue as XLA ops — the
     template's jnp instantiation, dispatched over the lowering ``variant``
     (one of ``core.schedule.VARIANTS``, or ``"auto"`` for the static
@@ -190,6 +229,12 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
 
     ``w_prelaid`` marks a weight that arrived panel-major from
     ``prelay_patch_gemm_weight`` (legal only for variant ``patch_gemm``).
+
+    ``dtype="int8"`` selects the weight-quantized instantiation of the
+    variant (tap_stack / patch_gemm only): ``w_blocked`` holds int8
+    quantization codes and the caller passes the per-channel dequantize
+    scale through ``scale`` — the shared epilogue applies it like a BN
+    scale.
     """
     xp = pad_blocked(x_blocked, pad)
     n, ci, hp, wp, ic_bn = xp.shape
@@ -203,7 +248,21 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
     ow = (wp - kw) // stride + 1
     if variant in ("auto", None):
         variant = "tap_stack" if ic_bn < 8 else "per_tap"
-    if w_prelaid:
+    if dtype == "int8":
+        if variant not in _ACC_FNS_INT8:
+            raise ValueError(
+                f"dtype 'int8' has no {variant!r} instantiation; int8 "
+                f"variants are {tuple(_ACC_FNS_INT8)}")
+        if scale is None:
+            raise ValueError(
+                "dtype 'int8' requires the per-channel dequantize scale "
+                "in the epilogue's scale operand")
+        if w_prelaid:
+            _require_int8_weight(w_blocked, variant)
+            acc = _patch_gemm(xp, w_blocked, stride, oh, ow)
+        else:
+            acc = _ACC_FNS_INT8[variant](xp, w_blocked, stride, oh, ow)
+    elif w_prelaid:
         acc = _patch_gemm(xp, w_blocked, stride, oh, ow)
     else:
         acc = _ACC_FNS[variant](xp, w_blocked, stride, oh, ow)
@@ -222,19 +281,24 @@ def _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual, out_buf,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "pad", "variant", "w_prelaid"))
+                   static_argnames=("stride", "pad", "variant", "w_prelaid",
+                                    "dtype"))
 def conv2d_nchwc_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      stride: int = 1, pad=0,
                      variant: str = "auto",
-                     w_prelaid: bool = False) -> jnp.ndarray:
-    """Plain blocked conv (no epilogue) — see ``_conv2d_block_core``."""
+                     w_prelaid: bool = False,
+                     dtype: str = "fp32") -> jnp.ndarray:
+    """Plain blocked conv (no epilogue) — see ``_conv2d_block_core``.
+    (``dtype="int8"`` is rejected here: the quantized template needs the
+    dequantize scale, which only the epilogue entry carries.)"""
     return _conv2d_block_core(x_blocked, w_blocked, None, None, None, None,
-                              stride, pad, IDENTITY, variant, w_prelaid)
+                              stride, pad, IDENTITY, variant, w_prelaid,
+                              dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("stride", "pad", "relu", "variant",
-                                    "epilogue", "w_prelaid"))
+                                    "epilogue", "w_prelaid", "dtype"))
 def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      scale: jnp.ndarray | None = None,
                      shift: jnp.ndarray | None = None,
@@ -243,17 +307,24 @@ def conv2d_block_jnp(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                      stride: int = 1, pad=0,
                      relu: bool = False, variant: str = "auto",
                      epilogue: EpilogueSpec | None = None,
-                     w_prelaid: bool = False) -> jnp.ndarray:
+                     w_prelaid: bool = False,
+                     dtype: str = "fp32") -> jnp.ndarray:
     """Fused CONV + composable epilogue block — see ``_conv2d_block_core``.
     ``relu`` is kept as a shorthand for the PR-1 call sites; it merges into
     ``epilogue`` (the full spec: ReLU, fused pooling, concat-offset store)."""
     spec = (epilogue or IDENTITY).with_relu(relu)
     return _conv2d_block_core(x_blocked, w_blocked, scale, shift, residual,
-                              out_buf, stride, pad, spec, variant, w_prelaid)
+                              out_buf, stride, pad, spec, variant, w_prelaid,
+                              dtype)
 
 
 def _schedule_variant(schedule: ConvSchedule | None) -> str:
     return schedule.variant if schedule is not None else "auto"
+
+
+def _schedule_dtype(schedule: ConvSchedule | None) -> str:
+    return getattr(schedule, "dtype", "fp32") if schedule is not None \
+        else "fp32"
 
 
 def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
@@ -269,12 +340,15 @@ def conv2d_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray, *,
     if use_pallas:
         assert schedule is not None
         assert not w_prelaid, "Pallas kernel consumes KCRS[x]c[y]k weights"
+        assert _schedule_dtype(schedule) == "fp32", \
+            "the Pallas kernel has no int8 instantiation yet"
         xp = pad_blocked(x_blocked, pad)
         return conv2d_nchwc_pallas(xp, w_blocked, stride=stride,
                                    schedule=schedule, interpret=interpret)
     return conv2d_nchwc_jnp(x_blocked, w_blocked, stride=stride, pad=pad,
                             variant=_schedule_variant(schedule),
-                            w_prelaid=w_prelaid)
+                            w_prelaid=w_prelaid,
+                            dtype=_schedule_dtype(schedule))
 
 
 def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
@@ -297,6 +371,8 @@ def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
     if use_pallas:
         assert schedule is not None
         assert not w_prelaid, "Pallas kernel consumes KCRS[x]c[y]k weights"
+        assert _schedule_dtype(schedule) == "fp32", \
+            "the Pallas kernel has no int8 instantiation yet"
         xp = pad_blocked(x_blocked, pad)
         return conv2d_nchwc_pallas(xp, w_blocked, scale, shift, residual,
                                    out_buf, stride=stride, schedule=schedule,
@@ -305,7 +381,8 @@ def conv2d_block_blocked(x_blocked: jnp.ndarray, w_blocked: jnp.ndarray,
                             out_buf, stride=stride, pad=pad,
                             epilogue=spec,
                             variant=_schedule_variant(schedule),
-                            w_prelaid=w_prelaid)
+                            w_prelaid=w_prelaid,
+                            dtype=_schedule_dtype(schedule))
 
 
 def conv2d(x_nchw: jnp.ndarray, w_kcrs: jnp.ndarray, *, stride: int = 1,

@@ -1,11 +1,3 @@
-from repro.launch.cpu import configure_cpu_devices
-configure_cpu_devices(512, warn_oversubscribe=False)
-# ^^ MUST run before ANY jax-importing import: jax locks the device count
-# on first backend init.  512 placeholder devices back the production-mesh
-# dry-run; configure_cpu_devices *merges* into any user-set XLA_FLAGS
-# instead of clobbering them.  Entry-point only — smoke tests and benches
-# see the single real device.
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell:
@@ -27,6 +19,8 @@ import traceback
 from pathlib import Path
 
 import jax
+
+from repro.launch.cpu import configure_cpu_devices
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -238,6 +232,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main():
+    # entry-point only, and BEFORE any jax device use: jax locks the device
+    # count on first backend init (importing jax above is fine — touching a
+    # device is not).  512 placeholder devices back the production-mesh
+    # dry-run; configure_cpu_devices *merges* into any user-set XLA_FLAGS
+    # instead of clobbering them.  Importers of this module (pytest
+    # collection included) must see no device-count side effect — that is a
+    # regression test.
+    configure_cpu_devices(512, warn_oversubscribe=False)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all",
                     help="arch id or 'all'")

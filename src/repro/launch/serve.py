@@ -58,7 +58,8 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
                    deadline_ms: float = None, workers: int = 1,
                    pin=None, shed: str = "newest",
                    retry_budget: int = 2, backoff_ms: float = 10.0,
-                   watchdog_ms: float = None, show_health: bool = False):
+                   watchdog_ms: float = None, show_health: bool = False,
+                   dtype: str = None):
     """Cold-start CNN serving through the async dynamic-batching driver:
     load the compiled session artifact, pump a stream of single-image
     requests through a bounded queue (client-side backpressure on
@@ -83,6 +84,11 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
     t0 = time.perf_counter()
     sess = InferenceSession.load(path)
     t_load = time.perf_counter() - t0
+    if dtype is not None and sess.dtype != dtype:
+        raise ValueError(
+            f"--dtype {dtype} requested but artifact {path} was compiled "
+            f"at {sess.dtype} precision; rebuild it with "
+            f"engine.compile(..., dtype={dtype!r}).save(...)")
     (name,) = sess.input_spec
     shape = (1,) + sess.input_spec[name][1:]
     rng = np.random.default_rng(0)
@@ -128,6 +134,7 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
         "artifact serving must not re-run any schedule search"
     st = server.stats
     print(f"artifact={path} model={sess.model_name or '?'} "
+          f"dtype={sess.dtype} "
           f"load={t_load * 1e3:.0f} ms (zero search, zero re-binding) "
           f"buckets={sess.batch_sizes} devices={sess.devices} "
           f"workers={workers}")
@@ -188,6 +195,11 @@ def main(argv=None):
                          "batch requeued (off by default)")
     ap.add_argument("--health", action="store_true",
                     help="print the server health() snapshot after the run")
+    ap.add_argument("--dtype", default=None, choices=("fp32", "int8"),
+                    help="require the artifact to carry this weight "
+                         "precision (int8 = W8 per-channel quantized); "
+                         "fails fast on a mismatch instead of silently "
+                         "serving the other precision")
     args = ap.parse_args(argv)
 
     if args.artifact:
@@ -202,7 +214,8 @@ def main(argv=None):
                               retry_budget=args.retry_budget,
                               backoff_ms=args.backoff_ms,
                               watchdog_ms=args.watchdog_ms,
-                              show_health=args.health)
+                              show_health=args.health,
+                              dtype=args.dtype)
 
     cfg = make_reduced(ARCHS[args.arch])
     params = model.init_params(cfg, jax.random.PRNGKey(0))

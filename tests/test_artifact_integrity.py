@@ -12,8 +12,10 @@ import pytest
 from repro.checkpoint.store import dir_checksums, sha256_file
 from repro.core.graph import Graph
 from repro.engine import (ArtifactCorruptError, ArtifactError,
-                          InferenceSession, corrupt_artifact, corrupt_file)
+                          InferenceSession, UnverifiedArtifactWarning,
+                          corrupt_artifact, corrupt_file)
 from repro.engine import compile as compile_session
+from repro.engine.session import ARTIFACT_VERSION
 
 
 def _mini_net():
@@ -57,7 +59,7 @@ def _copy(saved, tmp_path):
 def test_manifest_checksums_cover_all_files(saved):
     art, _, _ = saved
     manifest = json.loads((art / "manifest.json").read_text())
-    assert manifest["version"] == 3
+    assert manifest["version"] == ARTIFACT_VERSION
     sums = manifest["checksums"]
     on_disk = {p.relative_to(art).as_posix()
                for p in art.rglob("*") if p.is_file()}
@@ -156,8 +158,42 @@ def _downgrade_to_v2(art):
 def test_v2_fixture_migrates_and_predicts(saved, tmp_path):
     art, x, y = _copy(saved, tmp_path)
     _downgrade_to_v2(art)
-    loaded = InferenceSession.load(art)
+    with pytest.warns(UnverifiedArtifactWarning, match="UNVERIFIED"):
+        loaded = InferenceSession.load(art)
     assert np.asarray(loaded.predict(x)).tobytes() == y.tobytes()
+
+
+def test_unverified_load_warns_exactly_once(saved, tmp_path):
+    """A migrated (checksum-less) artifact must say so explicitly — one
+    warning per load, not silence and not a warning storm."""
+    art, x, _ = _copy(saved, tmp_path)
+    _downgrade_to_v2(art)
+    with pytest.warns(UnverifiedArtifactWarning) as rec:
+        InferenceSession.load(art)
+    assert len([w for w in rec
+                if issubclass(w.category, UnverifiedArtifactWarning)]) == 1
+
+
+def test_resave_backfills_checksums(saved, tmp_path):
+    """One load -> save round trip upgrades a pre-v3 artifact to verified
+    integrity: the re-saved artifact carries a full checksum table and
+    loads without the unverified warning."""
+    import warnings as warnings_mod
+
+    art, x, y = _copy(saved, tmp_path)
+    _downgrade_to_v2(art)
+    with pytest.warns(UnverifiedArtifactWarning):
+        loaded = InferenceSession.load(art)
+    upgraded = tmp_path / "upgraded"
+    loaded.save(upgraded)
+    manifest = json.loads((upgraded / "manifest.json").read_text())
+    assert manifest["version"] == ARTIFACT_VERSION
+    assert manifest["checksums"] == dir_checksums(
+        upgraded, exclude=("manifest.json",))
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error", UnverifiedArtifactWarning)
+        re_loaded = InferenceSession.load(upgraded)
+    assert np.asarray(re_loaded.predict(x)).tobytes() == y.tobytes()
 
 
 def test_v1_fixture_migrates_through_v2_to_v3(saved, tmp_path):
@@ -171,7 +207,8 @@ def test_v1_fixture_migrates_through_v2_to_v3(saved, tmp_path):
     mf.write_text(json.dumps(blob))
     if (art / "source").exists():
         shutil.rmtree(art / "source")
-    loaded = InferenceSession.load(art)
+    with pytest.warns(UnverifiedArtifactWarning, match="UNVERIFIED"):
+        loaded = InferenceSession.load(art)
     assert loaded.frozen                     # v1 never packed a source
     assert np.asarray(loaded.predict(x)).tobytes() == y.tobytes()
 

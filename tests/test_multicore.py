@@ -297,3 +297,30 @@ def test_sharded_equivalence_two_forced_devices():
                           timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "SHARDED-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Importing launch entry points must not configure devices (regression:
+# launch.dryrun used to call configure_cpu_devices(512) at import time,
+# oversubscription-warning every importer and locking the device count
+# for the whole process — pytest collection included)
+# ---------------------------------------------------------------------------
+
+def test_importing_dryrun_has_no_device_side_effect():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::RuntimeWarning", "-c", textwrap.dedent("""
+            import os, jax
+            n_before = jax.device_count()       # locks the backend
+            import repro.launch.dryrun          # must be side-effect free
+            assert jax.device_count() == n_before, "device count changed"
+            assert "--xla_force_host_platform_device_count" \\
+                not in os.environ.get("XLA_FLAGS", ""), \\
+                "import mutated XLA_FLAGS"
+            print("IMPORT-CLEAN")
+        """)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "IMPORT-CLEAN" in proc.stdout

@@ -1,0 +1,342 @@
+"""Int8 weight-only quantization: round-trip properties, the int8
+template variants vs the fp32 oracle, the dtype schedule axis, and the
+end-to-end int8 session (agreement + smaller artifact) — the acceptance
+matrix of the quantized axis (ISSUE 8)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:   # the deterministic grid must run even without hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.epilogue import fold_dequant_scale
+from repro.core.layout import from_nchwc, kernel_to_kcrs_ck, to_nchwc
+from repro.core.quantize import (QMAX, dequantize_per_channel,
+                                 quantization_error_bound,
+                                 quantize_per_channel)
+from repro.core.schedule import (DTYPES, INT8_VARIANTS, ConvSchedule,
+                                 ConvWorkload, candidate_schedules)
+from repro.kernels.ops import conv2d_block_jnp
+from repro.kernels.ref import conv2d_nchw_ref
+
+
+# ---------------------------------------------------------------------------
+# Round-trip properties
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_within_half_step(rng):
+    w = rng.normal(size=(8, 4, 3, 3)).astype(np.float32)
+    q, scale = quantize_per_channel(w)
+    assert q.dtype == np.int8 and scale.shape == (8,)
+    assert np.abs(q).max() <= QMAX
+    err = np.abs(dequantize_per_channel(q, scale) - w)
+    bound = quantization_error_bound(scale)
+    assert np.all(err <= bound[:, None, None, None] + 1e-7)
+
+
+def test_per_channel_scales_are_independent(rng):
+    """Each output channel gets its own scale: blowing one channel up
+    must not degrade the others' resolution."""
+    w = rng.normal(size=(4, 4, 3, 3)).astype(np.float32)
+    w[0] *= 1e6
+    q, scale = quantize_per_channel(w)
+    assert scale[0] > 1e3 * scale[1:].max()
+    err = np.abs(dequantize_per_channel(q, scale) - w)
+    # the small channels keep small-channel accuracy
+    assert err[1:].max() <= quantization_error_bound(scale)[1:].max() + 1e-7
+
+
+def test_zero_channels_roundtrip_exactly(rng):
+    w = rng.normal(size=(4, 2, 3, 3)).astype(np.float32)
+    w[1] = 0.0
+    w[3] = 0.0
+    q, scale = quantize_per_channel(w)
+    assert scale[1] == 1.0 and scale[3] == 1.0      # no divide-by-zero
+    wd = dequantize_per_channel(q, scale)
+    assert np.all(wd[1] == 0.0) and np.all(wd[3] == 0.0)
+
+
+def test_extreme_dynamic_range(rng):
+    """Per-channel symmetric scales keep every channel within half a step
+    even when channel magnitudes span 16 orders of magnitude."""
+    w = rng.normal(size=(3, 2, 3, 3)).astype(np.float32)
+    w[0] *= 1e-8
+    w[2] *= 1e8
+    q, scale = quantize_per_channel(w)
+    err = np.abs(dequantize_per_channel(q, scale) - w)
+    bound = quantization_error_bound(scale)
+    for k in range(3):
+        assert err[k].max() <= bound[k] * (1 + 1e-5) + 1e-30
+
+
+def test_max_code_weights_are_exact():
+    """A channel whose amax element is exactly representable round-trips
+    bit-exactly: integer weights with per-channel max 127 give scale 1
+    and codes equal to the weights."""
+    w = np.array([[[[127., -3.], [2., 0.]]],
+                  [[[5., -127.], [1., -1.]]]], np.float32)
+    q, scale = quantize_per_channel(w)
+    np.testing.assert_array_equal(scale, [1.0, 1.0])
+    np.testing.assert_array_equal(q.astype(np.float32), w)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(cout=st.integers(1, 12), fan=st.integers(1, 16),
+           log_spread=st.floats(-20, 20), seed=st.integers(0, 2**16))
+    def test_roundtrip_hypothesis(cout, fan, log_spread, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(cout, fan)).astype(np.float32)
+        w *= np.exp2(rng.uniform(-abs(log_spread), abs(log_spread),
+                                 size=(cout, 1))).astype(np.float32)
+        q, scale = quantize_per_channel(w)
+        err = np.abs(dequantize_per_channel(q, scale) - w)
+        bound = quantization_error_bound(scale) * (1 + 1e-5)
+        assert np.all(err <= bound[:, None] + 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Int8 template variants vs the fp32 oracle
+# ---------------------------------------------------------------------------
+
+def _int8_case(variant, ic_bn, stride, seed, hw=9, oc_bn=8):
+    """Mirror of test_template_variants._run_case for the int8 axis: the
+    int8 template on (codes, dequant scale) must match the NCHW oracle on
+    the *dequantized* weights to fp32 tolerance — quantization error is
+    in the weights, not the lowering."""
+    cin, cout = ic_bn * 2, oc_bn * 2
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, cin, hw, hw)).astype(np.float32))
+    w = rng.normal(size=(cout, cin, 3, 3)).astype(np.float32)
+    q, w_scale = quantize_per_channel(w)
+    wd = dequantize_per_channel(q, w_scale)
+    shift = rng.normal(size=cout).astype(np.float32)
+
+    ref = conv2d_nchw_ref(x, jnp.asarray(wd), stride=stride, pad=1)
+    want = np.maximum(np.asarray(ref) + shift[None, :, None, None], 0.0)
+
+    xb = to_nchwc(x, ic_bn)
+    wb = kernel_to_kcrs_ck(jnp.asarray(q), ic_bn, oc_bn)
+    assert wb.dtype == jnp.int8           # codes survive the relayout
+    ko = cout // oc_bn
+    out = conv2d_block_jnp(
+        xb, wb, jnp.asarray(w_scale.reshape(ko, oc_bn)),
+        jnp.asarray(shift.reshape(ko, oc_bn)), None, None,
+        stride=stride, pad=1, relu=True, variant=variant, dtype="int8")
+    np.testing.assert_allclose(np.asarray(from_nchwc(out)), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", INT8_VARIANTS)
+@pytest.mark.parametrize("ic_bn", [4, 8, 16])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_int8_variant_matrix(variant, ic_bn, stride):
+    _int8_case(variant, ic_bn, stride, seed=0)
+
+
+def test_int8_exact_on_integer_weights():
+    """Integer weights with per-channel amax 127 quantize losslessly, so
+    the int8 path must be bit-identical to the fp32 path (the dequant
+    scale is exactly 1 and fp32 arithmetic on small ints is exact)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-3, 4, size=(1, 8, 8, 8))
+                    .astype(np.float32))
+    w = rng.integers(-3, 4, size=(16, 8, 3, 3)).astype(np.float32)
+    w[:, 0, 0, 0] = 127.0                 # pins every channel's scale to 1
+    q, w_scale = quantize_per_channel(w)
+    np.testing.assert_array_equal(w_scale, np.ones(16, np.float32))
+    xb = to_nchwc(x, 8)
+    f32 = conv2d_block_jnp(xb, kernel_to_kcrs_ck(jnp.asarray(w), 8, 8),
+                           None, None, None, None, pad=1,
+                           variant="tap_stack")
+    i8 = conv2d_block_jnp(xb, kernel_to_kcrs_ck(jnp.asarray(q), 8, 8),
+                          jnp.asarray(w_scale.reshape(2, 8)), None, None,
+                          None, pad=1, variant="tap_stack", dtype="int8")
+    assert np.asarray(i8).tobytes() == np.asarray(f32).tobytes()
+
+
+def test_int8_requires_scale_and_supported_variant():
+    rng = np.random.default_rng(0)
+    xb = to_nchwc(jnp.asarray(rng.normal(size=(1, 8, 6, 6))
+                              .astype(np.float32)), 8)
+    q, w_scale = quantize_per_channel(
+        rng.normal(size=(8, 8, 3, 3)).astype(np.float32))
+    wb = kernel_to_kcrs_ck(jnp.asarray(q), 8, 8)
+    with pytest.raises(ValueError, match="scale"):
+        conv2d_block_jnp(xb, wb, None, None, None, None, pad=1,
+                         variant="tap_stack", dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        conv2d_block_jnp(xb, wb, jnp.asarray(w_scale.reshape(1, 8)), None,
+                         None, None, pad=1, variant="per_tap", dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# The dtype schedule axis
+# ---------------------------------------------------------------------------
+
+def _wl(quantize):
+    return ConvWorkload(batch=1, in_channels=16, out_channels=16, height=8,
+                        width=8, kh=3, kw=3, pad=1, fused_bn=True,
+                        fused_relu=True, quantize=quantize)
+
+
+def test_candidates_enumerate_int8_only_when_quantize():
+    plain = candidate_schedules(_wl(False))
+    assert all(s.dtype == "fp32" for s in plain)
+    quant = candidate_schedules(_wl(True))
+    by_dtype = {d: [s for s in quant if s.dtype == d] for d in DTYPES}
+    assert by_dtype["int8"], "quantized workload must offer int8 schedules"
+    # int8 exists only for the variants with an int8 instantiation
+    assert {s.resolved_variant() for s in by_dtype["int8"]} \
+        == set(INT8_VARIANTS)
+    # the fp32 side of the space is unchanged by the axis
+    assert {dataclasses_key(s) for s in plain} \
+        == {dataclasses_key(s) for s in by_dtype["fp32"]}
+
+
+def dataclasses_key(s):
+    return (s.ic_bn, s.oc_bn, s.ow_bn, s.oh_bn, s.unroll_ker, s.variant)
+
+
+def test_int8_schedule_validates_only_int8_variants():
+    wl = _wl(True)
+    ConvSchedule(8, 8, 1, 1, False, "tap_stack", dtype="int8").validate(wl)
+    with pytest.raises(ValueError, match="int8"):
+        ConvSchedule(8, 8, 1, 1, False, "scan", dtype="int8").validate(wl)
+    with pytest.raises(ValueError, match="dtype"):
+        ConvSchedule(8, 8, 1, 1, False, "scan", dtype="fp16").validate(wl)
+
+
+def test_cost_model_prices_int8_weight_traffic():
+    """Same blocking, same variant: the analytical cost must price int8
+    strictly cheaper (4x lighter weight traffic, identical compute)."""
+    from repro.core.cost import conv_schedule_cost
+    wl = _wl(True)
+    f32 = conv_schedule_cost(wl, ConvSchedule(8, 8, 1, 1, False,
+                                              "tap_stack"))
+    i8 = conv_schedule_cost(wl, ConvSchedule(8, 8, 1, 1, False, "tap_stack",
+                                             dtype="int8"))
+    assert i8.memory_s < f32.memory_s
+    assert i8.total_s <= f32.total_s
+    # a weight-dominated geometry (late-net conv: fat channels, tiny
+    # spatial) is memory-bound, so int8's lighter traffic wins total too
+    big = ConvWorkload(batch=1, in_channels=256, out_channels=512, height=2,
+                       width=2, kh=3, kw=3, pad=1, fused_bn=True,
+                       fused_relu=True, quantize=True)
+    f32b = conv_schedule_cost(big, ConvSchedule(16, 16, 1, 1, False,
+                                                "tap_stack"))
+    i8b = conv_schedule_cost(big, ConvSchedule(16, 16, 1, 1, False,
+                                               "tap_stack", dtype="int8"))
+    assert f32b.memory_s > f32b.compute_s          # genuinely memory-bound
+    assert i8b.total_s < f32b.total_s
+
+
+def test_dtype_survives_database_blob():
+    """dtype rides the schedule database round trip, and pre-dtype blobs
+    (no field) still load as fp32."""
+    from repro.core.local_search import (LocalSearchResult, RankedSchedule,
+                                         ScheduleDatabase, _wl_key)
+    wl = _wl(True)
+    s = ConvSchedule(8, 8, 1, 1, False, "patch_gemm", dtype="int8")
+    db = ScheduleDatabase()
+    db.put(wl, LocalSearchResult(workload=wl,
+                                 ranked=[RankedSchedule(s, 1e-3)],
+                                 measured=True, search_budget=(1, 1)))
+    db2 = ScheduleDatabase()
+    db2.load_blob(json.loads(json.dumps(db.to_blob())))
+    got = db2._mem[_wl_key(wl)].best
+    assert got.dtype == "int8"
+    # legacy blob: pre-dtype entries (no field, plain key) default to fp32
+    blob = {}
+    for key, rec in db.to_blob().items():
+        for r in rec["ranked"]:
+            r["schedule"].pop("dtype")
+        rec["workload"].pop("quantize")
+        blob[key.replace("_q8", "")] = rec
+    db3 = ScheduleDatabase()
+    db3.load_blob(blob)
+    assert db3._mem[_wl_key(_wl(False))].best.dtype == "fp32"
+
+
+def test_quantized_workloads_keyed_apart():
+    """A quantized search ranks a larger space than the fp32 search of
+    the same geometry — the database must never conflate them."""
+    from repro.core.local_search import _wl_key
+    assert _wl_key(_wl(True)) != _wl_key(_wl(False))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: int8 session vs its fp32 twin
+# ---------------------------------------------------------------------------
+
+def _block_net():
+    from repro.core.graph import Graph
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=16, kh=3,
+          kw=3, stride=1, pad=1)
+    g.add("b1", "batch_norm", ["c1"])
+    g.add("r1", "relu", ["b1"])
+    g.add("c2", "conv2d", ["r1"], in_channels=16, out_channels=32, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("b2", "batch_norm", ["c2"])
+    g.add("r2", "relu", ["b2"])
+    g.add("gap", "global_avg_pool", ["r2"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=10)
+    g.mark_output("fc")
+    return g, {"in": (2, 3, 16, 16)}
+
+
+def test_int8_session_agreement_and_artifact(tmp_path, rng):
+    """dtype="int8" end to end: the plan binds int8 codes for at least
+    one conv, predictions agree with the fp32 twin on top-1, the saved
+    artifact carries a checksummed quantized payload, its weight blobs
+    are smaller, and it round-trips bit-identically."""
+    from repro.engine import InferenceSession
+    from repro.engine import compile as compile_session
+
+    g, shapes = _block_net()
+    g2, _ = _block_net()
+    f32 = compile_session(g, shapes, seed=7)
+    i8 = compile_session(g2, shapes, seed=7, dtype="int8")
+
+    sch = i8.plan_for(2).planned.schedules
+    assert any(s.dtype == "int8" for s in sch.values())
+
+    x = jnp.asarray(rng.normal(size=shapes["in"]).astype(np.float32))
+    yf, yq = np.asarray(f32.predict(x)), np.asarray(i8.predict(x))
+    assert np.array_equal(np.argmax(yf, 1), np.argmax(yq, 1))
+    # weight-only W8 keeps logits close, not identical
+    assert float(np.max(np.abs(yf - yq))) < 0.05 * float(np.max(np.abs(yf)))
+
+    a8 = i8.save(tmp_path / "a8")
+    a32 = f32.save(tmp_path / "a32")
+    manifest = json.loads((a8 / "manifest.json").read_text())
+    assert manifest["quantized"]["dtype"] == "int8"
+    assert "quantized.json" in manifest["checksums"]
+    payload = json.loads((a8 / "quantized.json").read_text())
+    assert any(d == "int8"
+               for d in payload["schedule_dtypes"]["2"].values())
+    # fp32 artifacts carry no quantized payload
+    assert json.loads((a32 / "manifest.json").read_text())["quantized"] \
+        is None
+
+    def conv_weight_bytes(art):
+        total = 0
+        for f in (art / "weights").rglob("*.npy"):
+            arr = np.load(f)
+            if arr.ndim >= 5:             # blocked conv weights
+                total += arr.nbytes
+        return total
+
+    assert conv_weight_bytes(a8) < 0.55 * conv_weight_bytes(a32)
+
+    loaded = InferenceSession.load(a8)
+    assert loaded.dtype == "int8"
+    assert np.asarray(loaded.predict(x)).tobytes() == yq.tobytes()

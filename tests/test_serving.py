@@ -360,3 +360,83 @@ def test_padded_predict_matches_direct_at_bucket(session, rng):
     assert y.tobytes() == direct.tobytes()
     with pytest.raises(ValueError, match="bucket"):
         padded_predict(session, _x(rng, 3), bucket=2)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot atomicity: stats()/health() under real concurrent load
+# ---------------------------------------------------------------------------
+
+def test_stats_snapshots_consistent_under_threads(session, rng):
+    """Hammer the server from several submitter threads while sampler
+    threads read ``stats``/``health()`` concurrently: every snapshot must
+    be internally consistent (no torn reads).  With no deadlines, faults,
+    or cancels, every health snapshot satisfies
+
+        submitted == completed + failed + shed + queue + in-flight
+
+    and the stats copy's per-batch lists (appended in the same locked
+    section) always agree in length."""
+    n_threads, per_thread = 4, 20
+    xs = [_x(rng, 1) for _ in range(4)]
+    srv = AsyncServer(session,
+                      DynamicBatchPolicy(max_batch=4, max_wait_ms=2.0),
+                      workers=2, max_queue=256)
+    futures, errors = [], []
+    flock = threading.Lock()
+    done = threading.Event()
+
+    def submitter(i):
+        for j in range(per_thread):
+            f = srv.submit(xs[(i + j) % len(xs)])
+            with flock:
+                futures.append(f)
+
+    def sampler():
+        while not done.is_set():
+            h = srv.health()
+            c = h["counters"]
+            lhs = c["n_submitted"]
+            rhs = (c["n_completed"] + c["n_failed"] + c["n_shed"]
+                   + c["n_cancelled"] + c["n_deadline_expired"]
+                   + h["queue_depth"] + h["inflight_requests"])
+            if lhs != rhs:
+                errors.append(f"torn health snapshot: {lhs} != {rhs} ({c})")
+            s = srv.stats
+            if len(s.latencies_s) != s.n_completed:
+                errors.append("torn stats copy: "
+                              f"{len(s.latencies_s)} latencies vs "
+                              f"{s.n_completed} completed")
+            if len(s.batch_rows) != s.n_batches:
+                errors.append("torn stats copy: "
+                              f"{len(s.batch_rows)} batch_rows vs "
+                              f"{s.n_batches} batches")
+            if sum(s.worker_batches.values()) != len(s.batch_rows):
+                errors.append("torn stats copy: worker_batches "
+                              f"{s.worker_batches} vs "
+                              f"{len(s.batch_rows)} batches")
+
+    threads = ([threading.Thread(target=submitter, args=(i,))
+                for i in range(n_threads)]
+               + [threading.Thread(target=sampler) for _ in range(2)])
+    try:
+        for t in threads:
+            t.start()
+        for t in threads[:n_threads]:
+            t.join(timeout=60)
+        for f in futures:
+            f.result(timeout=60)
+    finally:
+        done.set()
+        for t in threads[n_threads:]:
+            t.join(timeout=10)
+        srv.close()
+    assert not errors, errors[:5]
+
+    # quiescent: everything submitted was completed, nothing left over
+    s = srv.stats
+    assert s.n_submitted == n_threads * per_thread
+    assert s.n_completed == s.n_submitted
+    assert s.n_failed == s.n_shed == s.n_cancelled == 0
+    assert sum(s.batch_rows) == s.n_submitted
+    h = srv.health()
+    assert h["queue_depth"] == 0 and h["inflight_requests"] == 0

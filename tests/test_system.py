@@ -82,3 +82,30 @@ def test_compressed_training_still_learns(tmp_path):
         "--seq", "32", "--compress-grads", "--log-every", "100",
         "--ckpt-dir", str(tmp_path)])
     assert losses[-1] < losses[0]
+
+
+def test_serve_artifact_dtype_gate(tmp_path, rng):
+    """--dtype asserts the artifact's weight precision: a match serves,
+    a mismatch fails fast and typed instead of silently serving the
+    other precision."""
+    from repro.core.graph import Graph
+    from repro.engine import compile as compile_session
+    from repro.launch.serve import main as serve_main
+
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=8, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("r1", "relu", ["c1"])
+    g.add("gap", "global_avg_pool", ["r1"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=10)
+    g.mark_output("fc")
+    art = tmp_path / "art"
+    compile_session(g, {"in": (1, 3, 16, 16)}).save(art)
+
+    base = ["--artifact", str(art), "--requests", "3", "--max-batch", "1"]
+    out = serve_main(base + ["--dtype", "fp32"])
+    assert out is not None and np.asarray(out).shape == (1, 10)
+    with pytest.raises(ValueError, match="int8.*fp32 precision"):
+        serve_main(base + ["--dtype", "int8"])
