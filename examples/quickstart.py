@@ -20,6 +20,11 @@ replica-shard every specialization over the batch axis with
 ``compile(..., devices=n)`` (after
 ``repro.launch.cpu.configure_cpu_devices(n)``) or serve through
 ``AsyncServer(workers=n)`` replicas — docs/api.md "Multi-core execution".
+For traffic-aware serving — measured arrival histograms, the learned
+bucket-set solver behind ``save(buckets="auto")``, priority classes with
+EDF packing, and multi-tenant ``FleetServer`` hosting — see docs/api.md
+"Traffic-aware serving" and the replay benchmark
+``benchmarks/serving_trace.py`` (``--smoke`` runs the CI gates locally).
 """
 import sys
 import time

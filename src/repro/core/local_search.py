@@ -321,6 +321,22 @@ class ScheduleDatabase:
         if self.path:
             self._save()
 
+    def merge(self, other: "ScheduleDatabase") -> int:
+        """Fold another database's entries into this one; existing keys
+        win (first tenant to contribute a workload keeps its measured
+        ranking).  Returns the number of entries added.  This is how a
+        fleet shares one schedule database across tenant sessions: each
+        loaded artifact's db merges in, and every session is then pointed
+        at the shared instance."""
+        added = 0
+        for key, result in other._mem.items():
+            if key not in self._mem:
+                self._mem[key] = result
+                added += 1
+        if added and self.path:
+            self._save()
+        return added
+
     # -- persistence ---------------------------------------------------------
     def to_blob(self, measured_only: bool = False) -> Dict:
         """JSON-serializable form of the entries — the unit the path-backed

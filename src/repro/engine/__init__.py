@@ -10,16 +10,27 @@ overload shedding; ``engine/faults.py`` provides the deterministic fault
 injection the failure paths are tested and benchmarked with;
 ``engine/supervision.py`` holds the pure decision logic (heartbeats,
 stragglers, retry backoff, shed policies).
+
+The traffic subsystem closes the serving loop on *measured* load:
+``engine/telemetry.py`` (bounded streaming statistics — fixed-budget
+size histograms, P² quantile estimators), ``engine/traffic.py`` (the
+learned bucket-set solver behind ``save(buckets="auto")``, priority
+classes, synthetic trace generation), and ``engine/fleet.py``
+(``FleetServer``: multi-tenant hosting under a shared schedule db and
+an LRU memory budget).
 """
 from repro.engine.executor import CompiledModel, bind_params, compile_model
 from repro.engine.faults import (DelayBatch, FailBatch, FaultInjector,
                                  InjectedFault, InjectedPredictError,
                                  InjectedWorkerCrash, KillWorker,
                                  corrupt_artifact, corrupt_file)
+from repro.engine.fleet import (DuplicateModelError, FleetServer,
+                                MemoryBudgetError, UnknownModelError)
 from repro.engine.serving import (AllWorkersUnhealthyError, AsyncServer,
                                   BatchPolicy, DeadlineExceededError,
                                   DynamicBatchPolicy, LoadShedError,
-                                  QueueFullError, RetriesExhaustedError,
+                                  QueueFullError, RequestTooLargeError,
+                                  RetriesExhaustedError,
                                   ServerClosedError, ServingError,
                                   ServingStats, WorkerCrashError,
                                   nearest_bucket, padded_predict)
@@ -29,17 +40,29 @@ from repro.engine.session import (ArtifactCorruptError, ArtifactError,
 from repro.engine.supervision import (HeartbeatMonitor, RetryPolicy,
                                       SHED_POLICIES, StragglerMitigator,
                                       StragglerPolicy, choose_shed_victim)
+from repro.engine.telemetry import (P2Quantile, SizeHistogram,
+                                    StreamingQuantiles)
+from repro.engine.traffic import (DEFAULT_PRIORITY, PRIORITY_CLASSES,
+                                  TRACE_KINDS, TraceRequest,
+                                  expected_padded_waste, priority_rank,
+                                  solve_buckets, synth_trace)
 
 __all__ = ["AllWorkersUnhealthyError", "ArtifactCorruptError",
            "ArtifactError", "AsyncServer", "BatchPolicy", "CompiledModel",
-           "DeadlineExceededError", "DelayBatch", "DynamicBatchPolicy",
-           "FailBatch", "FaultInjector", "HeartbeatMonitor",
+           "DEFAULT_PRIORITY", "DeadlineExceededError", "DelayBatch",
+           "DuplicateModelError", "DynamicBatchPolicy",
+           "FailBatch", "FaultInjector", "FleetServer", "HeartbeatMonitor",
            "InferenceSession", "InjectedFault", "InjectedPredictError",
            "InjectedWorkerCrash", "KillWorker", "LoadShedError",
-           "QueueFullError", "RetriesExhaustedError", "RetryPolicy",
+           "MemoryBudgetError", "P2Quantile", "PRIORITY_CLASSES",
+           "QueueFullError", "RequestTooLargeError",
+           "RetriesExhaustedError", "RetryPolicy",
            "SHED_POLICIES", "ServerClosedError", "ServingError",
-           "ServingStats", "Session", "StragglerMitigator",
-           "StragglerPolicy", "UnverifiedArtifactWarning",
-           "WorkerCrashError", "bind_params", "compile",
-           "compile_model", "choose_shed_victim", "corrupt_artifact",
-           "corrupt_file", "nearest_bucket", "padded_predict"]
+           "ServingStats", "Session", "SizeHistogram",
+           "StragglerMitigator", "StragglerPolicy", "StreamingQuantiles",
+           "TRACE_KINDS", "TraceRequest", "UnknownModelError",
+           "UnverifiedArtifactWarning", "WorkerCrashError", "bind_params",
+           "compile", "compile_model", "choose_shed_victim",
+           "corrupt_artifact", "corrupt_file", "expected_padded_waste",
+           "nearest_bucket", "padded_predict", "priority_rank",
+           "solve_buckets", "synth_trace"]

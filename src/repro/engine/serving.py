@@ -23,8 +23,12 @@ Batching policy (``DynamicBatchPolicy``):
 
 * a batch is flushed when pending rows reach ``max_batch``, when the
   oldest request has waited ``max_wait_ms``, or immediately during drain;
-* requests are packed strictly FIFO (never reordered — trivially,
-  never reordered within a deadline class);
+* by default requests are packed strictly FIFO (never reordered —
+  trivially, never reordered within a deadline class);
+  ``order="edf"`` switches the *packing order* to
+  earliest-deadline-first with priority-class tie-breaks (see
+  ``repro.engine.traffic``) — flush timing and numerics are unchanged,
+  because every request still runs through the same bucket programs;
 * the executed bucket is the *smallest* specialized batch size that fits
   the packed rows, so the padded waste of a batch of ``n`` rows is exactly
   ``nearest_bucket(n) - n`` — the minimum achievable given the artifact's
@@ -111,12 +115,13 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.engine.faults import FaultInjector, InjectedWorkerCrash
 from repro.engine.supervision import (HeartbeatMonitor, RetryPolicy,
                                       SHED_POLICIES, StragglerMitigator,
                                       StragglerPolicy, choose_shed_victim)
+from repro.engine.telemetry import SizeHistogram, StreamingQuantiles
+from repro.engine.traffic import DEFAULT_PRIORITY, priority_rank
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +134,16 @@ class ServingError(RuntimeError):
 
 class QueueFullError(ServingError):
     """Backpressure: the bounded request queue is at capacity."""
+
+
+class RequestTooLargeError(ServingError, ValueError):
+    """The request's row count exceeds the packable maximum (the policy's
+    ``max_batch``, clamped to the pinned bucket and — for frozen
+    sessions — the largest specialized bucket).  Rejected at ``submit``,
+    never queued: the driver could only under-allocate it or fail it
+    late.  Split the request, raise ``max_batch``, or re-save the
+    artifact with a larger bucket.  Subclasses ``ValueError`` for
+    backward compatibility with pre-typed callers."""
 
 
 class DeadlineExceededError(ServingError):
@@ -221,14 +236,18 @@ class Request:
     deadline: Optional[float] = None     # absolute clock time, or None
     retries: int = 0                     # re-executions consumed so far
     not_before: Optional[float] = None   # retry backoff gate (absolute)
+    priority: str = DEFAULT_PRIORITY     # one of traffic.PRIORITY_CLASSES
+    rank: int = 1                        # cached priority_rank(priority)
 
 
 class BatchPolicy:
-    """Decides *when* a batch forms and *how many* FIFO requests it takes.
+    """Decides *when* a batch forms and *which* requests it takes.
 
     Subclasses see only the pending queue and the clock, never the
     session — policies are pure scheduling logic and unit-testable without
-    compiling anything."""
+    compiling anything.  ``select`` (which indices to pack) defaults to
+    the FIFO prefix ``take`` returns, so pre-existing policies that only
+    implement ``ready``/``take`` keep their exact behavior."""
 
     max_batch: int = 8
 
@@ -237,6 +256,12 @@ class BatchPolicy:
 
     def take(self, pending: Sequence[Request], cap: int) -> int:
         raise NotImplementedError
+
+    def select(self, pending: Sequence[Request], cap: int,
+               now: float) -> List[int]:
+        """Indices (into ``pending``) of the requests to pack, in batch
+        order.  Default: the FIFO prefix of length ``take``."""
+        return list(range(self.take(pending, cap)))
 
     def next_event(self, pending: Sequence[Request],
                    now: float) -> Optional[float]:
@@ -258,11 +283,23 @@ class DynamicBatchPolicy(BatchPolicy):
     a partially-filled flush then pads up to the same program a full
     flush runs, so results are bit-reproducible regardless of traffic
     shape (the strict-determinism serving mode; the default ``None``
-    lets small flushes use smaller buckets)."""
+    lets small flushes use smaller buckets).
+
+    ``order="edf"`` replaces FIFO *packing order* with
+    earliest-deadline-first: eligible requests sort by (has a deadline,
+    deadline, priority rank, arrival, queue index) and pack greedily
+    into the cap — urgent interactive work jumps the queue ahead of
+    deadline-free batch work.  Flush *timing* (``ready``) is unchanged,
+    and every request still executes through the same fixed-shape bucket
+    programs, so reordering never changes any request's numerics — the
+    fixed-bucket bit-identity guarantee survives EDF verbatim.  The
+    default ``order="fifo"`` preserves the strict never-reordered
+    property the FIFO invariants are property-tested against."""
 
     max_batch: int = 8
     max_wait_ms: float = 5.0
     fixed_bucket: Optional[int] = None
+    order: str = "fifo"
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
@@ -273,6 +310,9 @@ class DynamicBatchPolicy(BatchPolicy):
         if self.fixed_bucket is not None and self.fixed_bucket < 1:
             raise ValueError(
                 f"fixed_bucket must be >= 1, got {self.fixed_bucket}")
+        if self.order not in ("fifo", "edf"):
+            raise ValueError(
+                f"order must be 'fifo' or 'edf', got {self.order!r}")
 
     def ready(self, pending: Sequence[Request], now: float) -> bool:
         if not pending:
@@ -295,6 +335,29 @@ class DynamicBatchPolicy(BatchPolicy):
                 break
         return n
 
+    def select(self, pending: Sequence[Request], cap: int,
+               now: float) -> List[int]:
+        if self.order == "fifo":
+            return list(range(self.take(pending, cap)))
+
+        def key(i: int):
+            r = pending[i]
+            dl = r.deadline if r.deadline is not None else float("inf")
+            return (r.deadline is None, dl, getattr(r, "rank", 1),
+                    r.t_submit, i)
+
+        chosen: List[int] = []
+        total = 0
+        for i in sorted(range(len(pending)), key=key):
+            rows = pending[i].rows
+            if chosen and total + rows > cap:
+                continue             # skip what no longer fits, keep packing
+            chosen.append(i)
+            total += rows
+            if total >= cap:
+                break
+        return chosen
+
     def next_event(self, pending: Sequence[Request],
                    now: float) -> Optional[float]:
         if not pending:
@@ -310,11 +373,29 @@ class DynamicBatchPolicy(BatchPolicy):
 
 @dataclasses.dataclass
 class ServingStats:
-    """Counters + latency distribution of one server's lifetime."""
+    """Counters + bounded distributions of one server's lifetime.
+
+    Built on the O(1)-memory telemetry primitives (the pre-telemetry
+    version kept every batch size and every latency in unbounded Python
+    lists — a leak under sustained load):
+
+    * ``arrival_hist`` — request sizes as submitted (what
+      ``traffic.solve_buckets`` learns bucket sets from);
+    * ``batch_hist`` — real rows per *executed* batch (``rows`` equals
+      ``n_submitted``'s rows at quiescence; padded waste is the separate
+      exact counter ``rows_padded``);
+    * ``latency`` / ``latency_by_class`` — submit-to-resolve seconds,
+      overall and per priority class, exact for small samples and
+      P²-estimated past the buffer;
+    * ``queue_depth_peak`` — high-water mark of the pending queue.
+
+    ``snapshot()`` (and ``AsyncServer.stats``) returns a detached,
+    internally-consistent copy."""
 
     n_submitted: int = 0
     n_completed: int = 0
     n_rejected_full: int = 0
+    n_rejected_too_large: int = 0  # typed RequestTooLargeError at submit
     n_deadline_expired: int = 0
     n_failed: int = 0
     n_batches: int = 0
@@ -327,20 +408,52 @@ class ServingStats:
     n_worker_crashes: int = 0      # worker threads that died mid-service
     n_worker_restarts: int = 0     # supervisor-spawned replacements
     n_hung_requeued: int = 0       # watchdog-requeued in-flight batches
-    batch_rows: List[int] = dataclasses.field(default_factory=list)
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    queue_depth_peak: int = 0
+    arrival_hist: SizeHistogram = dataclasses.field(
+        default_factory=SizeHistogram)
+    batch_hist: SizeHistogram = dataclasses.field(
+        default_factory=SizeHistogram)
+    latency: StreamingQuantiles = dataclasses.field(
+        default_factory=StreamingQuantiles)
+    latency_by_class: Dict[str, StreamingQuantiles] = dataclasses.field(
+        default_factory=dict)
     worker_batches: dict = dataclasses.field(default_factory=dict)
 
+    @property
+    def mean_batch_rows(self) -> float:
+        return self.rows_executed / self.n_batches if self.n_batches else 0.0
+
+    def record_latency(self, seconds: float, priority: str) -> None:
+        self.latency.add(seconds)
+        per = self.latency_by_class.get(priority)
+        if per is None:
+            per = self.latency_by_class[priority] = StreamingQuantiles()
+        per.add(seconds)
+
     def percentile_ms(self, q: float) -> float:
-        if not self.latencies_s:
+        if self.latency.count == 0:
             return float("nan")
-        return float(np.percentile(np.asarray(self.latencies_s), q) * 1e3)
+        return self.latency.percentile(q) * 1e3
+
+    def snapshot(self) -> "ServingStats":
+        """Detached copy: the distributions are copied, so mutating the
+        snapshot (or the live object afterwards) changes nothing in the
+        other.  Callers holding the server lock get atomicity too."""
+        return dataclasses.replace(
+            self,
+            arrival_hist=self.arrival_hist.copy(),
+            batch_hist=self.batch_hist.copy(),
+            latency=self.latency.copy(),
+            latency_by_class={k: v.copy()
+                              for k, v in self.latency_by_class.items()},
+            worker_batches=dict(self.worker_batches))
 
     def to_json(self) -> dict:
         return {
             "n_submitted": self.n_submitted,
             "n_completed": self.n_completed,
             "n_rejected_full": self.n_rejected_full,
+            "n_rejected_too_large": self.n_rejected_too_large,
             "n_deadline_expired": self.n_deadline_expired,
             "n_failed": self.n_failed,
             "n_batches": self.n_batches,
@@ -353,11 +466,16 @@ class ServingStats:
             "n_worker_crashes": self.n_worker_crashes,
             "n_worker_restarts": self.n_worker_restarts,
             "n_hung_requeued": self.n_hung_requeued,
-            "mean_batch_rows": (sum(self.batch_rows) / len(self.batch_rows)
-                                if self.batch_rows else 0.0),
+            "queue_depth_peak": self.queue_depth_peak,
+            "mean_batch_rows": self.mean_batch_rows,
             "p50_ms": round(self.percentile_ms(50), 3),
             "p90_ms": round(self.percentile_ms(90), 3),
             "p99_ms": round(self.percentile_ms(99), 3),
+            "arrival_hist": self.arrival_hist.to_json(),
+            "batch_hist": self.batch_hist.to_json(),
+            "latency_by_class": {k: v.to_json()
+                                 for k, v in sorted(self.latency_by_class
+                                                    .items())},
             "worker_batches": {str(k): v
                                for k, v in sorted(self.worker_batches
                                                   .items())},
@@ -401,6 +519,7 @@ class AsyncServer:
                  watchdog_ms: Optional[float] = None,
                  max_restarts: int = 2,
                  faults: Optional[FaultInjector] = None,
+                 priority_default: str = DEFAULT_PRIORITY,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  autostart: bool = True) -> None:
@@ -422,6 +541,8 @@ class AsyncServer:
             raise ValueError(
                 f"fixed_bucket={fixed} is not a specialized batch size of "
                 f"this frozen session (has {session.batch_sizes})")
+        priority_rank(priority_default)      # typed validation up front
+        self.priority_default = priority_default
         self.max_queue = max_queue
         self.workers = workers
         self._pin_sets = self._resolve_pin(pin, workers)
@@ -495,11 +616,7 @@ class AsyncServer:
         n_submitted``), and the copy is detached — mutating it changes
         nothing in the server."""
         with self._cond:
-            return dataclasses.replace(
-                self._stats,
-                batch_rows=list(self._stats.batch_rows),
-                latencies_s=list(self._stats.latencies_s),
-                worker_batches=dict(self._stats.worker_batches))
+            return self._stats.snapshot()
 
     # -- capacity ------------------------------------------------------------
     def _cap(self) -> int:
@@ -515,12 +632,15 @@ class AsyncServer:
         return cap
 
     # -- client side ---------------------------------------------------------
-    def submit(self, x, deadline_ms: Optional[float] = None) -> Future:
+    def submit(self, x, deadline_ms: Optional[float] = None,
+               priority: Optional[str] = None) -> Future:
         """Enqueue one request (leading dim = rows).  Raises
         :class:`QueueFullError` at capacity (unless the shed policy
         evicts a queued request instead), :class:`DeadlineExceededError`
         for an already-expired deadline, :class:`ServerClosedError` after
-        close/drain, ValueError for an unpackable request."""
+        close/drain, :class:`RequestTooLargeError` past the packable
+        maximum, ValueError for a malformed request or unknown
+        ``priority`` class."""
         x = jnp.asarray(x)
         (spec,) = self.session.input_spec.values()
         if x.ndim != len(spec):
@@ -529,8 +649,12 @@ class AsyncServer:
         rows = int(x.shape[0])
         if rows < 1:
             raise ValueError("empty request")
+        priority = self.priority_default if priority is None else priority
+        rank = priority_rank(priority)
         if rows > self._cap():
-            raise ValueError(
+            with self._cond:
+                self._stats.n_rejected_too_large += 1
+            raise RequestTooLargeError(
                 f"request of {rows} rows exceeds the packable maximum "
                 f"{self._cap()} (policy max_batch clamped to the largest "
                 "specialized bucket of a frozen session); split it")
@@ -565,15 +689,24 @@ class AsyncServer:
                         f"shed by the {self.shed!r} overload policy after "
                         f"{(now - shed.t_submit) * 1e3:.1f} ms queued")):
                     self._stats.n_shed += 1
-            self._pending.append(Request(x, rows, fut, now, deadline))
+            self._pending.append(Request(x, rows, fut, now, deadline,
+                                         priority=priority, rank=rank))
             self._stats.n_submitted += 1
+            self._stats.arrival_hist.add(rows)
+            self._stats.queue_depth_peak = max(
+                self._stats.queue_depth_peak, len(self._pending))
+            traffic = getattr(self.session, "traffic", None)
+            if traffic is not None:
+                traffic.add(rows)        # feeds save(buckets="auto")
             self._cond.notify_all()
         return fut
 
     def predict(self, x, deadline_ms: Optional[float] = None,
-                timeout: Optional[float] = None):
+                timeout: Optional[float] = None,
+                priority: Optional[str] = None):
         """Blocking convenience: submit + wait."""
-        return self.submit(x, deadline_ms=deadline_ms).result(timeout)
+        return self.submit(x, deadline_ms=deadline_ms,
+                           priority=priority).result(timeout)
 
     # -- scheduling core -----------------------------------------------------
     @staticmethod
@@ -651,11 +784,22 @@ class AsyncServer:
         if not (self._draining or filled
                 or self.policy.ready(pending, now)):
             return None
-        n = self.policy.take(pending, cap)
-        if n <= 0:
+        idxs = self.policy.select(pending, cap, now)
+        if not idxs:
             return None
-        n = min(n, len(pending))
-        return [self._pending.popleft() for _ in range(n)]
+        # `pending` is a prefix of the deque, so indices into it address
+        # the same positions in self._pending; de-dup defensively and
+        # remove back-to-front so earlier indices stay valid
+        seen: set = set()
+        idxs = [i for i in idxs
+                if 0 <= i < len(pending)
+                and not (i in seen or seen.add(i))]
+        if not idxs:
+            return None
+        batch = [self._pending[i] for i in idxs]
+        for i in sorted(idxs, reverse=True):
+            del self._pending[i]
+        return batch
 
     def _wait_timeout_locked(self, now: float) -> Optional[float]:
         """Bound the worker's wait by the policy's hint, the earliest
@@ -764,15 +908,16 @@ class AsyncServer:
         for r in batch:
             if self._resolve(r.future, _slice_rows(y, off, off + r.rows)):
                 n_ok += 1
-                lats.append(done - r.t_submit)
+                lats.append((done - r.t_submit, r.priority))
             off += r.rows
         with self._cond:
             self._stats.n_batches += 1
             self._stats.rows_executed += rows
             self._stats.rows_padded += bucket - rows
-            self._stats.batch_rows.append(rows)
+            self._stats.batch_hist.add(rows)
             self._stats.n_completed += n_ok
-            self._stats.latencies_s.extend(lats)
+            for lat, prio in lats:
+                self._stats.record_latency(lat, prio)
             self._stats.worker_batches[worker] = \
                 self._stats.worker_batches.get(worker, 0) + 1
             # the batch leaves flight in the same locked section that
@@ -1030,10 +1175,27 @@ class AsyncServer:
                     "n_shed": self._stats.n_shed,
                     "n_cancelled": self._stats.n_cancelled,
                     "n_rejected_full": self._stats.n_rejected_full,
+                    "n_rejected_too_large":
+                        self._stats.n_rejected_too_large,
                     "n_deadline_expired": self._stats.n_deadline_expired,
                     "n_worker_crashes": self._stats.n_worker_crashes,
                     "n_worker_restarts": self._stats.n_worker_restarts,
                     "n_hung_requeued": self._stats.n_hung_requeued,
+                },
+                "telemetry": {
+                    "queue_depth_peak": self._stats.queue_depth_peak,
+                    "arrival_hist": self._stats.arrival_hist.to_json(),
+                    "rows_padded": self._stats.rows_padded,
+                    "mean_batch_rows": self._stats.mean_batch_rows,
+                    "latency_ms": {
+                        "p50": round(self._stats.percentile_ms(50), 3),
+                        "p90": round(self._stats.percentile_ms(90), 3),
+                        "p99": round(self._stats.percentile_ms(99), 3),
+                    },
+                    "latency_by_class": {
+                        k: v.to_json()
+                        for k, v in sorted(self._stats.latency_by_class
+                                           .items())},
                 },
             }
 

@@ -88,6 +88,7 @@ from repro.core.pipeline import MODES, Pipeline, Plan
 from repro.core.schedule import ConvSchedule
 from repro.core.transform_elim import PlannedGraph
 from repro.engine.executor import CompiledModel, compile_model
+from repro.engine.telemetry import SizeHistogram
 from repro.nn.init import Params, init_params
 
 ARTIFACT_FORMAT = "neocpu-inference-session"
@@ -307,6 +308,10 @@ class InferenceSession:
         self.dtype = dtype
         self.model_name = model_name
         self._specialized: Dict[int, CompiledModel] = {}
+        # measured request-size arrivals (recorded by the serving driver,
+        # or fed manually); what save(buckets="auto") learns the next
+        # artifact's bucket set from.  Bounded: O(max_bins) forever.
+        self.traffic = SizeHistogram()
         # serializes planning/binding: two threads racing on the same new
         # batch size must not double-compile (and the schedule search /
         # executor must never run concurrently with itself)
@@ -393,9 +398,36 @@ class InferenceSession:
         the batch-size specialization of ``x``."""
         return self.specialize(int(x.shape[0])).predict(x)
 
+    # -- memory accounting ---------------------------------------------------
+    def memory_bytes(self) -> Dict[int, int]:
+        """Bytes of bound parameters held per specialization — what a
+        fleet memory budget accounts and what :meth:`release` frees."""
+        with self._lock:
+            return {batch: sum(int(arr.nbytes)
+                               for node in m.params.values()
+                               for arr in node.values())
+                    for batch, m in self._specialized.items()}
+
+    def release(self, batch: int) -> bool:
+        """Drop the compiled specialization for ``batch``, freeing its
+        bound params (LRU eviction under a fleet memory budget).  Returns
+        True iff it existed.  A later ``specialize(batch)`` rebuilds it —
+        with zero schedule searches when the database already holds the
+        workloads — so eviction trades latency, never correctness.
+        Frozen sessions refuse: they could never specialize it back."""
+        with self._lock:
+            if self.frozen:
+                raise RuntimeError(
+                    "cannot release a specialization of a frozen session "
+                    "(no source graph to rebuild it from); its buckets "
+                    "are pinned")
+            return self._specialized.pop(batch, None) is not None
+
     # -- persistence ---------------------------------------------------------
     def save(self, path: Union[str, Path],
-             include_source: Optional[bool] = None) -> Path:
+             include_source: Optional[bool] = None,
+             buckets: Union[None, str, "Sequence[int]"] = None,
+             traffic=None) -> Path:
         """Write the versioned artifact: every current specialization's
         plan + pre-transformed weights, the schedule database, and the
         calibrated transform bandwidth.
@@ -403,7 +435,19 @@ class InferenceSession:
         ``include_source`` additionally packs the *logical* graph and raw
         weights so the loaded session can specialize unseen batch sizes
         (default: pack whenever the session has them; a frozen session
-        saved again has nothing to pack)."""
+        saved again has nothing to pack).
+
+        ``buckets`` selects *which* batch-size specializations the
+        artifact carries (default ``None``: all current ones).  An
+        explicit list specializes and saves exactly those sizes.
+        ``buckets="auto"`` closes the measured-traffic loop: the bucket
+        set is solved from the recorded arrival histogram
+        (:func:`repro.engine.traffic.solve_buckets`) — ``traffic`` may
+        be a ``SizeHistogram``, a plain ``{size: count}`` mapping, or a
+        ``ServingStats``; default: this session's own ``traffic``
+        recorder, filled by the serving driver.  The solved set (and the
+        histogram it came from) is written into the manifest's
+        ``traffic`` section for provenance."""
         if include_source is None:
             include_source = (self._graph is not None
                               and self._params is not None)
@@ -411,13 +455,58 @@ class InferenceSession:
             raise RuntimeError("include_source=True but this session has "
                                "no logical graph/raw weights (loaded from "
                                "a sourceless artifact)")
+        chosen, traffic_meta = self._resolve_buckets(buckets, traffic)
+        if chosen is not None:
+            for b in chosen:
+                self.specialize(b)       # no-op for already-bound sizes
         # under the session lock: a serving worker specializing a new
         # batch size mid-save must not change the dict between the weight
         # loop and the manifest (or corrupt either iteration)
         with self._lock:
-            return self._save_locked(Path(path), include_source)
+            return self._save_locked(Path(path), include_source,
+                                     only=chosen, traffic_meta=traffic_meta)
 
-    def _save_locked(self, path: Path, include_source: bool) -> Path:
+    def _resolve_buckets(self, buckets, traffic):
+        """Normalize save()'s bucket selection: None (keep all), an
+        explicit size list, or "auto" (solve from measured traffic)."""
+        if buckets is None:
+            if traffic is not None:
+                raise ValueError("traffic= is only meaningful with "
+                                 "buckets='auto'")
+            return None, None
+        from repro.engine import traffic as traffic_mod
+
+        if buckets == "auto":
+            hist = traffic if traffic is not None else self.traffic
+            counts = traffic_mod._coerce_counts(hist)
+            if not counts:
+                raise ValueError(
+                    "buckets='auto' needs recorded traffic: serve some "
+                    "requests through AsyncServer (which records arrival "
+                    "sizes into session.traffic), or pass traffic= a "
+                    "histogram")
+            solved = traffic_mod.solve_buckets(counts,
+                                               devices=self.devices)
+            meta = {"mode": "auto",
+                    "histogram": {str(s): c
+                                  for s, c in sorted(counts.items())},
+                    "buckets": list(solved),
+                    "expected_waste": traffic_mod.expected_padded_waste(
+                        counts, solved)}
+            return sorted(solved), meta
+        chosen = sorted({int(b) for b in buckets})
+        if not chosen or any(b < 1 for b in chosen):
+            raise ValueError(f"buckets must be sizes >= 1, got {buckets}")
+        if self.frozen:
+            missing = [b for b in chosen if b not in self._specialized]
+            if missing:
+                raise RuntimeError(
+                    f"frozen session cannot specialize buckets {missing} "
+                    f"(has {self.batch_sizes})")
+        return chosen, {"mode": "explicit", "buckets": chosen}
+
+    def _save_locked(self, path: Path, include_source: bool,
+                     only=None, traffic_meta=None) -> Path:
         if not self._specialized:
             raise RuntimeError("nothing to save: session has no "
                                "specializations (call predict/specialize)")
@@ -434,8 +523,10 @@ class InferenceSession:
         if tmp.exists():
             shutil.rmtree(tmp)           # leftover of a crashed save
         tmp.mkdir()
+        saved = {batch: m for batch, m in sorted(self._specialized.items())
+                 if only is None or batch in only}
         store = CheckpointStore(tmp / "weights")
-        for batch, m in self._specialized.items():
+        for batch, m in saved.items():
             store.save(step=batch, tree=_params_to_flat_ok(m.params),
                        meta={"batch": batch})
         source = None
@@ -455,7 +546,7 @@ class InferenceSession:
         plans_dir = tmp / "plans"
         plans_dir.mkdir()
         specs = {}
-        for batch, m in self._specialized.items():
+        for batch, m in saved.items():
             rel = f"plans/batch_{batch:05d}.json"
             (tmp / rel).write_text(json.dumps(_plan_to_json(m.plan)))
             specs[str(batch)] = {"file": rel}
@@ -473,7 +564,7 @@ class InferenceSession:
                 "schedule_dtypes": {
                     str(batch): {name: s.dtype for name, s in
                                  m.plan.planned.schedules.items()}
-                    for batch, m in self._specialized.items()},
+                    for batch, m in saved.items()},
             }))
             quantized = {"file": "quantized.json", "dtype": self.dtype}
         manifest = {
@@ -491,6 +582,10 @@ class InferenceSession:
             "specializations": specs,
             "quantized": quantized,
             "source": source,
+            # provenance of a learned/filtered bucket set (None for plain
+            # saves); load() ignores unknown manifest keys, so older
+            # builds read these artifacts fine
+            "traffic": traffic_meta,
             # measured winners only: analytical rankings are re-derivable
             # and would bloat the manifest by megabytes per workload set
             "db": self.db.to_blob(measured_only=True),

@@ -189,6 +189,14 @@ def choose_shed_victim(pending: Sequence, policy: str) -> Optional[int]:
       to return useful work); requests without deadlines are never chosen,
       and if nothing carries a deadline the policy degrades to "newest".
 
+    The tie-breaks are deterministic (and covered by tests): requests
+    with ``deadline=None`` are *never* deadline victims, no matter how
+    long they have queued; when every queued request is deadline-free the
+    function returns None (reject the newcomer — "newest" semantics);
+    and among equal earliest deadlines the **lowest queue index** (the
+    oldest submission) is evicted — its latency budget is the most
+    spent, matching the "oldest" policy's rationale.
+
     Pure function over the queue snapshot — the request objects only need
     ``deadline`` (absolute time or None)."""
     if policy not in SHED_POLICIES:

@@ -59,7 +59,9 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
                    pin=None, shed: str = "newest",
                    retry_budget: int = 2, backoff_ms: float = 10.0,
                    watchdog_ms: float = None, show_health: bool = False,
-                   dtype: str = None):
+                   dtype: str = None, trace: str = "uniform",
+                   priority_default: str = "standard",
+                   buckets: str = None, stats_interval: float = None):
     """Cold-start CNN serving through the async dynamic-batching driver:
     load the compiled session artifact, pump a stream of single-image
     requests through a bounded queue (client-side backpressure on
@@ -72,11 +74,20 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
     picks the overload policy, ``retry_budget``/``backoff_ms`` configure
     crash-recovery retries, ``watchdog_ms`` arms the hung-batch watchdog
     (set it well above a worst-case batch — buckets are pre-warmed here,
-    so JIT compilation cannot trip it)."""
+    so JIT compilation cannot trip it).
+
+    Traffic-aware knobs: ``trace`` replays a synthetic arrival shape
+    (``engine.traffic.synth_trace`` kinds — "uniform" keeps the legacy
+    back-to-back single-image stream), ``priority_default`` classes
+    unlabeled requests, ``buckets="auto"`` re-saves the artifact after
+    the run with the bucket set solved from the *measured* arrival
+    histogram, and ``stats_interval`` prints live telemetry snapshots
+    from a daemon thread while the stream is in flight."""
     apply_serving_env()
     from repro.core.local_search import search_calls
     from repro.engine import (AsyncServer, DynamicBatchPolicy,
-                              InferenceSession, QueueFullError, RetryPolicy)
+                              InferenceSession, QueueFullError, RetryPolicy,
+                              expected_padded_waste, synth_trace)
 
     if n_requests < 1:
         raise ValueError(f"--requests must be >= 1, got {n_requests}")
@@ -92,28 +103,63 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
     (name,) = sess.input_spec
     shape = (1,) + sess.input_spec[name][1:]
     rng = np.random.default_rng(0)
-    xs = [jnp.asarray(rng.normal(size=shape).astype(np.float32))
-          for _ in range(n_requests)]
+    if trace == "uniform":
+        reqs = [None] * n_requests           # legacy back-to-back stream
+        xs = [jnp.asarray(rng.normal(size=shape).astype(np.float32))
+              for _ in range(n_requests)]
+    else:
+        # replay a synthetic arrival process: sized requests, paced
+        # submits, mixed priority classes (sizes clamped to what the
+        # artifact can pack so frozen sessions never see a typed reject)
+        max_rows = min(max_batch, max(sess.batch_sizes))
+        reqs = synth_trace(trace, n=n_requests, seed=0, mean_rate=100.0,
+                           max_rows=max_rows,
+                           priorities=("interactive", "standard", "batch"))
+        xs = [jnp.asarray(rng.normal(size=(r.rows,) + shape[1:])
+                          .astype(np.float32)) for r in reqs]
     for b in sess.batch_sizes:       # server startup: compile every bucket
         jax.block_until_ready(sess.specialize(b).predict(
             jnp.zeros((b,) + shape[1:], jnp.float32)))
 
     policy = DynamicBatchPolicy(max_batch=max_batch,
-                                max_wait_ms=max_wait_ms)
+                                max_wait_ms=max_wait_ms,
+                                order="fifo" if trace == "uniform"
+                                else "edf")
     server = AsyncServer(sess, policy, max_queue=max_queue,
                          workers=workers, pin=pin, shed=shed,
                          retry=RetryPolicy(budget=retry_budget,
                                            backoff_ms=backoff_ms),
-                         watchdog_ms=watchdog_ms)
+                         watchdog_ms=watchdog_ms,
+                         priority_default=priority_default)
+    stop_stats = None
+    if stats_interval is not None:
+        import threading
+
+        stop_stats = threading.Event()
+
+        def _report():
+            while not stop_stats.wait(stats_interval):
+                s = server.stats
+                print(f"[stats] queued={len(server)} "
+                      f"completed={s.n_completed} batches={s.n_batches} "
+                      f"p50={s.percentile_ms(50):.1f} "
+                      f"p99={s.percentile_ms(99):.1f} ms")
+
+        threading.Thread(target=_report, daemon=True,
+                         name="serve-stats").start()
     t_serve0 = time.perf_counter()
     futures = []
     n_retries = 0
     try:
-        for x in xs:
+        for req, x in zip(reqs, xs):
+            if req is not None and req.t > time.perf_counter() - t_serve0:
+                time.sleep(req.t - (time.perf_counter() - t_serve0))
             while True:
                 try:
-                    futures.append(server.submit(x,
-                                                 deadline_ms=deadline_ms))
+                    futures.append(server.submit(
+                        x, deadline_ms=deadline_ms,
+                        priority=req.priority if req is not None
+                        else None))
                     break
                 except QueueFullError:
                     # backpressure: wait for the newest outstanding result
@@ -128,6 +174,8 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
             import json as _json
             print("health:", _json.dumps(server.health(), indent=2))
     finally:
+        if stop_stats is not None:
+            stop_stats.set()
         server.close(drain=True)                  # graceful shutdown
     t_serve = time.perf_counter() - t_serve0
     assert search_calls() == n_searches, \
@@ -146,6 +194,30 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
           f"p50={st.percentile_ms(50):.1f} "
           f"p90={st.percentile_ms(90):.1f} "
           f"p99={st.percentile_ms(99):.1f} ms")
+    if trace != "uniform":
+        per_class = {cls: round(q.percentile(99) * 1e3, 1)
+                     for cls, q in sorted(st.latency_by_class.items())}
+        print(f"trace={trace} per-class p99 (ms): {per_class}")
+    if buckets == "auto":
+        # close the measured-traffic loop: re-save the artifact with the
+        # bucket set solved from what this run actually observed
+        from repro.engine import solve_buckets
+
+        hist = st.arrival_hist.counts()
+        old = sorted(sess.batch_sizes)
+        try:
+            learned = solve_buckets(hist, devices=sess.devices)
+            sess.save(path, buckets="auto", traffic=st.arrival_hist)
+        except RuntimeError as e:
+            print(f"--buckets auto skipped: {e} (save the artifact with "
+                  "include_source=True to make its bucket set learnable)")
+        else:
+            print(f"re-saved {path} with learned buckets {learned}: "
+                  f"expected padded waste "
+                  f"{expected_padded_waste(hist, learned)} rows vs "
+                  f"{expected_padded_waste(hist, old)} with the previous "
+                  f"set {old}, on the measured histogram "
+                  f"{dict(sorted(hist.items()))}")
     return out
 
 
@@ -193,8 +265,28 @@ def main(argv=None):
                     help="hung-batch watchdog: a worker silent this long "
                          "while holding a batch is restarted and its "
                          "batch requeued (off by default)")
+    ap.add_argument("--trace", default="uniform",
+                    choices=("uniform", "bursty", "diurnal", "heavytail"),
+                    help="arrival shape for --artifact serving: 'uniform' "
+                         "is the legacy back-to-back single-image stream; "
+                         "the others replay a paced synthetic trace with "
+                         "mixed request sizes and priority classes "
+                         "(EDF packing)")
+    ap.add_argument("--priority-default", default="standard",
+                    choices=("interactive", "standard", "batch"),
+                    help="priority class for requests submitted without "
+                         "an explicit one")
+    ap.add_argument("--buckets", default=None, choices=("auto",),
+                    help="'auto' re-saves the artifact after the run with "
+                         "the bucket set solved from the measured arrival "
+                         "histogram (needs a source-packed artifact)")
+    ap.add_argument("--stats-interval", type=float, default=None,
+                    help="print live telemetry snapshots every this many "
+                         "seconds while the stream is in flight")
     ap.add_argument("--health", action="store_true",
-                    help="print the server health() snapshot after the run")
+                    help="print the server health() snapshot after the run "
+                         "(includes the telemetry section: arrival "
+                         "histogram, queue-depth peak, per-class latency)")
     ap.add_argument("--dtype", default=None, choices=("fp32", "int8"),
                     help="require the artifact to carry this weight "
                          "precision (int8 = W8 per-channel quantized); "
@@ -215,7 +307,11 @@ def main(argv=None):
                               backoff_ms=args.backoff_ms,
                               watchdog_ms=args.watchdog_ms,
                               show_health=args.health,
-                              dtype=args.dtype)
+                              dtype=args.dtype,
+                              trace=args.trace,
+                              priority_default=args.priority_default,
+                              buckets=args.buckets,
+                              stats_interval=args.stats_interval)
 
     cfg = make_reduced(ARCHS[args.arch])
     params = model.init_params(cfg, jax.random.PRNGKey(0))

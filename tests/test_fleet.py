@@ -1,0 +1,271 @@
+"""FleetServer: multi-tenant hosting over one schedule database and one
+LRU memory budget — bit-identical routed results, typed tenant errors,
+eviction-with-zero-lost-requests, pinned frozen tenants with strict
+rollback, and graceful tenant lifecycle.
+
+Deterministic throughout: ``autostart=False`` fleets on a fake clock,
+pumped by hand — the same discipline as the AsyncServer suite.  Kept on
+the short-timeout serving CI lane."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.engine import (DuplicateModelError, DynamicBatchPolicy,
+                          FleetServer, MemoryBudgetError, ServingError,
+                          UnknownModelError, padded_predict)
+from repro.engine import compile as compile_session
+from repro.engine.session import InferenceSession
+
+
+def _tiny_net(units):
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=8, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("r1", "relu", ["c1"])
+    g.add("gap", "global_avg_pool", ["r1"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=units)
+    g.mark_output("fc")
+    return g, {"in": (1, 3, 8, 8)}
+
+
+def _fresh_session(units=4):
+    g, shapes = _tiny_net(units)
+    sess = compile_session(g, shapes)
+    sess.specialize(4)
+    return sess
+
+
+@pytest.fixture(scope="module")
+def session_pair():
+    """Two distinct compiled sessions (different head widths so routing
+    mistakes change output shapes, not just values), buckets {1, 4}."""
+    return _fresh_session(units=4), _fresh_session(units=6)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _x(rng, rows):
+    return jnp.asarray(rng.normal(size=(rows, 3, 8, 8)).astype(np.float32))
+
+
+def _manual_fleet(**kw):
+    clock = FakeClock()
+    fleet = FleetServer(clock=clock, autostart=False, **kw)
+    return fleet, clock
+
+
+def _pump(fleet, clock, futs, max_steps=64):
+    """Advance past the flush window and step every tenant until all
+    futures settle (deterministically bounded)."""
+    for _ in range(max_steps):
+        if all(f.done() for f in futs):
+            return
+        clock.advance_ms(20.0)
+        fleet.step()
+    raise AssertionError("futures did not settle under manual pumping")
+
+
+# ---------------------------------------------------------------------------
+# Routing and correctness
+# ---------------------------------------------------------------------------
+
+def test_two_tenants_route_bit_identical(session_pair, rng):
+    sa, sb = session_pair
+    fleet, clock = _manual_fleet()
+    fleet.add_model("alpha", sa,
+                    policy=DynamicBatchPolicy(max_batch=4, max_wait_ms=10.0,
+                                              fixed_bucket=4))
+    fleet.add_model("beta", sb,
+                    policy=DynamicBatchPolicy(max_batch=4, max_wait_ms=10.0,
+                                              fixed_bucket=4))
+    assert fleet.models == ["alpha", "beta"]
+    assert len(fleet) == 2
+    xs = [_x(rng, 1) for _ in range(6)]
+    refs_a = [np.asarray(padded_predict(sa, x, bucket=4)) for x in xs]
+    refs_b = [np.asarray(padded_predict(sb, x, bucket=4)) for x in xs]
+    futs_a = [fleet.submit("alpha", x) for x in xs]
+    futs_b = [fleet.submit("beta", x) for x in xs]
+    _pump(fleet, clock, futs_a + futs_b)
+    for f, ref in zip(futs_a, refs_a):
+        got = np.asarray(f.result(0))
+        assert got.shape == ref.shape and got.tobytes() == ref.tobytes()
+    for f, ref in zip(futs_b, refs_b):
+        got = np.asarray(f.result(0))
+        assert got.shape == ref.shape and got.tobytes() == ref.tobytes()
+    st = fleet.stats()
+    assert st["alpha"].n_completed == 6
+    assert st["beta"].n_completed == 6
+    fleet.close()
+
+
+def test_unknown_and_duplicate_tenants(session_pair, rng):
+    sa, _ = session_pair
+    fleet, _clock = _manual_fleet()
+    fleet.add_model("only", sa)
+    with pytest.raises(UnknownModelError, match="ghost"):
+        fleet.submit("ghost", _x(rng, 1))
+    with pytest.raises(UnknownModelError):
+        fleet.remove_model("ghost")
+    with pytest.raises(DuplicateModelError, match="only"):
+        fleet.add_model("only", sa)
+    # typed into the serving hierarchy for uniform caller handling
+    assert issubclass(UnknownModelError, (ServingError, KeyError))
+    assert issubclass(DuplicateModelError, (ServingError, ValueError))
+    assert issubclass(MemoryBudgetError, ServingError)
+    fleet.close()
+
+
+def test_shared_schedule_db(session_pair):
+    sa, sb = session_pair
+    n_a, n_b = len(sa.db), len(sb.db)
+    fleet, _clock = _manual_fleet()
+    fleet.add_model("alpha", sa)
+    fleet.add_model("beta", sb)
+    assert sa.db is fleet.db and sb.db is fleet.db
+    # the union is available to every tenant; duplicates keep first-won
+    assert len(fleet.db) >= max(n_a, n_b)
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# Memory budget
+# ---------------------------------------------------------------------------
+
+def test_memory_budget_evicts_lru_with_zero_lost_requests(rng):
+    sa, sb = _fresh_session(), _fresh_session()
+    per_bucket = list(sa.memory_bytes().values())
+    assert len(per_bucket) == 2               # buckets {1, 4} resident
+    total = sum(sa.memory_bytes().values()) + sum(sb.memory_bytes().values())
+    # room for three of the four (tenant, bucket) specializations
+    budget = total - min(per_bucket) // 2
+    fleet, clock = _manual_fleet(memory_budget_bytes=budget)
+    fleet.add_model("alpha", sa)
+    fleet.add_model("beta", sb)
+    assert fleet.n_evictions >= 1
+    resident = fleet.memory_bytes()
+    assert sum(sum(d.values()) for d in resident.values()) <= budget
+    # every tenant keeps at least one executable bucket
+    assert all(len(d) >= 1 for d in resident.values())
+    # serving an evicted bucket re-specializes on demand: requests of
+    # every size to every tenant all complete — typed rejects are the
+    # only permitted loss mode, and none applies here
+    futs = [fleet.submit(name, _x(rng, rows))
+            for name in ("alpha", "beta") for rows in (1, 4, 1)]
+    _pump(fleet, clock, futs)
+    for f in futs:
+        out = np.asarray(f.result(0))
+        assert out.ndim == 2 and np.isfinite(out).all()
+    health = fleet.health()
+    assert health["memory"]["budget_bytes"] == budget
+    assert health["memory"]["n_evictions"] == fleet.n_evictions
+    fleet.close()
+
+
+def test_frozen_tenant_pinned_and_strict_rollback(session_pair, tmp_path):
+    sa, _ = session_pair
+    art = sa.save(tmp_path / "pinned_art", buckets=[1, 4],
+                  include_source=False)
+    frozen = InferenceSession.load(art)
+    assert frozen.frozen
+    need = sum(frozen.memory_bytes().values())
+    fleet, _clock = _manual_fleet(memory_budget_bytes=max(1, need // 2))
+    with pytest.raises(MemoryBudgetError, match="pinned"):
+        fleet.add_model("heavy", frozen)
+    # rollback left the fleet exactly as it was
+    assert fleet.models == []
+    assert fleet.memory_bytes() == {}
+    assert fleet.health()["memory"]["resident_bytes"] == 0
+    # and the frozen session kept every bucket (nothing was released)
+    assert sorted(frozen.batch_sizes) == [1, 4]
+    # a budget that fits hosts it fine — pinned, but resident
+    fleet2, _c2 = _manual_fleet(memory_budget_bytes=need * 2)
+    fleet2.add_model("heavy", frozen)
+    assert fleet2.models == ["heavy"]
+    fleet2.close()
+    fleet.close()
+
+
+def test_budget_validation():
+    with pytest.raises(ValueError, match="memory_budget_bytes"):
+        FleetServer(memory_budget_bytes=0, autostart=False)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle
+# ---------------------------------------------------------------------------
+
+def test_remove_model_drains_queued_work(session_pair, rng):
+    sa, sb = session_pair
+    fleet, clock = _manual_fleet()
+    fleet.add_model("alpha", sa)
+    fleet.add_model("beta", sb)
+    f = fleet.submit("alpha", _x(rng, 1))
+    fleet.remove_model("alpha", drain=True)   # completes, then unhosts
+    assert np.asarray(f.result(0)).shape[0] == 1
+    assert fleet.models == ["beta"]
+    with pytest.raises(UnknownModelError):
+        fleet.submit("alpha", _x(rng, 1))
+    fleet.close()
+
+
+def test_close_idempotent_and_context_manager(session_pair, rng):
+    sa, _ = session_pair
+    with _manual_fleet()[0] as fleet:
+        fleet.add_model("alpha", sa)
+        f = fleet.submit("alpha", _x(rng, 2))
+    # context exit drains: the queued request completed
+    assert np.asarray(f.result(0)).shape[0] == 2
+    fleet.close()                             # second close is a no-op
+    assert fleet.health()["closed"]
+    with pytest.raises(ServingError, match="closed"):
+        fleet.add_model("late", sa)
+
+
+def test_per_tenant_stats_and_health_shape(session_pair, rng):
+    sa, sb = session_pair
+    fleet, clock = _manual_fleet()
+    fleet.add_model("alpha", sa)
+    fleet.add_model("beta", sb)
+    futs = [fleet.submit("alpha", _x(rng, 1), priority="interactive",
+                         deadline_ms=1000.0)]
+    _pump(fleet, clock, futs)
+    st = fleet.stats()
+    assert set(st) == {"alpha", "beta"}
+    assert st["alpha"].n_completed == 1
+    assert st["alpha"].latency_by_class["interactive"].count == 1
+    assert st["beta"].n_submitted == 0
+    h = fleet.health()
+    assert set(h) == {"tenants", "memory", "shared_db_entries", "closed"}
+    assert set(h["tenants"]) == {"alpha", "beta"}
+    assert "telemetry" in h["tenants"]["alpha"]
+    assert h["memory"]["resident_bytes"] > 0
+    fleet.close()
+
+
+def test_step_single_model(session_pair, rng):
+    sa, sb = session_pair
+    fleet, clock = _manual_fleet()
+    fleet.add_model("alpha", sa,
+                    policy=DynamicBatchPolicy(max_batch=4, max_wait_ms=10.0))
+    fleet.add_model("beta", sb,
+                    policy=DynamicBatchPolicy(max_batch=4, max_wait_ms=10.0))
+    fa = fleet.submit("alpha", _x(rng, 1))
+    fb = fleet.submit("beta", _x(rng, 1))
+    clock.advance_ms(20.0)
+    assert fleet.step("alpha")                # pumps alpha only
+    assert fa.done() and not fb.done()
+    assert fleet.step()                       # pumps the rest
+    assert fb.done()
+    fleet.close()

@@ -100,7 +100,7 @@ def test_concurrent_submits_bit_identical_to_sequential(session, rng):
     assert st.n_completed == 12
     assert st.rows_executed == 12
     # every executed batch respected max_batch
-    assert all(b <= 4 for b in st.batch_rows)
+    assert st.batch_hist.max_size <= 4
 
 
 def test_padded_batch_slices_back_per_request(session, rng):
@@ -135,17 +135,17 @@ def test_packing_respects_max_batch_and_max_wait(session, rng):
     clock.advance_ms(10.1)
     assert srv.step()
     assert f1.done() and f2.done()
-    assert srv.stats.batch_rows == [2]
+    assert srv.stats.batch_hist.counts() == {2: 1}
     # a full batch flushes immediately, leftovers wait for their timeout
     futs = [srv.submit(_x(rng, 1)) for _ in range(5)]
     assert srv.step()
-    assert srv.stats.batch_rows == [2, 4]
+    assert srv.stats.batch_hist.counts() == {2: 1, 4: 1}
     assert [f.done() for f in futs] == [True] * 4 + [False]
     assert not srv.step()                     # 1 pending, clock unchanged
     clock.advance_ms(10.1)
     assert srv.step()
     assert futs[4].done()
-    assert srv.stats.batch_rows == [2, 4, 1]
+    assert srv.stats.batch_hist.counts() == {1: 1, 2: 1, 4: 1}
     # padded waste accounting: flushed sizes 2, 4, 1 -> buckets 4, 4, 1
     assert srv.stats.rows_padded == (4 - 2) + 0 + 0
     srv.close()
@@ -161,7 +161,7 @@ def test_fifo_order_within_batches(session, rng):
     refs = [np.asarray(padded_predict(session, x, bucket=4)) for x in xs]
     for g, r in zip(got, refs):
         assert g.tobytes() == r.tobytes()
-    assert srv.stats.batch_rows == [4, 4]
+    assert srv.stats.batch_hist.counts() == {4: 2}
     srv.close()
 
 
@@ -295,7 +295,7 @@ def test_frozen_cap_flushes_full_bucket_immediately(session, tmp_path,
     futs = [srv.submit(_x(rng, 1)) for _ in range(4)]
     assert srv.step()                        # no clock advance needed
     assert all(f.done() for f in futs)
-    assert srv.stats.batch_rows == [4]
+    assert srv.stats.batch_hist.counts() == {4: 1}
     srv.close()
 
 
@@ -402,18 +402,18 @@ def test_stats_snapshots_consistent_under_threads(session, rng):
             if lhs != rhs:
                 errors.append(f"torn health snapshot: {lhs} != {rhs} ({c})")
             s = srv.stats
-            if len(s.latencies_s) != s.n_completed:
+            if s.latency.count != s.n_completed:
                 errors.append("torn stats copy: "
-                              f"{len(s.latencies_s)} latencies vs "
+                              f"{s.latency.count} latencies vs "
                               f"{s.n_completed} completed")
-            if len(s.batch_rows) != s.n_batches:
+            if s.batch_hist.n != s.n_batches:
                 errors.append("torn stats copy: "
-                              f"{len(s.batch_rows)} batch_rows vs "
+                              f"{s.batch_hist.n} batch_hist entries vs "
                               f"{s.n_batches} batches")
-            if sum(s.worker_batches.values()) != len(s.batch_rows):
+            if sum(s.worker_batches.values()) != s.batch_hist.n:
                 errors.append("torn stats copy: worker_batches "
                               f"{s.worker_batches} vs "
-                              f"{len(s.batch_rows)} batches")
+                              f"{s.batch_hist.n} batches")
 
     threads = ([threading.Thread(target=submitter, args=(i,))
                 for i in range(n_threads)]
@@ -437,6 +437,187 @@ def test_stats_snapshots_consistent_under_threads(session, rng):
     assert s.n_submitted == n_threads * per_thread
     assert s.n_completed == s.n_submitted
     assert s.n_failed == s.n_shed == s.n_cancelled == 0
-    assert sum(s.batch_rows) == s.n_submitted
+    assert s.batch_hist.rows == s.n_submitted      # 1 row per request
+    assert s.arrival_hist.n == s.n_submitted
     h = srv.health()
     assert h["queue_depth"] == 0 and h["inflight_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Typed oversize rejection + bounded telemetry + priority packing
+# ---------------------------------------------------------------------------
+
+def test_oversize_reject_is_typed(session, rng):
+    """A request larger than the packable maximum fails at submit() with
+    RequestTooLargeError — a ServingError that still subclasses
+    ValueError for pre-typed callers — and is counted, never queued."""
+    from repro.engine import RequestTooLargeError, ServingError
+
+    srv, clock = _manual_server(session)
+    with pytest.raises(RequestTooLargeError):
+        srv.submit(_x(rng, 5))
+    assert issubclass(RequestTooLargeError, ServingError)
+    assert issubclass(RequestTooLargeError, ValueError)
+    st = srv.stats
+    assert st.n_rejected_too_large == 1
+    assert st.n_submitted == 0 and len(srv) == 0
+    srv.close()
+
+
+def test_oversize_reject_on_frozen_session(session, tmp_path, rng):
+    """Frozen sessions clamp the cap to their largest specialized bucket:
+    a request over it must reject at submit, not error late in a worker."""
+    from repro.engine import InferenceSession, RequestTooLargeError
+
+    session.save(tmp_path / "art_oversize", include_source=False)
+    frozen = InferenceSession.load(tmp_path / "art_oversize")
+    policy = DynamicBatchPolicy(max_batch=16, max_wait_ms=10.0)
+    srv, clock = _manual_server(frozen, policy=policy)
+    ok = srv.submit(_x(rng, 4))             # == largest bucket: fine
+    with pytest.raises(RequestTooLargeError, match="rows"):
+        srv.submit(_x(rng, 5))              # > largest bucket
+    assert srv.step()
+    assert np.asarray(ok.result(0)).shape[0] == 4
+    srv.close()
+
+
+def test_arrival_histogram_and_queue_depth_recorded(session, rng):
+    srv, clock = _manual_server(session)
+    for rows in (1, 1, 2, 3, 1):
+        srv.submit(_x(rng, rows))
+        clock.advance_ms(10.1)
+        while srv.step():
+            pass
+    st = srv.stats
+    assert st.arrival_hist.counts() == {1: 3, 2: 1, 3: 1}
+    assert st.arrival_hist.rows == 8
+    assert st.queue_depth_peak >= 1
+    # the driver also feeds the session's own recorder (what
+    # save(buckets="auto") solves from)
+    assert session.traffic.n >= 5
+    srv.close()
+
+
+def test_edf_priority_packing_order(session, rng):
+    """order='edf' packs by (deadline, priority class, arrival): a late-
+    submitted interactive request with a tight deadline executes in the
+    first flush while earlier deadline-free batch work waits — and every
+    result still bit-matches the sequential fixed-bucket reference."""
+    policy = DynamicBatchPolicy(max_batch=4, max_wait_ms=10.0,
+                                fixed_bucket=4, order="edf")
+    srv, clock = _manual_server(session, policy=policy)
+    xs = [_x(rng, 2) for _ in range(4)]
+    f_batch = [srv.submit(xs[0], priority="batch"),
+               srv.submit(xs[1], priority="batch")]
+    f_urgent = srv.submit(xs[2], deadline_ms=15.0, priority="interactive")
+    f_std = srv.submit(xs[3], priority="standard")
+    assert srv.step()                    # 4+ rows pending -> flush
+    # EDF order: the deadlined request first, then deadline-free work by
+    # priority rank — so the late-submitted urgent + standard pair jumped
+    # the two earlier batch-class requests
+    assert f_urgent.done() and f_std.done()
+    assert not f_batch[0].done() and not f_batch[1].done()
+    assert srv.step()                    # remaining 4 batch-class rows
+    assert f_batch[0].done() and f_batch[1].done()
+    refs = [np.asarray(padded_predict(session, x, bucket=4)) for x in xs]
+    for f, r in zip(f_batch + [f_urgent, f_std], refs):
+        assert np.asarray(f.result(0)).tobytes() == r.tobytes(), \
+            "EDF reordering changed numerics"
+    st = srv.stats
+    assert st.latency_by_class["interactive"].count == 1
+    assert st.latency_by_class["batch"].count == 2
+    assert st.latency_by_class["standard"].count == 1
+    srv.close()
+
+
+def test_unknown_priority_rejected(session, rng):
+    srv, clock = _manual_server(session)
+    with pytest.raises(ValueError, match="priority"):
+        srv.submit(_x(rng, 1), priority="platinum")
+    assert srv.stats.n_submitted == 0
+    srv.close()
+
+
+def test_fifo_default_unchanged_by_priority_field(session, rng):
+    """Without order='edf', priorities are recorded but never reorder."""
+    srv, clock = _manual_server(session)
+    f_batch = srv.submit(_x(rng, 2), priority="batch")
+    f_inter = srv.submit(_x(rng, 2), priority="interactive")
+    assert srv.step()
+    assert f_batch.done() and f_inter.done()   # one FIFO batch of 4 rows
+    assert srv.stats.batch_hist.counts() == {4: 1}
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# O(1)-memory telemetry under sustained load (the unbounded-lists bugfix)
+# ---------------------------------------------------------------------------
+
+class _FakeSession:
+    """Executes instantly (no compilation): enough session surface for
+    the driver, so the stress test can push thousands of requests."""
+
+    def __init__(self, buckets=(1, 2, 4)):
+        from repro.engine.telemetry import SizeHistogram
+
+        self._buckets = sorted(buckets)
+        self.traffic = SizeHistogram()
+
+    @property
+    def input_spec(self):
+        return {"x": (1, 4)}
+
+    @property
+    def batch_sizes(self):
+        return list(self._buckets)
+
+    @property
+    def frozen(self):
+        return True
+
+    def specialize(self, batch):
+        class _M:
+            devices = 1
+
+            @staticmethod
+            def predict(x):
+                return x * 2.0
+        return _M
+
+
+def test_stats_memory_bounded_under_sustained_load(rng):
+    """The pre-telemetry ServingStats kept every latency and batch size
+    in unbounded lists; the rebuilt stats must hold O(1) state no matter
+    how many requests flow through."""
+    sess = _FakeSession()
+    srv, clock = _manual_server(sess)
+    sizes = [1, 2, 1, 3, 1, 4, 2, 1]
+
+    def pump(n):
+        for i in range(n):
+            srv.submit(jnp.zeros((sizes[i % len(sizes)], 4), jnp.float32))
+            clock.advance_ms(10.1)
+            while srv.step():
+                pass
+
+    pump(500)
+    st = srv.stats
+    mid = (st.latency.state_size(), st.arrival_hist.state_size(),
+           st.batch_hist.state_size(),
+           st.latency_by_class["standard"].state_size())
+    assert st.n_completed == 500
+    pump(1500)
+    st = srv.stats
+    assert st.n_completed == 2000
+    end = (st.latency.state_size(), st.arrival_hist.state_size(),
+           st.batch_hist.state_size(),
+           st.latency_by_class["standard"].state_size())
+    assert end == mid, f"telemetry state grew under load: {mid} -> {end}"
+    # the old unbounded fields are gone for good
+    assert not hasattr(st, "latencies_s")
+    assert not hasattr(st, "batch_rows")
+    # and the summaries still answer
+    assert st.latency.count == 2000
+    assert np.isfinite(st.percentile_ms(99))
+    assert st.arrival_hist.n == 2000
+    srv.close()

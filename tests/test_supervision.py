@@ -138,6 +138,28 @@ def test_shed_deadline_picks_tightest_deadline():
     assert choose_shed_victim([_Req(), _Req()], "deadline") is None
 
 
+def test_shed_deadline_tie_breaks_are_deterministic():
+    """The documented tie-breaks, pinned: equal earliest deadlines break
+    toward the lowest queue index (the oldest request is the victim),
+    and deadline-free requests are never victims no matter how old."""
+    # equal tightest deadlines: first index wins
+    q = [_Req(deadline=2.0), _Req(deadline=2.0), _Req(deadline=7.0)]
+    assert choose_shed_victim(q, "deadline") == 0
+    assert choose_shed_victim(list(reversed(q)), "deadline") == 1
+    # an ancient deadline-free request (index 0) is still immune — the
+    # deadlined newcomer behind it is the victim
+    q = [_Req(deadline=None), _Req(deadline=None), _Req(deadline=3.0)]
+    assert choose_shed_victim(q, "deadline") == 2
+    # all deadline-free: None (reject the incoming request instead),
+    # regardless of queue length or age
+    assert choose_shed_victim([_Req() for _ in range(16)],
+                              "deadline") is None
+    # identical inputs always give identical victims
+    q = [_Req(deadline=4.0), _Req(deadline=1.0), _Req(deadline=1.0)]
+    picks = {choose_shed_victim(list(q), "deadline") for _ in range(20)}
+    assert picks == {1}
+
+
 def test_shed_empty_queue_and_unknown_policy():
     assert choose_shed_victim([], "oldest") is None
     with pytest.raises(ValueError, match="shed"):

@@ -1,0 +1,174 @@
+"""Bounded streaming statistics: exactness in the small, O(1) memory in
+the large, and estimator accuracy against numpy ground truth.
+
+Kept on the short-timeout serving CI lane with the other serving-stack
+suites."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.engine.telemetry import (P2Quantile, SizeHistogram,
+                                    StreamingQuantiles)
+
+
+# ---------------------------------------------------------------------------
+# SizeHistogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_exact_under_budget():
+    h = SizeHistogram(max_bins=8)
+    for s in [1, 1, 1, 2, 3, 3, 8]:
+        h.add(s)
+    h.add(2, count=5)
+    assert h.counts() == {1: 3, 2: 6, 3: 2, 8: 1}
+    assert h.n == 12
+    assert h.rows == 3 * 1 + 6 * 2 + 2 * 3 + 8
+    assert h.max_size == 8
+    assert h.collapsed == 0
+
+
+def test_histogram_overflow_merges_upward_and_keeps_totals():
+    h = SizeHistogram(max_bins=4)
+    for s in range(1, 101):         # 100 distinct sizes, budget 4
+        h.add(s)
+    assert h.state_size() <= 4
+    assert h.n == 100                         # exact despite merging
+    assert h.rows == sum(range(1, 101))       # exact despite merging
+    assert h.collapsed == 96
+    # merged mass moved to the LARGER size of each pair: the histogram
+    # over-estimates sizes, never under — rows re-derived from the bins
+    # is an upper bound on the true rows
+    binned_rows = sum(s * c for s, c in h.counts().items())
+    assert binned_rows >= h.rows
+    assert h.max_size == 100                  # the max survives merging
+
+
+def test_histogram_percentile_and_copy_independence():
+    h = SizeHistogram()
+    h.add(1, 90)
+    h.add(8, 10)
+    assert h.percentile(50) == 1
+    assert h.percentile(95) == 8
+    snap = h.copy()
+    h.add(4, 100)
+    assert snap.counts() == {1: 90, 8: 10}
+    assert h.counts() == {1: 90, 4: 100, 8: 10}
+
+
+def test_histogram_merge_and_validation():
+    a, b = SizeHistogram(), SizeHistogram()
+    a.add(1, 3)
+    b.add(1, 2)
+    b.add(4, 1)
+    a.merge(b)
+    assert a.counts() == {1: 5, 4: 1}
+    with pytest.raises(ValueError, match="size"):
+        a.add(-1)
+    with pytest.raises(ValueError, match="max_bins"):
+        SizeHistogram(max_bins=1)
+    a.add(2, count=0)                         # no-op, not an error
+    assert a.n == 6
+
+
+def test_histogram_thread_safety_totals():
+    h = SizeHistogram(max_bins=8)
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(500):
+            h.add(int(rng.integers(1, 40)))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.n == 2000
+    assert h.state_size() <= 8
+
+
+# ---------------------------------------------------------------------------
+# P2Quantile / StreamingQuantiles
+# ---------------------------------------------------------------------------
+
+def test_p2_tracks_known_quantiles():
+    rng = np.random.default_rng(0)
+    for dist, tol in [(rng.normal(10.0, 2.0, 4000), 0.05),
+                      (rng.uniform(0.0, 1.0, 4000), 0.05),
+                      (rng.exponential(1.0, 4000), 0.12)]:
+        for q in (0.5, 0.9, 0.99):
+            est = P2Quantile(q)
+            for x in dist:
+                est.add(float(x))
+            ref = float(np.quantile(dist, q))
+            scale = max(abs(ref), 1e-9)
+            assert abs(est.value() - ref) / scale < tol, \
+                (q, est.value(), ref)
+
+
+def test_streaming_quantiles_exact_for_small_samples():
+    sq = StreamingQuantiles(exact_n=64)
+    xs = [float(i) for i in range(50)]
+    for x in xs:
+        sq.add(x)
+    assert sq.exact
+    assert sq.quantile(0.0) == 0.0
+    assert sq.quantile(1.0) == 49.0
+    assert sq.percentile(50) == pytest.approx(np.percentile(xs, 50))
+    assert sq.percentile(99) == pytest.approx(np.percentile(xs, 99))
+    assert sq.mean == pytest.approx(np.mean(xs))
+    assert sq.count == 50
+
+
+def test_streaming_quantiles_estimator_phase_accuracy():
+    rng = np.random.default_rng(7)
+    xs = rng.normal(5.0, 1.0, 5000)
+    sq = StreamingQuantiles()
+    for x in xs:
+        sq.add(float(x))
+    assert not sq.exact
+    for q in (50, 90, 99):
+        ref = float(np.percentile(xs, q))
+        assert abs(sq.percentile(q) - ref) / abs(ref) < 0.05
+    # untracked quantiles interpolate between markers: sane, monotone
+    assert sq.percentile(0) == pytest.approx(sq.min)
+    assert sq.percentile(100) == pytest.approx(sq.max)
+    assert sq.percentile(70) >= sq.percentile(50)
+    assert sq.percentile(95) >= sq.percentile(90)
+
+
+def test_streaming_quantiles_state_is_bounded():
+    sq = StreamingQuantiles(exact_n=32)
+    for i in range(200):
+        sq.add(float(i % 17))
+    mid = sq.state_size()
+    for i in range(100_000):
+        sq.add(float(i % 23))
+    assert sq.state_size() == mid, "estimator state grew with the stream"
+    assert sq.count == 100_200
+
+
+def test_streaming_quantiles_copy_detached_and_json():
+    sq = StreamingQuantiles()
+    for x in (1.0, 2.0, 3.0):
+        sq.add(x)
+    snap = sq.copy()
+    sq.add(100.0)
+    assert snap.count == 3 and sq.count == 4
+    assert snap.max == 3.0 and sq.max == 100.0
+    js = sq.to_json()
+    assert js["count"] == 4
+    assert set(js) >= {"count", "mean", "min", "max", "p50", "p90", "p99"}
+    empty = StreamingQuantiles()
+    assert np.isnan(empty.quantile(0.5))
+    assert empty.to_json()["mean"] is None
+
+
+def test_streaming_quantiles_validation():
+    with pytest.raises(ValueError, match="q must be"):
+        StreamingQuantiles().quantile(1.5)
+    with pytest.raises(ValueError, match="q must be"):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError, match="quantile"):
+        StreamingQuantiles(qs=())

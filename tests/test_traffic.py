@@ -1,0 +1,275 @@
+"""Traffic subsystem: the bucket-set DP against brute force, waste
+accounting, priority classes, synthetic traces, and the
+save(buckets="auto") artifact loop.
+
+Kept on the short-timeout serving CI lane."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.engine.telemetry import SizeHistogram
+from repro.engine.traffic import (DEFAULT_PRIORITY, PRIORITY_CLASSES,
+                                  TRACE_KINDS, expected_padded_waste,
+                                  priority_rank, solve_buckets, synth_trace)
+
+
+# ---------------------------------------------------------------------------
+# expected_padded_waste
+# ---------------------------------------------------------------------------
+
+def test_waste_basics():
+    hist = {1: 10, 3: 5, 8: 2}
+    # everything through one bucket of 8
+    assert expected_padded_waste(hist, [8]) == 7 * 10 + 5 * 5 + 0
+    # exact buckets: zero waste
+    assert expected_padded_waste(hist, [1, 3, 8]) == 0
+    # sizes above the max bucket self-specialize: zero waste contribution
+    assert expected_padded_waste(hist, [1, 3]) == 0
+    # a bucket between them pads the 3s up
+    assert expected_padded_waste(hist, [1, 4]) == 5 * 1 + 2 * 0
+    with pytest.raises(ValueError, match="buckets"):
+        expected_padded_waste(hist, [0])
+
+
+def test_waste_accepts_histogram_objects():
+    h = SizeHistogram()
+    h.add(1, 10)
+    h.add(4, 2)
+    assert expected_padded_waste(h, [4]) == 30
+    assert expected_padded_waste({1: 10, 4: 2}, [4]) == 30
+
+
+# ---------------------------------------------------------------------------
+# solve_buckets: exact DP
+# ---------------------------------------------------------------------------
+
+def _brute_force(hist, max_buckets, lam):
+    sizes = sorted(hist)
+    best, best_cost = None, float("inf")
+    for m in range(1, min(max_buckets, len(sizes)) + 1):
+        # optimal buckets are a subset of observed sizes incl. the max
+        for combo in itertools.combinations(sizes, m):
+            if combo[-1] != sizes[-1]:
+                continue
+            cost = expected_padded_waste(hist, combo) + lam * m
+            if cost < best_cost:
+                best, best_cost = list(combo), cost
+    return best, best_cost
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_solver_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    sizes = sorted(rng.choice(range(1, 20), size=6, replace=False))
+    hist = {int(s): int(rng.integers(1, 50)) for s in sizes}
+    lam = float(rng.integers(0, 30))
+    for max_buckets in (1, 2, 3, 6):
+        got = solve_buckets(hist, max_buckets=max_buckets, spec_cost=lam)
+        _, ref_cost = _brute_force(hist, max_buckets, lam)
+        got_cost = expected_padded_waste(hist, got) + lam * len(got)
+        assert got_cost == pytest.approx(ref_cost), \
+            (hist, max_buckets, lam, got)
+        assert got[-1] == max(hist)           # always covers the max
+        assert len(got) <= max_buckets
+
+
+def test_solver_beats_handpicked_set():
+    """The acceptance-criteria gate in unit form: on a skewed measured
+    histogram the solved set's expected padded waste is <= the
+    hand-picked {1, 8} set's."""
+    hist = {1: 500, 2: 120, 3: 40, 4: 20, 6: 8, 8: 12}
+    solved = solve_buckets(hist, max_buckets=4)
+    assert (expected_padded_waste(hist, solved)
+            <= expected_padded_waste(hist, [1, 8]))
+
+
+def test_solver_spec_cost_trades_buckets():
+    hist = {1: 100, 2: 100, 3: 100, 4: 100}
+    many = solve_buckets(hist, spec_cost=0.0)
+    few = solve_buckets(hist, spec_cost=1e9)
+    assert many == [1, 2, 3, 4]               # free buckets: exact cover
+    assert few == [4]                          # costly buckets: one covers
+    assert len(few) < len(many)
+
+
+def test_solver_devices_rounding_and_validation():
+    hist = {1: 10, 3: 10, 5: 10}
+    got = solve_buckets(hist, max_buckets=3, spec_cost=0.0, devices=2)
+    assert all(b % 2 == 0 for b in got)
+    assert max(got) >= 5                      # still covers the max size
+    with pytest.raises(ValueError, match="empty histogram"):
+        solve_buckets({})
+    with pytest.raises(ValueError, match="max_buckets"):
+        solve_buckets(hist, max_buckets=0)
+    with pytest.raises(TypeError):
+        solve_buckets("nonsense")
+
+
+# ---------------------------------------------------------------------------
+# Priority classes
+# ---------------------------------------------------------------------------
+
+def test_priority_classes():
+    assert priority_rank("interactive") == 0
+    assert priority_rank(DEFAULT_PRIORITY) == 1
+    assert priority_rank("batch") == 2
+    assert [priority_rank(p) for p in PRIORITY_CLASSES] == [0, 1, 2]
+    with pytest.raises(ValueError, match="priority"):
+        priority_rank("platinum")
+
+
+# ---------------------------------------------------------------------------
+# Synthetic traces
+# ---------------------------------------------------------------------------
+
+def test_traces_deterministic_and_shaped():
+    for kind in TRACE_KINDS:
+        a = synth_trace(kind, n=200, seed=3)
+        b = synth_trace(kind, n=200, seed=3)
+        assert a == b, f"{kind} trace is not deterministic"
+        assert len(a) == 200
+        ts = [r.t for r in a]
+        assert ts == sorted(ts)               # arrival times monotone
+        assert all(1 <= r.rows <= 8 for r in a)
+    c = synth_trace("bursty", n=200, seed=4)
+    assert a != c
+
+
+def test_heavytail_trace_is_heavy_tailed():
+    tr = synth_trace("heavytail", n=2000, seed=0)
+    ones = sum(1 for r in tr if r.rows == 1)
+    big = sum(1 for r in tr if r.rows >= 6)
+    assert ones > len(tr) * 0.4               # mass at 1 ...
+    assert 0 < big < ones / 2                 # ... with a real, thin tail
+
+
+def test_trace_tenants_priorities_deadlines():
+    tr = synth_trace("uniform", n=12, seed=0, tenants=("a", "b"),
+                     priorities=("interactive", "standard", "batch"),
+                     deadline_ms=50.0)
+    assert {r.tenant for r in tr} == {"a", "b"}
+    for r in tr:
+        if r.priority == "interactive":
+            assert r.deadline_ms == 50.0      # only interactive deadlined
+        else:
+            assert r.deadline_ms is None
+    with pytest.raises(ValueError, match="kind"):
+        synth_trace("square-wave", n=5)
+
+
+# ---------------------------------------------------------------------------
+# save(buckets=...) — the measured-traffic loop
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mini_session():
+    from repro.core.graph import Graph
+    from repro.engine import compile as compile_session
+
+    g = Graph()
+    g.add("in", "input")
+    g.add("c1", "conv2d", ["in"], in_channels=3, out_channels=8, kh=3,
+          kw=3, stride=2, pad=1)
+    g.add("r1", "relu", ["c1"])
+    g.add("gap", "global_avg_pool", ["r1"])
+    g.add("fl", "flatten", ["gap"])
+    g.add("fc", "dense", ["fl"], units=4)
+    g.mark_output("fc")
+    return compile_session(g, {"in": (1, 3, 8, 8)})
+
+
+def test_save_buckets_auto_solves_and_filters(mini_session, tmp_path):
+    import json
+
+    from repro.engine import InferenceSession
+
+    sess = mini_session
+    sess.specialize(1)
+    # measured traffic: overwhelmingly 2-row requests, a few 4s
+    hist = {2: 50, 4: 5}
+    path = sess.save(tmp_path / "auto_art", buckets="auto", traffic=hist)
+    manifest = json.loads((path / "manifest.json").read_text())
+    solved = manifest["traffic"]["buckets"]
+    assert manifest["traffic"]["mode"] == "auto"
+    assert manifest["traffic"]["histogram"] == {"2": 50, "4": 5}
+    assert solved[-1] == 4                    # covers the max observed
+    loaded = InferenceSession.load(path)
+    assert loaded.batch_sizes == sorted(solved)
+    # the learned buckets serve, frozen, with zero searches
+    x = np.zeros((2, 3, 8, 8), np.float32)
+    assert np.asarray(loaded.predict(
+        np.concatenate([x, np.zeros((solved[0] - 2 if solved[0] > 2
+                                     else 0, 3, 8, 8), np.float32)])
+        if solved[0] > 2 else x)).shape[0] >= 1
+
+
+def test_save_buckets_auto_uses_session_recorder(mini_session, tmp_path):
+    sess = mini_session
+    sess.traffic.add(2, 30)
+    path = sess.save(tmp_path / "rec_art", buckets="auto")
+    import json
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["traffic"]["mode"] == "auto"
+    assert "2" in manifest["traffic"]["histogram"]
+
+
+def test_save_buckets_explicit_and_errors(mini_session, tmp_path):
+    import json
+
+    from repro.engine import InferenceSession
+
+    sess = mini_session
+    path = sess.save(tmp_path / "explicit_art", buckets=[1, 2])
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["traffic"] == {"mode": "explicit", "buckets": [1, 2]}
+    assert InferenceSession.load(path).batch_sizes == [1, 2]
+    # plain saves carry no traffic section but keep every specialization
+    plain = sess.save(tmp_path / "plain_art")
+    pm = json.loads((plain / "manifest.json").read_text())
+    assert pm["traffic"] is None
+    assert InferenceSession.load(plain).batch_sizes == sess.batch_sizes
+    with pytest.raises(ValueError, match="traffic"):
+        sess.save(tmp_path / "bad", traffic={1: 5})    # without buckets
+    with pytest.raises(ValueError, match="recorded traffic"):
+        fresh_g = sess                # session with empty recorder
+        empty = SizeHistogram()
+        sess.save(tmp_path / "bad2", buckets="auto", traffic=empty)
+    with pytest.raises(ValueError, match="buckets"):
+        sess.save(tmp_path / "bad3", buckets=[0])
+
+
+def test_frozen_session_rejects_unseen_explicit_buckets(mini_session,
+                                                        tmp_path):
+    from repro.engine import InferenceSession
+
+    path = mini_session.save(tmp_path / "frozen_src", buckets=[1, 2],
+                             include_source=False)
+    frozen = InferenceSession.load(path)
+    with pytest.raises(RuntimeError, match="frozen"):
+        frozen.save(tmp_path / "frozen_out", buckets=[16])
+    # re-saving its existing buckets is fine
+    frozen.save(tmp_path / "frozen_out", buckets=[1])
+
+
+def test_release_and_memory_bytes(mini_session):
+    sess = mini_session
+    sess.specialize(2)
+    mem = sess.memory_bytes()
+    assert set(mem) == set(sess.batch_sizes)
+    assert all(v > 0 for v in mem.values())
+    assert sess.release(2) is True
+    assert 2 not in sess.batch_sizes
+    assert sess.release(2) is False           # already gone
+    sess.specialize(2)                        # rebuildable on demand
+    assert 2 in sess.batch_sizes
+
+
+def test_frozen_session_release_refused(mini_session, tmp_path):
+    from repro.engine import InferenceSession
+
+    path = mini_session.save(tmp_path / "rel_art", buckets=[1],
+                             include_source=False)
+    frozen = InferenceSession.load(path)
+    with pytest.raises(RuntimeError, match="frozen"):
+        frozen.release(1)
