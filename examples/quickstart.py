@@ -25,6 +25,11 @@ bucket-set solver behind ``save(buckets="auto")``, priority classes with
 EDF packing, and multi-tenant ``FleetServer`` hosting — see docs/api.md
 "Traffic-aware serving" and the replay benchmark
 ``benchmarks/serving_trace.py`` (``--smoke`` runs the CI gates locally).
+The same front door also compiles LM decoders:
+``compile(<LMConfig or ARCHS name>, (batch, max_len))`` returns an
+``LMSession`` with seq-bucketed prefill, streamed greedy decode through
+``AsyncServer.submit_stream``, and zero-search artifact reload — see
+docs/api.md "LM serving" and ``benchmarks/lm_serving.py``.
 """
 import sys
 import time

@@ -183,6 +183,8 @@ def conv_schedule_cost(wl: ConvWorkload, s: ConvSchedule,
 def epilogue_bytes(nchw_shape: Tuple[int, ...], *, bn: bool = False,
                    relu: bool = False, residual: bool = False,
                    pool_stride: int = 0, concat: bool = False,
+                   scale: bool = False, mask: bool = False,
+                   softmax: bool = False,
                    fused: bool = False, dtype_bytes: int = 4) -> int:
     """HBM traffic for a conv's elementwise/shallow epilogue.
 
@@ -197,6 +199,15 @@ def epilogue_bytes(nchw_shape: Tuple[int, ...], *, bn: bool = False,
     epilogue traffic left is the single residual read.  (The *smaller
     pooled store itself* is credited in ``conv_schedule_cost``'s output
     term, not here.)
+
+    The matmul-tail stages price the same way (``nchw_shape`` is then the
+    logical (M, N) logits shape, trailing dims 1): an unfused ``scale`` or
+    ``mask`` is one elementwise pass (read + write), and an unfused row
+    ``softmax`` is three passes over the logits (max-reduce read, exp read
+    + write, normalize read + write ≈ 3x tensor — the reductions' scalar
+    outputs are noise).  Fused, all three run on the accumulator-resident
+    block and add zero HBM traffic, which is exactly why the fused
+    attention tail wins: the (S, S) logits tensor never materializes.
 
     Caveat on the fused concat credit: it models the in-place offset store
     (what XLA emits for the jnp path under jit, and what a TPU backend gets
@@ -222,15 +233,24 @@ def epilogue_bytes(nchw_shape: Tuple[int, ...], *, bn: bool = False,
         total += tensor + tensor // (pool_stride * pool_stride)
     if concat:
         total += 2 * tensor
+    if scale:
+        total += 2 * tensor
+    if mask:
+        total += 2 * tensor
+    if softmax:
+        total += 3 * tensor
     return total
 
 
 def epilogue_cost_s(nchw_shape: Tuple[int, ...], *, bn: bool = False,
                     relu: bool = False, residual: bool = False,
                     pool_stride: int = 0, concat: bool = False,
+                    scale: bool = False, mask: bool = False,
+                    softmax: bool = False,
                     fused: bool = False, dtype_bytes: int = 4) -> float:
     return epilogue_bytes(nchw_shape, bn=bn, relu=relu, residual=residual,
                           pool_stride=pool_stride, concat=concat,
+                          scale=scale, mask=mask, softmax=softmax,
                           fused=fused, dtype_bytes=dtype_bytes) / HBM_BW
 
 

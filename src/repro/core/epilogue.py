@@ -42,7 +42,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30   # matches kernels.flash_attention.NEG_INF
 
 
 def _pool_out_hw(h: int, w: int, k: int, stride: int, pad: int,
@@ -126,12 +129,45 @@ class EpilogueSpec:
     ``concat_total`` > 0 means the block stores into a shared concat buffer
     of that many channels, at channel offset ``concat_offset`` — the kernel
     then receives the buffer and returns it with the block's slice written.
+
+    The LM extension adds the matmul-tail stages, applied while the logits
+    block is still accumulator-resident (order fixed, after the conv-side
+    affine/residual stages and instead of pooling):
+
+        acc = acc * scale              # e.g. 1/sqrt(head_dim)
+        acc = mask(acc)                # "causal": NEG_INF above the diagonal
+        acc = softmax(acc, axis=-1)    # row softmax over the full N extent
+
+    ``softmax=True`` requires the kernel to hold a full output row in one
+    block (the matmul template enforces a single N-block, the same way
+    concat fusion constrains ``oc_bn``).  The matmul stages are mutually
+    exclusive with pooling/concat — those are conv-side spatial stages.
     """
 
     relu: bool = False
     pool: Optional[PoolSpec] = None
     concat_offset: int = 0
     concat_total: int = 0
+    scale: Optional[float] = None
+    mask: str = "none"        # "none" | "causal"
+    softmax: bool = False
+
+    def __post_init__(self):
+        if self.mask not in ("none", "causal"):
+            raise ValueError(f"mask {self.mask!r} not in ('none', 'causal')")
+        if self.has_matmul_tail and (self.pool is not None
+                                     or self.concat_total > 0):
+            raise ValueError(
+                "matmul-tail stages (scale/mask/softmax) cannot combine "
+                "with conv-side pooling or concat placement")
+        if self.softmax and self.relu:
+            raise ValueError("softmax and relu are mutually exclusive "
+                             "epilogue tails")
+
+    @property
+    def has_matmul_tail(self) -> bool:
+        return (self.scale is not None or self.mask != "none"
+                or self.softmax)
 
     @property
     def writes_concat(self) -> bool:
@@ -152,6 +188,46 @@ class EpilogueSpec:
 
 
 IDENTITY = EpilogueSpec()
+
+
+def apply_matmul_epilogue(acc: jnp.ndarray, spec: EpilogueSpec, *,
+                          row0=0, col0=0,
+                          n_valid: Optional[int] = None) -> jnp.ndarray:
+    """Apply a matmul-tail epilogue to an fp32 accumulator block.
+
+    THE shared implementation: the jnp oracle, the Pallas blocked-GEMM
+    kernel (on the VMEM accumulator at the last k-step), and any future
+    template variant all run this one body, so fused and standalone
+    epilogues cannot drift apart — the conv-side twin of
+    ``kernels.ops.apply_epilogue_fp32``.
+
+    ``row0``/``col0`` locate the block inside the logical (M, N) output
+    (the causal mask needs absolute coordinates).  ``n_valid`` masks
+    padded columns ``>= n_valid`` to NEG_INF before the softmax so the
+    exp-sum of a padded row matches the unpadded computation exactly; it
+    is ignored without softmax (padded columns are sliced away anyway).
+    """
+    bm, bn = acc.shape[-2], acc.shape[-1]
+    if spec.scale is not None:
+        acc = acc * jnp.float32(spec.scale)
+    need_cols = (spec.mask == "causal"
+                 or (spec.softmax and n_valid is not None and n_valid < bn))
+    if need_cols:
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, acc.shape,
+                                               acc.ndim - 1)
+    if spec.mask == "causal":
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, acc.shape,
+                                               acc.ndim - 2)
+        acc = jnp.where(rows >= cols, acc, NEG_INF)
+    if spec.softmax:
+        if n_valid is not None and n_valid < bn:
+            acc = jnp.where(cols < n_valid, acc, NEG_INF)
+        m = jnp.max(acc, axis=-1, keepdims=True)
+        p = jnp.exp(acc - m)
+        acc = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    if spec.relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc
 
 
 def fold_dequant_scale(scale, w_scale):

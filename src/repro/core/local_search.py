@@ -322,20 +322,36 @@ class ScheduleDatabase:
             self._save()
 
     def merge(self, other: "ScheduleDatabase") -> int:
-        """Fold another database's entries into this one; existing keys
-        win (first tenant to contribute a workload keeps its measured
-        ranking).  Returns the number of entries added.  This is how a
-        fleet shares one schedule database across tenant sessions: each
-        loaded artifact's db merges in, and every session is then pointed
-        at the shared instance."""
-        added = 0
+        """Fold another database's entries into this one.  Conflict
+        semantics are **best-measured-wins**: on a shared workload key the
+        incoming entry replaces the existing one only when it is measured
+        AND the existing entry is either analytical or measured slower
+        (strictly worse best ``cost_s``).  An analytical incoming entry
+        never displaces anything, and ties keep the incumbent — so merging
+        the same database twice is idempotent, and a tenant whose artifact
+        carries a *faster* measured winner upgrades the shared entry for
+        everyone while a slower one cannot regress it.  Returns the number
+        of entries added or replaced.  This is how a fleet shares one
+        schedule database across tenant sessions: each loaded artifact's
+        db merges in, and every session is then pointed at the shared
+        instance.  (Existing tenants' already-bound plans are untouched
+        either way — the database only shapes *future* specializations.)"""
+        changed = 0
         for key, result in other._mem.items():
-            if key not in self._mem:
+            have = self._mem.get(key)
+            if have is None:
                 self._mem[key] = result
-                added += 1
-        if added and self.path:
+                changed += 1
+                continue
+            if not result.measured:
+                continue
+            if (not have.measured
+                    or result.ranked[0].cost_s < have.ranked[0].cost_s):
+                self._mem[key] = result
+                changed += 1
+        if changed and self.path:
             self._save()
-        return added
+        return changed
 
     # -- persistence ---------------------------------------------------------
     def to_blob(self, measured_only: bool = False) -> Dict:

@@ -26,13 +26,15 @@ from repro.engine.faults import (DelayBatch, FailBatch, FaultInjector,
                                  corrupt_artifact, corrupt_file)
 from repro.engine.fleet import (DuplicateModelError, FleetServer,
                                 MemoryBudgetError, UnknownModelError)
+from repro.engine.lm_session import LMSession, compile_lm
 from repro.engine.serving import (AllWorkersUnhealthyError, AsyncServer,
                                   BatchPolicy, DeadlineExceededError,
                                   DynamicBatchPolicy, LoadShedError,
                                   QueueFullError, RequestTooLargeError,
                                   RetriesExhaustedError,
                                   ServerClosedError, ServingError,
-                                  ServingStats, WorkerCrashError,
+                                  ServingStats, StreamRequest, TokenStream,
+                                  WorkerCrashError,
                                   nearest_bucket, padded_predict)
 from repro.engine.session import (ArtifactCorruptError, ArtifactError,
                                   InferenceSession, Session,
@@ -44,8 +46,10 @@ from repro.engine.telemetry import (P2Quantile, SizeHistogram,
                                     StreamingQuantiles)
 from repro.engine.traffic import (DEFAULT_PRIORITY, PRIORITY_CLASSES,
                                   TRACE_KINDS, TraceRequest,
+                                  expected_catchup_tokens,
                                   expected_padded_waste, priority_rank,
-                                  solve_buckets, synth_trace)
+                                  solve_buckets, solve_seq_buckets,
+                                  synth_trace)
 
 __all__ = ["AllWorkersUnhealthyError", "ArtifactCorruptError",
            "ArtifactError", "AsyncServer", "BatchPolicy", "CompiledModel",
@@ -53,16 +57,19 @@ __all__ = ["AllWorkersUnhealthyError", "ArtifactCorruptError",
            "DuplicateModelError", "DynamicBatchPolicy",
            "FailBatch", "FaultInjector", "FleetServer", "HeartbeatMonitor",
            "InferenceSession", "InjectedFault", "InjectedPredictError",
+           "LMSession",
            "InjectedWorkerCrash", "KillWorker", "LoadShedError",
            "MemoryBudgetError", "P2Quantile", "PRIORITY_CLASSES",
            "QueueFullError", "RequestTooLargeError",
            "RetriesExhaustedError", "RetryPolicy",
            "SHED_POLICIES", "ServerClosedError", "ServingError",
-           "ServingStats", "Session", "SizeHistogram",
+           "ServingStats", "Session", "SizeHistogram", "StreamRequest",
+           "TokenStream",
            "StragglerMitigator", "StragglerPolicy", "StreamingQuantiles",
            "TRACE_KINDS", "TraceRequest", "UnknownModelError",
            "UnverifiedArtifactWarning", "WorkerCrashError", "bind_params",
-           "compile", "compile_model", "choose_shed_victim",
-           "corrupt_artifact", "corrupt_file", "expected_padded_waste",
+           "compile", "compile_lm", "compile_model", "choose_shed_victim",
+           "corrupt_artifact", "corrupt_file", "expected_catchup_tokens",
+           "expected_padded_waste",
            "nearest_bucket", "padded_predict", "priority_rank",
-           "solve_buckets", "synth_trace"]
+           "solve_buckets", "solve_seq_buckets", "synth_trace"]

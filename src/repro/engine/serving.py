@@ -108,6 +108,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import queue
 import threading
 import time
 from concurrent.futures import Future
@@ -227,7 +228,12 @@ def padded_predict(session, x: jnp.ndarray, bucket: Optional[int] = None):
 
 @dataclasses.dataclass
 class Request:
-    """One queued inference request (leading dim = rows)."""
+    """One queued inference request (leading dim = rows).
+
+    ``rank`` is the cached ``priority_rank(priority)`` and is *required*:
+    EDF packing sorts on it, and a request record missing it would
+    silently sort at default priority instead of failing — so construction
+    validates it loudly (a previous version fell back via ``getattr``)."""
 
     x: jnp.ndarray
     rows: int
@@ -237,7 +243,82 @@ class Request:
     retries: int = 0                     # re-executions consumed so far
     not_before: Optional[float] = None   # retry backoff gate (absolute)
     priority: str = DEFAULT_PRIORITY     # one of traffic.PRIORITY_CLASSES
-    rank: int = 1                        # cached priority_rank(priority)
+    rank: int = dataclasses.field(kw_only=True)  # priority_rank(priority)
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.rank, int) or isinstance(self.rank, bool):
+            raise TypeError(
+                f"rank must be an int priority rank, got {self.rank!r}; "
+                "pass priority_rank(priority)")
+
+
+class TokenStream:
+    """Iterator over one streamed LM generation's tokens.
+
+    Backed by a queue the executing worker pushes into
+    (``LMSession.generate``'s ``on_token`` hook) and the request's future:
+    when the future resolves — result, failure, deadline expiry, shed, or
+    close — a sentinel wakes the consumer, which then either stops (all
+    tokens already delivered) or re-raises the future's exception.
+
+    Duplicate execution is safe by construction: a watchdog-requeued
+    generation replays deterministically from step 0, and ``push`` drops
+    any step index it has already emitted — so the consumer sees each
+    token exactly once no matter how many times the generation ran.
+    ``result(timeout)`` blocks for the full ``(batch, max_new_tokens)``
+    token array (identical to the concatenation of streamed steps)."""
+
+    _DONE = object()
+
+    def __init__(self, future: Future) -> None:
+        self.future = future
+        self._q: "queue.Queue" = queue.Queue()
+        self._emitted = 0
+        self._lock = threading.Lock()
+        future.add_done_callback(lambda _f: self._q.put(self._DONE))
+
+    def push(self, step: int, tokens) -> None:
+        """``on_token`` hook: deliver one step's tokens, dedup replays."""
+        with self._lock:
+            if step != self._emitted:
+                return                   # replayed step of a re-execution
+            self._emitted += 1
+        self._q.put(tokens)
+
+    def result(self, timeout: Optional[float] = None):
+        return self.future.result(timeout)
+
+    def __iter__(self) -> "TokenStream":
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is not self._DONE:
+            return item
+        # tokens are pushed before the future resolves (same thread), so
+        # the sentinel is always last; re-queue it so an over-eager extra
+        # __next__ terminates again instead of blocking
+        self._q.put(self._DONE)
+        if not self.future.cancelled():
+            exc = self.future.exception()
+            if exc is not None:
+                raise exc
+        raise StopIteration
+
+
+@dataclasses.dataclass
+class StreamRequest(Request):
+    """A queued streamed-generation request: ``x`` is the ``(batch,
+    prompt_len)`` token array, ``rows`` its batch dim.  Rides the same
+    pending deque as plain requests — deadlines (queued expiry), shedding,
+    retries, and supervision all apply verbatim — but always *executes
+    alone* (generation holds a worker for many decode steps; co-batching
+    it behind CNN-style padding would serialize unrelated requests behind
+    it)."""
+
+    max_new_tokens: int = dataclasses.field(kw_only=True, default=1)
+    stream: Optional[TokenStream] = dataclasses.field(kw_only=True,
+                                                      default=None)
 
 
 class BatchPolicy:
@@ -343,8 +424,9 @@ class DynamicBatchPolicy(BatchPolicy):
         def key(i: int):
             r = pending[i]
             dl = r.deadline if r.deadline is not None else float("inf")
-            return (r.deadline is None, dl, getattr(r, "rank", 1),
-                    r.t_submit, i)
+            # r.rank is a required field: a malformed request record
+            # raises here instead of silently sorting at default priority
+            return (r.deadline is None, dl, r.rank, r.t_submit, i)
 
         chosen: List[int] = []
         total = 0
@@ -641,6 +723,11 @@ class AsyncServer:
         close/drain, :class:`RequestTooLargeError` past the packable
         maximum, ValueError for a malformed request or unknown
         ``priority`` class."""
+        if (hasattr(self.session, "generate")
+                and not hasattr(self.session, "predict")):
+            raise ServingError(
+                "this server wraps an LM session (token generation, not "
+                "batched predict); use submit_stream")
         x = jnp.asarray(x)
         (spec,) = self.session.input_spec.values()
         if x.ndim != len(spec):
@@ -707,6 +794,91 @@ class AsyncServer:
         """Blocking convenience: submit + wait."""
         return self.submit(x, deadline_ms=deadline_ms,
                            priority=priority).result(timeout)
+
+    def submit_stream(self, tokens, max_new_tokens: int,
+                      deadline_ms: Optional[float] = None,
+                      priority: Optional[str] = None) -> TokenStream:
+        """Enqueue one streamed LM generation; returns a
+        :class:`TokenStream` yielding each decode step's tokens as the
+        worker produces them (``StopIteration`` when the generation
+        completes; the future's typed error re-raised on failure).
+
+        The request rides the same bounded queue as :meth:`submit`:
+        ``deadline_ms`` expires *queued* generations (a generation that
+        started executing always runs to completion — its tokens are
+        already streaming), overload shedding, retry/requeue, and worker
+        supervision apply unchanged, and a watchdog-requeued generation
+        replays idempotently (greedy decode is deterministic, and the
+        stream dedups re-emitted steps).  Requires a session with a
+        ``generate`` method (:class:`~repro.engine.lm_session.LMSession`)."""
+        if not hasattr(self.session, "generate"):
+            raise ServingError(
+                "submit_stream needs an LM session (with generate); this "
+                "server wraps a CNN session — use submit")
+        x = jnp.asarray(tokens)
+        if x.ndim != 2:
+            raise ValueError(f"tokens must be (batch, prompt_len), got "
+                             f"shape {tuple(x.shape)}")
+        rows = int(x.shape[0])
+        prompt_len = int(x.shape[1])
+        if rows != self.session.batch:
+            raise ValueError(
+                f"this LM session serves batch={self.session.batch} "
+                f"generations; got {rows} prompt rows")
+        if prompt_len < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if prompt_len + max_new_tokens - 1 > self.session.max_len:
+            raise RequestTooLargeError(
+                f"prompt ({prompt_len}) + new tokens ({max_new_tokens}) "
+                f"overflow the session's max_len="
+                f"{self.session.max_len}; split or truncate")
+        priority = self.priority_default if priority is None else priority
+        rank = priority_rank(priority)
+        fut: Future = Future()
+        stream = TokenStream(fut)
+        now = self._clock()
+        if deadline_ms is not None and deadline_ms <= 0:
+            with self._cond:
+                self._stats.n_deadline_expired += 1
+            raise DeadlineExceededError(
+                f"deadline_ms={deadline_ms} already expired at submission")
+        deadline = None if deadline_ms is None else now + deadline_ms / 1e3
+        with self._cond:
+            if self._closed or self._draining:
+                raise ServerClosedError("server is closed to new requests")
+            if (self._threads and self._unhealthy
+                    and len(self._unhealthy) == len(self._threads)):
+                raise AllWorkersUnhealthyError(
+                    "every worker slot exhausted its restart budget; "
+                    "the server cannot execute requests")
+            if len(self._pending) >= self.max_queue:
+                victim = choose_shed_victim(self._pending, self.shed)
+                if victim is None:
+                    self._stats.n_rejected_full += 1
+                    raise QueueFullError(
+                        f"request queue at capacity ({self.max_queue}); "
+                        "retry later or raise max_queue")
+                shed = self._pending[victim]
+                del self._pending[victim]
+                if self._resolve(shed.future, exc=LoadShedError(
+                        f"shed by the {self.shed!r} overload policy after "
+                        f"{(now - shed.t_submit) * 1e3:.1f} ms queued")):
+                    self._stats.n_shed += 1
+            self._pending.append(StreamRequest(
+                x, rows, fut, now, deadline, priority=priority, rank=rank,
+                max_new_tokens=int(max_new_tokens), stream=stream))
+            self._stats.n_submitted += 1
+            self._stats.arrival_hist.add(rows)
+            self._stats.queue_depth_peak = max(
+                self._stats.queue_depth_peak, len(self._pending))
+            traffic = getattr(self.session, "traffic", None)
+            if traffic is not None:
+                traffic.add(prompt_len)   # feeds solve_seq_buckets
+            self._cond.notify_all()
+        return stream
 
     # -- scheduling core -----------------------------------------------------
     @staticmethod
@@ -796,6 +968,17 @@ class AsyncServer:
                 and not (i in seen or seen.add(i))]
         if not idxs:
             return None
+        # streamed generations execute alone: cut the packed list at the
+        # first stream boundary (a leading stream request runs solo; a
+        # stream behind plain requests waits for the next batch)
+        cut: List[int] = []
+        for i in idxs:
+            if isinstance(pending[i], StreamRequest):
+                if not cut:
+                    cut = [i]
+                break
+            cut.append(i)
+        idxs = cut
         batch = [self._pending[i] for i in idxs]
         for i in sorted(idxs, reverse=True):
             del self._pending[i]
@@ -883,19 +1066,29 @@ class AsyncServer:
         try:
             if self.faults is not None and seq is not None:
                 self.faults.fire(worker, seq, self._sleep)
-            xs = batch[0].x if len(batch) == 1 else \
-                jnp.concatenate([r.x for r in batch])
-            bucket = getattr(self.policy, "fixed_bucket", None)
-            if bucket is None:
-                bucket = nearest_bucket(rows, self.session.batch_sizes)
-            if bucket is None:
-                # on-demand re-specialization (session lock serializes the
-                # planner); _cap() already rejected this for frozen sessions
-                bucket = rows
-            m = self._model_for(bucket, worker)
-            y = m.predict(pad_rows(xs, bucket))
-            y = jax.block_until_ready(y)
-            y = _slice_rows(y, 0, rows)
+            if isinstance(batch[0], StreamRequest):
+                # streams execute alone (enforced by _form_locked): run
+                # the generation, tokens flowing to the client as each
+                # decode step lands; the full array resolves the future
+                r = batch[0]
+                bucket = rows            # no padding on the LM path
+                y = self.session.generate(r.x, r.max_new_tokens,
+                                          on_token=r.stream.push)
+            else:
+                xs = batch[0].x if len(batch) == 1 else \
+                    jnp.concatenate([r.x for r in batch])
+                bucket = getattr(self.policy, "fixed_bucket", None)
+                if bucket is None:
+                    bucket = nearest_bucket(rows, self.session.batch_sizes)
+                if bucket is None:
+                    # on-demand re-specialization (session lock serializes
+                    # the planner); _cap() already rejected this for frozen
+                    # sessions
+                    bucket = rows
+                m = self._model_for(bucket, worker)
+                y = m.predict(pad_rows(xs, bucket))
+                y = jax.block_until_ready(y)
+                y = _slice_rows(y, 0, rows)
         except BaseException as e:      # noqa: BLE001 — retry or fail typed
             self._fail_or_requeue(batch, e, worker=worker)
             if isinstance(e, InjectedWorkerCrash):

@@ -92,7 +92,7 @@ from repro.engine.telemetry import SizeHistogram
 from repro.nn.init import Params, init_params
 
 ARTIFACT_FORMAT = "neocpu-inference-session"
-ARTIFACT_VERSION = 4
+ARTIFACT_VERSION = 5
 
 SESSION_DTYPES = ("fp32", "int8")
 
@@ -160,6 +160,17 @@ def _migrate_v3_to_v4(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
     artifacts are all fp32, so "quantized" is simply absent."""
     manifest["quantized"] = None
     manifest["version"] = 4
+    return manifest
+
+
+@register_migration(4)
+def _migrate_v4_to_v5(manifest: Dict[str, Any], path: Path) -> Dict[str, Any]:
+    """v4 -> v5: the optional ``lm`` manifest section (LM sessions: config
+    + seq-bucket set + prompt-traffic provenance, loaded by
+    ``LMSession.load``).  Pre-v5 artifacts are all CNN sessions, so "lm"
+    is simply absent."""
+    manifest["lm"] = None
+    manifest["version"] = 5
     return manifest
 
 
@@ -586,6 +597,9 @@ class InferenceSession:
             # saves); load() ignores unknown manifest keys, so older
             # builds read these artifacts fine
             "traffic": traffic_meta,
+            # CNN sessions never carry an LM section; the explicit None
+            # keeps v5 manifests self-describing (load dispatches on it)
+            "lm": None,
             # measured winners only: analytical rankings are re-derivable
             # and would bloat the manifest by megabytes per workload set
             "db": self.db.to_blob(measured_only=True),
@@ -665,6 +679,10 @@ class InferenceSession:
                     f"migration hook for version {version} did not "
                     "advance the manifest version")
             version = manifest["version"]
+        if manifest.get("lm"):
+            raise ArtifactError(
+                f"{path} is an LM artifact (seq-bucketed prefill + decode "
+                "program); load it with repro.engine.LMSession.load")
         # integrity gate: verify every checksummed file BEFORE
         # deserializing anything — a flipped bit in a weight blob or plan
         # is refused typed, never silently served.  Pre-v3 artifacts
@@ -826,6 +844,33 @@ def compile(model: Union[str, Graph],                     # noqa: A001
                 session still specializes other batch sizes on demand
     """
     from repro.models.cnn import build as build_zoo
+
+    # LM dispatch: an LMConfig (or assigned-LM-architecture name) routes
+    # to the LM arm — one compiler front door, two workload families.
+    # input_spec is then the (batch, max_len) token shape.
+    from repro.models.lm import LMConfig as _LMConfig
+    lm_model = None
+    if isinstance(model, _LMConfig):
+        lm_model = model
+    elif isinstance(model, str):
+        from repro.configs import ARCHS as _LM_ARCHS
+        if model in _LM_ARCHS:
+            lm_model = model
+    if lm_model is not None:
+        from repro.engine.lm_session import compile_lm
+        spec = input_spec
+        if isinstance(spec, dict):
+            if len(spec) != 1:
+                raise ValueError("LM models take exactly one token input; "
+                                 f"got spec keys {sorted(spec)}")
+            (spec,) = spec.values()
+        if spec is None or len(tuple(spec)) != 2:
+            raise ValueError(
+                "compile(<LM model>, ...) needs input_spec as the "
+                f"(batch, max_len) token shape; got {input_spec!r}")
+        b, max_len = (int(v) for v in spec)
+        return compile_lm(lm_model, max_len=max_len, batch=b, seed=seed,
+                          params=params)
 
     if isinstance(model, Graph):
         if not isinstance(input_spec, dict):

@@ -47,7 +47,9 @@ __all__ = [
     "DEFAULT_PRIORITY",
     "priority_rank",
     "expected_padded_waste",
+    "expected_catchup_tokens",
     "solve_buckets",
+    "solve_seq_buckets",
     "TraceRequest",
     "TRACE_KINDS",
     "synth_trace",
@@ -207,6 +209,62 @@ def solve_buckets(hist: HistLike, *, max_buckets: int = 8,
         buckets = sorted({int(math.ceil(b / devices)) * devices
                           for b in buckets})
     return buckets
+
+
+def expected_catchup_tokens(hist: HistLike,
+                            buckets: Sequence[int]) -> int:
+    """Total decode catch-up tokens serving prompt-length ``hist``
+    through prefix ``buckets``: each prompt pays
+    ``len - (largest bucket <= len)`` single-token decode steps.
+    Prompts below the smallest bucket run entirely through decode
+    (bucket 0)."""
+    counts = _coerce_counts(hist)
+    bs = sorted(set(int(b) for b in buckets))
+    if any(b < 1 for b in bs):
+        raise ValueError(f"buckets must be >= 1, got {buckets}")
+    tokens = 0
+    for s, c in counts.items():
+        down = [b for b in bs if b <= s]
+        tokens += (s - max(down)) * c if down else s * c
+    return tokens
+
+
+def solve_seq_buckets(hist: HistLike, *, max_buckets: int = 8,
+                      spec_cost: Union[float, str] = "auto") -> List[int]:
+    """Sequence-length bucket set for LM prefill, minimizing decode
+    catch-up ``tokens + spec_cost * n_buckets``.
+
+    Batch buckets pad *up* (a padded row is wasted compute); prefill
+    buckets truncate *down* — right-padding a prompt corrupts recurrent
+    state (SSM/LRU layers) and windowed KV rings, so an LM session
+    prefillls the largest bucket **<=** the prompt and catches the
+    remaining tokens up through the (already specialized) decode
+    program, at one decode step per leftover token.
+
+    That mirror image reduces to the batch solver by reflection: map
+    each observed length ``s`` to ``M + 1 - s`` (``M`` the longest
+    observed prompt), run the exact padded-waste DP, and reflect the
+    bucket set back.  ``smallest bucket >= reflected size`` becomes
+    ``largest bucket <= s``, and the reflected padded waste
+    ``(bucket' - size')`` equals the catch-up step count ``s - b``
+    token for token.  A sentinel reflected size ``M + 1`` — the mirror
+    of the always-available empty prefix (bucket 0, pure decode) —
+    rides along so the DP may leave short prompts to full decode when
+    a dedicated short bucket is not worth its specialization; since
+    the DP always keeps its largest size as a bucket, every candidate
+    set carries the sentinel and its cost cancels.  The result may
+    therefore be *empty* (serve everything through decode); it never
+    contains 0 itself."""
+    counts = _coerce_counts(hist)
+    if not counts:
+        raise ValueError("empty histogram: no recorded prompt lengths to "
+                         "solve a seq-bucket set from")
+    m = max(counts)
+    reflected = {m + 1 - s: c for s, c in counts.items()}
+    reflected[m + 1] = reflected.get(m + 1, 0) + 1      # bucket-0 sentinel
+    rb = solve_buckets(reflected, max_buckets=max_buckets + 1,
+                       spec_cost=spec_cost)
+    return sorted(m + 1 - b for b in rb if b != m + 1)
 
 
 # ---------------------------------------------------------------------------

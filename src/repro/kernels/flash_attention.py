@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+from repro.kernels.pltpu_compat import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -80,14 +81,29 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "bq", "bkv", "interpret"))
 def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            *, causal: bool = True, window: int = 0,
                            bq: int = 128, bkv: int = 128,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = None) -> jnp.ndarray:
     """q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0.
-    S must be divisible by bq and bkv (pad upstream if not)."""
+    S must be divisible by bq and bkv (pad upstream if not).
+
+    ``interpret=None`` (default) resolves platform-aware: compiled on
+    TPU, interpreter elsewhere (``pltpu_compat.resolve_interpret``) —
+    resolved *here*, outside the jit, because the backend query is a
+    Python-side decision the trace must not capture.
+    """
+    return _flash_attention_jit(q, k, v, causal=causal, window=window,
+                                bq=bq, bkv=bkv,
+                                interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bkv", "interpret"))
+def _flash_attention_jit(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         *, causal: bool, window: int,
+                         bq: int, bkv: int,
+                         interpret: bool) -> jnp.ndarray:
     b, hq, s, d = q.shape
     _, hkv, sk, _ = k.shape
     assert s == sk and hq % hkv == 0, (q.shape, k.shape)

@@ -21,6 +21,7 @@ from repro.core.epilogue import EpilogueSpec, IDENTITY
 from repro.core.layout import kernel_to_kcrs_ck, to_nchwc, from_nchwc
 from repro.core.schedule import ConvSchedule
 from repro.kernels.conv2d_nchwc import conv2d_nchwc_pallas
+from repro.kernels.matmul_blocked import MatmulSchedule, matmul_padded
 
 
 def _pad_hw(pad) -> tuple:
@@ -396,3 +397,38 @@ def conv2d(x_nchw: jnp.ndarray, w_kcrs: jnp.ndarray, *, stride: int = 1,
     ob = conv2d_blocked(xb, wb, stride=stride, pad=pad, schedule=schedule,
                         use_pallas=use_pallas, interpret=interpret)
     return from_nchwc(ob)
+
+
+# ---------------------------------------------------------------------------
+# LM-side fused matmul tails: the dense->softmax and attention-score
+# instantiations of the blocked-GEMM template.  Both route through the one
+# shared epilogue body (core.epilogue.apply_matmul_epilogue) applied while
+# the logits block is accumulator-resident, so the probabilities never
+# round-trip through HBM as raw logits.
+# ---------------------------------------------------------------------------
+
+def dense_softmax(x: jnp.ndarray, w: jnp.ndarray, *,
+                  schedule: MatmulSchedule | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """``softmax(x @ w, axis=-1)`` with the row-softmax fused into the GEMM
+    epilogue — the LM-head / router instantiation.  Arbitrary (M, K, N):
+    padding is handled by ``matmul_padded`` (padded vocab columns are
+    masked out of the exp-sum via ``n_valid``)."""
+    return matmul_padded(x, w, schedule=schedule or MatmulSchedule(),
+                         epilogue=EpilogueSpec(softmax=True),
+                         interpret=interpret)
+
+
+def attention_probs(q: jnp.ndarray, k: jnp.ndarray, *,
+                    causal: bool = True, scale: float | None = None,
+                    schedule: MatmulSchedule | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """One head's attention probabilities ``softmax(mask(q @ k.T * scale))``
+    with the whole ``scale -> mask -> softmax`` tail fused into the GEMM
+    epilogue.  ``q``/``k`` are (S, D); vmap over batch/head axes upstream.
+    ``scale`` defaults to ``1/sqrt(D)``."""
+    s, d = q.shape
+    spec = EpilogueSpec(scale=scale if scale is not None else d ** -0.5,
+                        mask="causal" if causal else "none", softmax=True)
+    return matmul_padded(q, k.T, schedule=schedule or MatmulSchedule(),
+                         epilogue=spec, interpret=interpret)

@@ -4,7 +4,31 @@ jax >= 0.4.34 renamed ``pltpu.TPUCompilerParams`` to
 ``pltpu.CompilerParams``; every kernel imports the resolved class from
 here so the next rename is a one-line fix.
 """
+from typing import Optional
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
+
+# backends with a compiled Pallas lowering for these kernels; anything
+# else (cpu, the gpu triton path we don't target) runs the interpreter
+_COMPILED_PALLAS_BACKENDS = ("tpu",)
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel's ``interpret`` argument platform-aware.
+
+    ``None`` (the default every kernel should expose) means *interpret
+    only when no compiled backend supports the kernel*: on TPU the Pallas
+    kernel compiles natively, everywhere else the interpreter is the only
+    way to run it.  Passing an explicit bool always wins — tests force
+    ``interpret=True`` for determinism, and a TPU user can force the
+    interpreter to debug a kernel.
+
+    Must be called *outside* ``jax.jit`` (it queries the backend).
+    """
+    if interpret is None:
+        return jax.default_backend() not in _COMPILED_PALLAS_BACKENDS
+    return bool(interpret)

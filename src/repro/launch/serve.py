@@ -5,11 +5,13 @@ Greedy-decodes a batch of synthetic prompts with a reduced config on CPU;
 at production scale the same prefill/decode_step functions are what the
 dry-run lowers onto the 256/512-chip meshes.
 
-``--artifact <dir>`` instead serves a CNN from a saved
-``InferenceSession`` artifact: the fresh process goes load -> predict with
-zero schedule search and zero weight transformation — the fast-cold-start
-path (build the artifact with ``examples/serve_planned_cnn.py`` or
-``engine.compile(...).save(dir)``).
+``--artifact <dir>`` instead serves from a saved artifact with zero
+schedule search and zero weight transformation — the fast-cold-start
+path.  The manifest routes the workload family: CNN ``InferenceSession``
+artifacts go load -> predict through the dynamic-batching driver, LM
+artifacts (manifest ``lm`` section, built with
+``engine.compile(<LM config>, ...).save(dir)``) go load -> prewarm ->
+``submit_stream`` with seq-bucketed prefill and streamed greedy decode.
 
 Multi-core serving: ``--devices D`` exposes D host cores as JAX devices
 *before* the backend initializes (``launch.cpu.configure_cpu_devices`` —
@@ -221,6 +223,108 @@ def serve_artifact(path: str, n_requests: int, *, max_batch: int = 8,
     return out
 
 
+def serve_lm_artifact(path: str, n_requests: int, *, gen: int = 8,
+                      max_queue: int = 64, deadline_ms: float = None,
+                      retry_budget: int = 2, backoff_ms: float = 10.0,
+                      watchdog_ms: float = None, show_health: bool = False,
+                      priority_default: str = "standard"):
+    """Cold-start LM serving: load the seq-bucketed ``LMSession``
+    artifact, prewarm every prefill bucket + the decode program, then
+    stream ``n_requests`` greedy generations through ``submit_stream`` —
+    each prompt prefills the largest bucket <= its length, catches up
+    through decode, and its tokens arrive on a :class:`TokenStream` as
+    the worker produces them.  The whole run is zero schedule searches
+    (asserted), mirroring the CNN cold-start path."""
+    apply_serving_env()
+    from repro.core.local_search import search_calls
+    from repro.engine import (AsyncServer, DynamicBatchPolicy, LMSession,
+                              QueueFullError, RetryPolicy)
+
+    if n_requests < 1:
+        raise ValueError(f"--requests must be >= 1, got {n_requests}")
+    n_searches = search_calls()
+    t0 = time.perf_counter()
+    sess = LMSession.load(path)
+    t_load = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sess.prewarm()                      # compile every bucket + decode once
+    t_warm = time.perf_counter() - t0
+    max_prompt = sess.max_len - gen + 1
+    if max_prompt < 1:
+        raise ValueError(f"--gen {gen} does not fit the artifact's "
+                         f"max_len={sess.max_len}; lower it")
+    rng = np.random.default_rng(0)
+    lens = rng.integers(1, max_prompt + 1, size=n_requests)
+    prompts = [jnp.asarray(rng.integers(0, sess.cfg.vocab,
+                                        size=(sess.batch, int(n))),
+                           jnp.int32) for n in lens]
+    # streams execute alone, so the packing knobs are moot — keep the
+    # queue/deadline/retry/watchdog machinery identical to CNN serving
+    server = AsyncServer(sess, DynamicBatchPolicy(max_batch=1,
+                                                  max_wait_ms=1.0),
+                         max_queue=max_queue,
+                         retry=RetryPolicy(budget=retry_budget,
+                                           backoff_ms=backoff_ms),
+                         watchdog_ms=watchdog_ms,
+                         priority_default=priority_default)
+    t_serve0 = time.perf_counter()
+    streams = []
+    n_retries = 0
+    n_tokens = 0
+    t_first = None
+    try:
+        for x in prompts:
+            while True:
+                try:
+                    streams.append(server.submit_stream(
+                        x, gen, deadline_ms=deadline_ms))
+                    break
+                except QueueFullError:
+                    n_retries += 1
+                    for _ in streams[-1]:
+                        pass
+        for s in streams:
+            for tok in s:                 # tokens arrive per decode step
+                if t_first is None:
+                    t_first = time.perf_counter() - t_serve0
+                n_tokens += tok.shape[-1] if hasattr(tok, "shape") else 1
+        if show_health:
+            import json as _json
+            print("health:", _json.dumps(server.health(), indent=2))
+    finally:
+        server.close(drain=True)
+    t_serve = time.perf_counter() - t_serve0
+    assert search_calls() == n_searches, \
+        "LM artifact serving must not re-run any schedule search"
+    st = server.stats
+    print(f"artifact={path} model={sess.model_name or sess.cfg.name} "
+          f"family={sess.cfg.family} load={t_load * 1e3:.0f} ms "
+          f"prewarm={t_warm * 1e3:.0f} ms (zero search) "
+          f"seq_buckets={sess.seq_buckets} max_len={sess.max_len} "
+          f"batch={sess.batch}")
+    print(f"streamed {st.n_completed}/{n_requests} generations "
+          f"({n_tokens} decode steps, first token "
+          f"{(t_first or 0) * 1e3:.0f} ms, {n_retries} backpressure "
+          f"waits): {n_tokens / max(t_serve, 1e-9):.1f} tok/s  "
+          f"p50={st.percentile_ms(50):.1f} "
+          f"p99={st.percentile_ms(99):.1f} ms/generation")
+    return st.n_completed
+
+
+def _artifact_is_lm(path: str) -> bool:
+    """Peek the manifest to route ``--artifact`` without deserializing
+    anything: LM artifacts carry a populated ``lm`` section."""
+    import json
+    from pathlib import Path
+    manifest = Path(path) / "manifest.json"
+    if not manifest.is_file():
+        return False
+    try:
+        return bool(json.loads(manifest.read_text()).get("lm"))
+    except (OSError, ValueError):
+        return False
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=sorted(ARCHS))
@@ -228,9 +332,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--artifact", default=None,
-                    help="serve a saved CNN InferenceSession artifact "
-                         "through the async dynamic-batching driver "
-                         "(zero search) instead of the LM loop")
+                    help="serve a saved artifact through the async "
+                         "driver (zero search): CNN InferenceSession "
+                         "artifacts get dynamic batching, LM artifacts "
+                         "(manifest 'lm' section) get seq-bucketed "
+                         "prefill + streamed decode; routed "
+                         "automatically from the manifest")
     ap.add_argument("--requests", type=int, default=20,
                     help="request count for --artifact serving")
     ap.add_argument("--max-batch", type=int, default=8,
@@ -294,6 +401,16 @@ def main(argv=None):
                          "serving the other precision")
     args = ap.parse_args(argv)
 
+    if args.artifact and _artifact_is_lm(args.artifact):
+        return serve_lm_artifact(args.artifact, args.requests,
+                                 gen=args.gen,
+                                 max_queue=args.max_queue,
+                                 deadline_ms=args.deadline_ms,
+                                 retry_budget=args.retry_budget,
+                                 backoff_ms=args.backoff_ms,
+                                 watchdog_ms=args.watchdog_ms,
+                                 show_health=args.health,
+                                 priority_default=args.priority_default)
     if args.artifact:
         return serve_artifact(args.artifact, args.requests,
                               max_batch=args.max_batch,

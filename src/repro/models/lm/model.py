@@ -483,12 +483,9 @@ def prefill(params, cfg: LMConfig, tokens, *, max_len: int,
                     cache["layers"][i]["v"] = jnp.roll(
                         vt[:, :, -w:], roll, axis=2).astype(_dt(cfg))
                 else:
-                    cache["layers"][i]["k"] = _write_kv(
-                        cache["layers"][i]["k"], cache["layers"][i]["v"],
-                        kv, 0)[0]
-                    cache["layers"][i]["v"] = _write_kv(
-                        cache["layers"][i]["k"], cache["layers"][i]["v"],
-                        kv, 0)[1]
+                    cache["layers"][i]["k"], cache["layers"][i]["v"] = \
+                        _write_kv(cache["layers"][i]["k"],
+                                  cache["layers"][i]["v"], kv, 0)
             else:
                 out, (lru, conv) = rglru.recurrent_block(h, lp["rec"], cfg)
                 cache["layers"][i]["lru"] = lru

@@ -1,0 +1,126 @@
+"""ScheduleDatabase.merge conflict semantics: best-measured-wins.
+
+The fleet shares one schedule database across tenants by merging each
+loaded artifact's db (``FleetServer.add_model``).  The merge contract:
+
+* a key only the incoming db has is added verbatim;
+* a *measured* incoming entry replaces the existing one iff the existing
+  entry is analytical, or measured with a strictly worse best cost;
+* an *analytical* incoming entry never displaces anything;
+* ties keep the incumbent, so merging the same db twice is a no-op —
+  and an existing tenant's already-bound plans never regress.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.local_search import (LocalSearchResult, RankedSchedule,
+                                     ScheduleDatabase, _wl_key)
+from repro.core.schedule import ConvSchedule, ConvWorkload
+
+WL = ConvWorkload(batch=1, in_channels=64, out_channels=64, height=28,
+                  width=28, kh=3, kw=3, stride=1, pad=1)
+WL2 = dataclasses.replace(WL, out_channels=128)
+
+FAST = ConvSchedule(ic_bn=32, oc_bn=32, ow_bn=28)
+SLOW = ConvSchedule(ic_bn=16, oc_bn=16, ow_bn=28)
+
+
+def _res(wl, sched, cost_s, *, measured=True):
+    return LocalSearchResult(workload=wl,
+                             ranked=[RankedSchedule(sched, cost_s)],
+                             measured=measured, search_budget=(4, 2))
+
+
+def _db(*entries):
+    db = ScheduleDatabase()
+    for wl, res in entries:
+        db.put(wl, res)
+    return db
+
+
+def test_merge_adds_missing_keys():
+    db = _db((WL, _res(WL, FAST, 1.0)))
+    other = _db((WL2, _res(WL2, SLOW, 2.0)))
+    assert db.merge(other) == 1
+    assert db._mem[_wl_key(WL2)].best == SLOW
+    assert db._mem[_wl_key(WL)].best == FAST
+
+
+def test_merge_faster_measured_wins():
+    db = _db((WL, _res(WL, SLOW, 2.0)))
+    other = _db((WL, _res(WL, FAST, 1.0)))
+    assert db.merge(other) == 1
+    assert db._mem[_wl_key(WL)].best == FAST
+    assert db._mem[_wl_key(WL)].ranked[0].cost_s == 1.0
+
+
+def test_merge_slower_measured_cannot_regress():
+    db = _db((WL, _res(WL, FAST, 1.0)))
+    other = _db((WL, _res(WL, SLOW, 2.0)))
+    assert db.merge(other) == 0
+    assert db._mem[_wl_key(WL)].best == FAST
+
+
+def test_merge_measured_displaces_analytical():
+    db = _db((WL, _res(WL, FAST, 0.5, measured=False)))
+    other = _db((WL, _res(WL, SLOW, 2.0)))        # measured, worse cost
+    assert db.merge(other) == 1
+    assert db._mem[_wl_key(WL)].measured is True
+    assert db._mem[_wl_key(WL)].best == SLOW
+
+
+def test_merge_analytical_never_displaces():
+    # not even an analytical entry with a (meaningless) cheaper cost —
+    # analytical and measured costs live on different clocks
+    db = _db((WL, _res(WL, FAST, 1.0)))
+    other = _db((WL, _res(WL, SLOW, 0.1, measured=False)))
+    assert db.merge(other) == 0
+    assert db._mem[_wl_key(WL)].best == FAST
+
+    db2 = _db((WL, _res(WL, FAST, 1.0, measured=False)))
+    other2 = _db((WL, _res(WL, SLOW, 0.1, measured=False)))
+    assert db2.merge(other2) == 0
+    assert db2._mem[_wl_key(WL)].best == FAST
+
+
+def test_merge_idempotent_on_ties():
+    db = _db((WL, _res(WL, FAST, 1.0)))
+    other = _db((WL, _res(WL, FAST, 1.0)), (WL2, _res(WL2, SLOW, 2.0)))
+    assert db.merge(other) == 1                   # only the new key
+    assert db.merge(other) == 0                   # second merge is a no-op
+    assert db._mem[_wl_key(WL)].best == FAST
+
+
+def test_fleet_add_model_never_regresses_existing_tenant(monkeypatch):
+    """An incoming tenant whose artifact carries a *slower* measured entry
+    for a workload the fleet already tuned must neither change the shared
+    db's winner nor perturb the existing tenant's results."""
+    from repro.engine.fleet import FleetServer
+    from test_fleet import (FakeClock, _fresh_session, _pump, _x)
+
+    clock = FakeClock()
+    fleet = FleetServer(clock=clock, autostart=False)
+    s1 = _fresh_session(units=4)
+    fleet.add_model("a", s1)
+    fleet.db.put(WL, _res(WL, FAST, 1.0))
+
+    rng = np.random.default_rng(0)
+    x = _x(rng, 2)
+    clock.advance_ms(50.0)
+    f_before = fleet.submit("a", x)
+    _pump(fleet, clock, [f_before])
+    before = np.asarray(f_before.result())
+
+    s2 = _fresh_session(units=6)
+    s2.db.put(WL, _res(WL, SLOW, 2.0))            # conflicting, slower
+    fleet.add_model("b", s2)
+    assert fleet.db._mem[_wl_key(WL)].best == FAST
+    assert s2.db is fleet.db                      # tenant now shares the db
+
+    f_after = fleet.submit("a", x)
+    _pump(fleet, clock, [f_after])
+    np.testing.assert_array_equal(before, np.asarray(f_after.result()))
+    fleet.close()

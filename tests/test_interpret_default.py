@@ -1,0 +1,52 @@
+"""Platform-aware Pallas interpret default (regression).
+
+``flash_attention_pallas`` (and the blocked matmul) used to hardcode
+``interpret=True`` — silently running the interpreter even on a TPU host.
+The default is now ``interpret=None``: resolved per-platform (compiled on
+backends with a Pallas lowering, interpreter elsewhere), with an explicit
+bool always winning.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import pltpu_compat
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pltpu_compat import resolve_interpret
+from repro.models.lm.layers import flash_attention_xla
+
+
+def _fake_backend(monkeypatch, name):
+    monkeypatch.setattr(pltpu_compat.jax, "default_backend", lambda: name)
+
+
+def test_default_interprets_off_tpu(monkeypatch):
+    _fake_backend(monkeypatch, "cpu")
+    assert resolve_interpret(None) is True
+    _fake_backend(monkeypatch, "gpu")
+    assert resolve_interpret(None) is True
+
+
+def test_default_compiles_on_tpu(monkeypatch):
+    _fake_backend(monkeypatch, "tpu")
+    assert resolve_interpret(None) is False
+
+
+@pytest.mark.parametrize("backend", ["cpu", "tpu"])
+def test_explicit_override_always_wins(monkeypatch, backend):
+    _fake_backend(monkeypatch, backend)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_flash_attention_default_runs_on_host():
+    """The public entry point with no interpret argument must work on the
+    host backend (the original bug made this depend on a hardcoded True)."""
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (1, 2, 128, 16))
+               for i in range(3))
+    out = flash_attention_pallas(q, k, v, causal=True, bq=64, bkv=64)
+    ref = flash_attention_xla(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,206 @@
+"""Streaming decode through AsyncServer (ISSUE 10 tentpole c).
+
+``submit_stream`` rides the existing queue/deadline/shedding machinery:
+a stream request is admitted like any other, executes alone (generation
+holds the program for many steps), pushes each greedy token into its
+``TokenStream`` as decode produces it, and the iterated tokens are bit
+identical to a plain ``LMSession.generate`` call.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.engine import (AsyncServer, DeadlineExceededError,
+                          DynamicBatchPolicy, ServerClosedError,
+                          ServingError, StreamRequest, TokenStream,
+                          compile_lm)
+from repro.engine.serving import RequestTooLargeError
+
+CFG = reduced(ARCHS["qwen2-1.5b"])
+
+
+@pytest.fixture(scope="module")
+def lm():
+    sess = compile_lm(CFG, max_len=32, seq_buckets=[8, 16], seed=0)
+    sess.prewarm()
+    return sess
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _manual(lm, **kw):
+    clock = FakeClock()
+    policy = kw.pop("policy", DynamicBatchPolicy(max_batch=4,
+                                                 max_wait_ms=10.0))
+    srv = AsyncServer(lm, policy, clock=clock, autostart=False, **kw)
+    return srv, clock
+
+
+def _prompt(n, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab, size=(1, n)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: streamed == direct generate
+# ---------------------------------------------------------------------------
+
+def test_stream_tokens_bit_identical_to_generate(lm):
+    toks = _prompt(11)
+    want = lm.generate(toks, 6)
+    srv, _ = _manual(lm)
+    stream = srv.submit_stream(toks, 6)
+    assert srv.step()
+    got_steps = [np.asarray(t) for t in stream]
+    assert len(got_steps) == 6
+    np.testing.assert_array_equal(np.stack(got_steps, axis=1), want)
+    # result() resolves to the full (batch, max_new) array as well
+    np.testing.assert_array_equal(np.asarray(stream.result(timeout=5)),
+                                  want)
+    srv.close()
+
+
+def test_stream_arrives_incrementally(lm, monkeypatch):
+    """Tokens are observable before the request finishes: the on_token
+    push happens inside generate, not after the future resolves."""
+    toks = _prompt(9)
+    srv, _ = _manual(lm)
+    seen_before_done = []
+    orig = TokenStream.push
+
+    def spy(self, step, tokens):
+        seen_before_done.append(not self.future.done())
+        orig(self, step, tokens)
+
+    monkeypatch.setattr(TokenStream, "push", spy)
+    stream = srv.submit_stream(toks, 4)
+    assert srv.step()
+    assert seen_before_done == [True] * 4
+    assert len(list(stream)) == 4
+    srv.close()
+
+
+def test_concurrent_streams_serialize_and_match(lm):
+    """Several streams queued at once each come back exactly equal to the
+    direct generate of their own prompt (streams execute alone)."""
+    prompts = [_prompt(n, seed=n) for n in (5, 9, 17)]
+    want = [lm.generate(p, 4) for p in prompts]
+    srv, _ = _manual(lm, max_queue=8)
+    streams = [srv.submit_stream(p, 4) for p in prompts]
+    for _ in prompts:
+        assert srv.step()           # one stream per batch: executes alone
+    assert not srv.step()
+    for s, w in zip(streams, want):
+        np.testing.assert_array_equal(np.asarray(s.result(timeout=5)), w)
+    st = srv.stats
+    assert st.n_completed == 3
+    assert st.batch_hist.max_size == 1
+    srv.close()
+
+
+def test_threaded_autostart_stream(lm):
+    """End-to-end with real worker threads: iterate the stream from the
+    client thread while the worker generates."""
+    toks = _prompt(13)
+    want = lm.generate(toks, 5)
+    with AsyncServer(lm, DynamicBatchPolicy(max_batch=2,
+                                            max_wait_ms=2.0)) as srv:
+        stream = srv.submit_stream(toks, 5)
+        got = [np.asarray(t) for t in stream]
+    np.testing.assert_array_equal(np.stack(got, axis=1), want)
+
+
+# ---------------------------------------------------------------------------
+# admission control + typed failures
+# ---------------------------------------------------------------------------
+
+def test_submit_on_lm_server_raises(lm):
+    srv, _ = _manual(lm)
+    with pytest.raises(ServingError, match="submit_stream"):
+        srv.submit(np.zeros((1, 8), np.int32))
+    srv.close()
+
+
+def test_stream_validation(lm):
+    srv, _ = _manual(lm)
+    with pytest.raises(RequestTooLargeError):
+        srv.submit_stream(_prompt(30), 8)        # 30 + 8 - 1 > 32
+    with pytest.raises(ValueError):
+        srv.submit_stream(_prompt(5)[0], 2)      # 1-D tokens
+    with pytest.raises(ValueError):
+        srv.submit_stream(_prompt(5), 0)         # no tokens requested
+    srv.close()
+
+
+def test_stream_deadline_expires_in_queue(lm):
+    srv, clock = _manual(lm)
+    stream = srv.submit_stream(_prompt(6), 3, deadline_ms=5.0)
+    clock.advance_ms(50.0)
+    srv.step()
+    with pytest.raises(DeadlineExceededError):
+        list(stream)
+    with pytest.raises(DeadlineExceededError):
+        stream.result(timeout=5)
+    srv.close()
+
+
+def test_stream_after_close_raises(lm):
+    srv, _ = _manual(lm)
+    srv.close()
+    with pytest.raises(ServerClosedError):
+        srv.submit_stream(_prompt(6), 2)
+
+
+def test_traffic_recorded_once_per_stream(lm):
+    srv, _ = _manual(lm)
+    before = lm.traffic.counts()
+    srv.submit_stream(_prompt(7), 2)
+    assert srv.step()
+    after = lm.traffic.counts()
+    assert after.get(7, 0) == before.get(7, 0) + 1
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# TokenStream unit behavior
+# ---------------------------------------------------------------------------
+
+def test_token_stream_dedups_replayed_steps():
+    import concurrent.futures as cf
+    fut = cf.Future()
+    ts = TokenStream(fut)
+    ts.push(0, "a")
+    ts.push(0, "a")          # watchdog replay of the same step: dropped
+    ts.push(1, "b")
+    ts.push(3, "skip")       # out-of-order step: dropped
+    fut.set_result("done")
+    assert list(ts) == ["a", "b"]
+    assert list(ts) == []    # exhausted iterator stays terminated
+
+
+def test_token_stream_raises_future_exception():
+    import concurrent.futures as cf
+    fut = cf.Future()
+    ts = TokenStream(fut)
+    ts.push(0, "a")
+    fut.set_exception(ServingError("boom"))
+    it = iter(ts)
+    assert next(it) == "a"
+    with pytest.raises(ServingError, match="boom"):
+        next(it)
+
+
+def test_stream_request_is_request():
+    from repro.engine.serving import Request
+    assert issubclass(StreamRequest, Request)

@@ -1,0 +1,177 @@
+"""LMSession: seq-bucketed prefill + decode catch-up + artifact round trip.
+
+The LM arm of the compile() front door (ISSUE 10): prompts prefill the
+largest seq bucket <= their length and catch up through the decode
+program, generation is greedy and deterministic, artifacts are v5
+directories with an ``lm`` manifest section, and load -> generate replays
+zero schedule searches.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.local_search import search_calls
+from repro.engine import LMSession, compile_lm
+from repro.engine import compile as compile_session
+from repro.engine.session import (ArtifactCorruptError, ArtifactError,
+                                  InferenceSession, _migrate_v4_to_v5)
+from repro.engine.traffic import (expected_catchup_tokens,
+                                  solve_seq_buckets)
+from repro.models.lm import decode_step, init_params, prefill
+
+CFG = reduced(ARCHS["qwen2-1.5b"])
+KEY = jax.random.PRNGKey(0)
+
+
+def _toks(batch, n, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, n),
+                              0, CFG.vocab)
+
+
+def _oracle_generate(cfg, params, toks, max_new, max_len):
+    """Plain unbucketed prefill + decode_step loop — the reference the
+    bucketed/catch-up/streamed paths must match bit for bit."""
+    prompt = toks.shape[1]
+    cache, lg = prefill(params, cfg, toks, max_len=max_len)
+    out = []
+    for t in range(max_new):
+        nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+        out.append(np.asarray(nxt))
+        if t + 1 < max_new:
+            lg, cache = decode_step(params, cfg, nxt[:, None], cache,
+                                    jnp.int32(prompt + t))
+    return np.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# compile() dispatch
+# ---------------------------------------------------------------------------
+
+def test_compile_dispatches_lm_config():
+    sess = compile_session(CFG, (1, 32))
+    assert isinstance(sess, LMSession)
+    assert sess.max_len == 32 and sess.batch == 1
+    assert sess.seq_buckets           # default halving ladder
+
+
+def test_compile_dispatches_arch_name():
+    sess = compile_session("mamba2-130m", {"tokens": (1, 8)})
+    assert isinstance(sess, LMSession)
+    assert sess.cfg.family == "ssm"
+
+
+def test_compile_lm_rejects_bad_spec():
+    with pytest.raises(ValueError, match="max_len"):
+        compile_session(CFG, (1, 3, 8, 8))
+    with pytest.raises(ValueError, match="unknown LM architecture"):
+        compile_lm("not-an-arch", max_len=8)
+
+
+def test_bucket_for_and_validation():
+    sess = compile_lm(CFG, max_len=32, seq_buckets=[8, 16, 32])
+    assert sess.bucket_for(7) is None
+    assert sess.bucket_for(8) == 8
+    assert sess.bucket_for(31) == 16
+    assert sess.bucket_for(32) == 32
+    with pytest.raises(ValueError, match="seq_buckets"):
+        compile_lm(CFG, max_len=16, seq_buckets=[32])
+
+
+def test_auto_seq_buckets_from_histogram():
+    hist = {4: 50, 16: 30, 17: 5, 32: 20}
+    sess = compile_lm(CFG, max_len=32, seq_buckets="auto",
+                      prompt_hist=hist, max_seq_buckets=3)
+    assert sess.seq_buckets == solve_seq_buckets(hist, max_buckets=3)
+    assert expected_catchup_tokens(hist, sess.seq_buckets) <= \
+        expected_catchup_tokens(hist, [32])
+
+
+# ---------------------------------------------------------------------------
+# generation parity: bucketed / catch-up / pure-decode vs the plain loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prompt_len", [5, 8, 13, 16])
+def test_generate_matches_plain_loop(prompt_len):
+    """prompt below / at / between / at-top of buckets {8, 16}: the
+    bucketed prefill + decode catch-up path is bit-identical to the
+    unbucketed prefill loop."""
+    sess = compile_lm(CFG, max_len=32, seq_buckets=[8, 16], seed=0)
+    toks = _toks(1, prompt_len)
+    got = sess.generate(toks, 6)
+    params = init_params(CFG, KEY)
+    want = _oracle_generate(CFG, params, toks, 6, 32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_generate_validates():
+    sess = compile_lm(CFG, max_len=16, seq_buckets=[8])
+    with pytest.raises(ValueError, match="overflow max_len"):
+        sess.generate(_toks(1, 10), 8)
+    with pytest.raises(ValueError, match="tokens must be"):
+        sess.generate(_toks(2, 4), 2)          # wrong batch
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sess.generate(_toks(1, 4), 0)
+
+
+def test_on_token_streams_exact_values():
+    sess = compile_lm(CFG, max_len=32, seq_buckets=[8])
+    toks = _toks(1, 9)
+    seen = []
+    got = sess.generate(toks, 5,
+                        on_token=lambda s, t: seen.append((s, t.copy())))
+    assert [s for s, _ in seen] == list(range(5))
+    np.testing.assert_array_equal(np.stack([t for _, t in seen], 1), got)
+
+
+# ---------------------------------------------------------------------------
+# artifact round trip
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip_zero_search(tmp_path):
+    sess = compile_lm(CFG, max_len=32, seq_buckets=[8, 16], seed=0)
+    toks = _toks(1, 11)
+    want = sess.generate(toks, 6)
+    path = sess.save(tmp_path / "ARTIFACT_lm")
+    n = search_calls()
+    loaded = LMSession.load(path)
+    got = loaded.generate(toks, 6)
+    assert search_calls() == n                # zero schedule searches
+    np.testing.assert_array_equal(got, want)
+    assert loaded.seq_buckets == [8, 16]
+    assert loaded.max_len == 32 and loaded.batch == 1
+    assert loaded.cfg == CFG
+
+
+def test_load_rejects_corrupt_weights(tmp_path):
+    sess = compile_lm(CFG, max_len=16, seq_buckets=[8])
+    path = sess.save(tmp_path / "ARTIFACT_lm")
+    blob = next((path / "weights").rglob("leaf_*.npy"))
+    blob.write_bytes(b"garbage")
+    with pytest.raises(ArtifactCorruptError):
+        LMSession.load(path)
+
+
+def test_load_dispatch_redirects(tmp_path):
+    lm_path = compile_lm(CFG, max_len=16,
+                         seq_buckets=[8]).save(tmp_path / "ARTIFACT_lm")
+    with pytest.raises(ArtifactError, match="LM artifact"):
+        InferenceSession.load(lm_path)
+    # a CNN-shaped manifest (lm: None) must be refused by LMSession.load
+    fake = tmp_path / "ARTIFACT_cnn"
+    fake.mkdir()
+    manifest = json.loads((lm_path / "manifest.json").read_text())
+    manifest["lm"] = None
+    (fake / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ArtifactError, match="CNN artifact"):
+        LMSession.load(fake)
+
+
+def test_v4_manifest_migrates_to_v5():
+    manifest = {"version": 4, "quantized": None}
+    out = _migrate_v4_to_v5(dict(manifest), Path("."))
+    assert out["version"] == 5 and out["lm"] is None

@@ -1,0 +1,44 @@
+"""Request.rank is a required, typed field (regression).
+
+EDF batch formation used to order by ``getattr(r, "rank", 1)`` — a
+malformed request record (missing or mistyped rank) silently sorted as
+normal priority instead of failing.  ``rank`` is now a required kw-only
+int on the request record and a malformed record fails loudly at
+construction time.
+"""
+from concurrent.futures import Future
+
+import jax.numpy as jnp
+import pytest
+
+from repro.engine.serving import DynamicBatchPolicy, Request
+from repro.engine.traffic import priority_rank
+
+
+def _req(**kw):
+    base = dict(x=jnp.zeros((1, 4)), rows=1, future=Future(), t_submit=0.0,
+                rank=priority_rank("standard"))
+    base.update(kw)
+    return Request(**base)
+
+
+def test_rank_is_required():
+    with pytest.raises(TypeError):
+        Request(x=jnp.zeros((1, 4)), rows=1, future=Future(), t_submit=0.0)
+
+
+@pytest.mark.parametrize("bad", ["high", 1.5, None, True])
+def test_malformed_rank_fails_loudly(bad):
+    with pytest.raises(TypeError, match="rank"):
+        _req(rank=bad)
+
+
+def test_edf_orders_by_typed_rank():
+    """Same deadline: the lower (more urgent) rank goes first — straight
+    off the typed field, no getattr fallback."""
+    urgent = _req(t_submit=1.0, deadline=10.0,
+                  priority="interactive", rank=priority_rank("interactive"))
+    normal = _req(t_submit=0.0, deadline=10.0)
+    policy = DynamicBatchPolicy(order="edf")
+    picked = policy.select([normal, urgent], 1, 2.0)
+    assert picked == [1]

@@ -273,3 +273,70 @@ def test_frozen_session_release_refused(mini_session, tmp_path):
     frozen = InferenceSession.load(path)
     with pytest.raises(RuntimeError, match="frozen"):
         frozen.release(1)
+
+
+# ---------------------------------------------------------------------------
+# sequence-length buckets (LM prefill): reflected DP against brute force
+# ---------------------------------------------------------------------------
+
+def _seq_cost(hist, buckets, lam):
+    from repro.engine.traffic import expected_catchup_tokens
+    return expected_catchup_tokens(hist, buckets) + lam * len(buckets)
+
+
+def _brute_seq(hist, max_buckets, lam):
+    """Exhaustive minimum over every subset of observed lengths
+    (including the empty set: serve everything through decode)."""
+    sizes = sorted(hist)
+    best, best_cost = [], _seq_cost(hist, [], lam)
+    for k in range(1, max_buckets + 1):
+        for combo in itertools.combinations(sizes, k):
+            c = _seq_cost(hist, combo, lam)
+            if c < best_cost:
+                best, best_cost = list(combo), c
+    return best, best_cost
+
+
+@pytest.mark.parametrize("hist", [
+    {8: 10, 12: 6, 32: 3, 100: 1},
+    {3: 50},
+    {1: 5, 2: 5, 3: 5, 64: 1},
+    {16: 1, 17: 1, 18: 1, 19: 1, 500: 9},
+])
+@pytest.mark.parametrize("max_buckets", [1, 2, 3])
+def test_seq_buckets_match_brute_force(hist, max_buckets):
+    from repro.engine.traffic import solve_seq_buckets
+    lam = 4.0
+    got = solve_seq_buckets(hist, max_buckets=max_buckets, spec_cost=lam)
+    _, want_cost = _brute_seq(hist, max_buckets, lam)
+    assert len(got) <= max_buckets
+    assert _seq_cost(hist, got, lam) == want_cost, \
+        f"DP set {got} costs {_seq_cost(hist, got, lam)}, optimum is " \
+        f"{want_cost}"
+
+
+def test_seq_buckets_pure_decode_degenerate():
+    """When a specialization costs more than all the catch-up it saves,
+    the optimum is NO prefill buckets — everything decodes from step 0
+    (the sentinel in the reflected DP makes the empty set reachable)."""
+    from repro.engine.traffic import (expected_catchup_tokens,
+                                      solve_seq_buckets)
+    hist = {2: 1, 3: 1}
+    assert solve_seq_buckets(hist, max_buckets=4, spec_cost=100.0) == []
+    assert expected_catchup_tokens(hist, []) == 5      # 2 + 3 decode steps
+
+
+def test_catchup_accounting():
+    from repro.engine.traffic import expected_catchup_tokens
+    hist = {4: 2, 10: 1, 11: 3}
+    # bucket 4 serves the 4s exactly; 10/11 catch up from 4
+    assert expected_catchup_tokens(hist, [4]) == 0 + 6 + 3 * 7
+    # adding 10 leaves only the 11s one step behind
+    assert expected_catchup_tokens(hist, [4, 10]) == 3
+    assert expected_catchup_tokens(hist, [4, 10, 11]) == 0
+
+
+def test_seq_buckets_rejects_empty_hist():
+    from repro.engine.traffic import solve_seq_buckets
+    with pytest.raises(ValueError, match="empty"):
+        solve_seq_buckets({})
